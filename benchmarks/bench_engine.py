@@ -1,0 +1,61 @@
+"""Benchmark: the MapReduce engine end-to-end — schema comm cost vs naive
+replication, and wall time of the sharded execution on the local mesh.
+
+This is the paper's headline claim in executable form: the mapping schema
+moves far fewer bytes map->reduce than naive all-pairs replication, at
+identical outputs.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import naive_pairs, plan_a2a
+from repro.mapreduce import build_plan, pairwise_similarity
+
+
+def run(m: int = 96, d: int = 64, q: float = 1.0, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    w = rng.uniform(0.05, 0.33, m)
+    x = jnp.asarray(rng.normal(size=(m, d)).astype(np.float32))
+
+    rows = []
+    for name, schema in [
+        ("planner-auto", plan_a2a(w, q)),
+        ("naive-all-pairs", naive_pairs(w, q)),
+    ]:
+        schema.validate("a2a")
+        plan = build_plan(schema)
+        t0 = time.perf_counter()
+        sims, _, _ = pairwise_similarity(x, q=q, weights=w, schema=schema)
+        jax.block_until_ready(sims)
+        dt = time.perf_counter() - t0
+        rows.append(dict(
+            name=name, algo=schema.algorithm,
+            comm_cost=round(schema.communication_cost(), 2),
+            reducers=schema.num_reducers,
+            max_replication=int(schema.replication().max()),
+            gather_rows=int(plan.mask.sum()),
+            wall_ms=round(dt * 1e3, 1)))
+    base = rows[1]["comm_cost"]
+    for r in rows:
+        r["comm_vs_naive"] = round(r["comm_cost"] / base, 3)
+    return rows
+
+
+def main():
+    rows = run()
+    for r in rows:
+        print(f"{r['name']:16s} comm={r['comm_cost']:9.2f} "
+              f"({r['comm_vs_naive']:.3f}x naive) reducers={r['reducers']:5d} "
+              f"gather_rows={r['gather_rows']:6d} wall={r['wall_ms']:7.1f}ms "
+              f"[{r['algo']}]")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

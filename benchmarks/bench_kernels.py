@@ -1,0 +1,85 @@
+"""Benchmark: Pallas kernels (interpret mode) vs jnp oracles — correctness
+delta + CPU wall time (TPU perf comes from the dry-run roofline, not here).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / reps * 1e6  # us
+
+
+def run():
+    rows = []
+    rng = np.random.default_rng(0)
+
+    from repro.kernels.pairwise.pairwise import pairwise_gram
+    from repro.kernels.pairwise.ref import pairwise_gram_ref
+    x = jnp.asarray(rng.normal(size=(256, 128)).astype(np.float32))
+    got = pairwise_gram(x, x, bm=64, bn=64, bk=64, interpret=True)
+    ref = pairwise_gram_ref(x, x)
+    rows.append(dict(
+        name="pairwise_gram_256x128",
+        max_err=float(jnp.max(jnp.abs(got - ref))),
+        us_ref=_time(lambda a: pairwise_gram_ref(a, a), x),
+        us_kernel_interpret=_time(
+            lambda a: pairwise_gram(a, a, bm=64, bn=64, bk=64,
+                                    interpret=True), x),
+        flops=2 * 256 * 256 * 128))
+
+    from repro.kernels.flash.flash_attention import flash_attention
+    from repro.kernels.flash.ref import attention_ref
+    q = jnp.asarray(rng.normal(size=(256, 64)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(256, 64)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(256, 64)).astype(np.float32))
+    got = flash_attention(q, k, v, causal=True, interpret=True, bq=64, bk=64)
+    ref = attention_ref(q, k, v, causal=True)
+    rows.append(dict(
+        name="flash_attention_256x64",
+        max_err=float(jnp.max(jnp.abs(got - ref))),
+        us_ref=_time(lambda a, b, c: attention_ref(a, b, c, causal=True),
+                     q, k, v),
+        us_kernel_interpret=_time(
+            lambda a, b, c: flash_attention(a, b, c, causal=True,
+                                            interpret=True, bq=64, bk=64),
+            q, k, v),
+        flops=2 * 2 * 256 * 256 * 64))
+
+    from repro.kernels.ssd.ssd import ssd_scan
+    from repro.kernels.ssd.ref import ssd_scan_ref
+    xs = jnp.asarray(rng.normal(size=(256, 64)).astype(np.float32))
+    b = jnp.asarray(rng.normal(size=(256, 32)).astype(np.float32))
+    c = jnp.asarray(rng.normal(size=(256, 32)).astype(np.float32))
+    la = jnp.asarray(-np.abs(rng.normal(size=256)).astype(np.float32))
+    got = ssd_scan(xs, la, b, c, chunk=64, interpret=True)
+    ref = ssd_scan_ref(xs, la, b, c)
+    rows.append(dict(
+        name="ssd_scan_256x64x32",
+        max_err=float(jnp.max(jnp.abs(got - ref))),
+        us_ref=_time(lambda *a: ssd_scan_ref(*a), xs, la, b, c),
+        us_kernel_interpret=_time(
+            lambda *a: ssd_scan(*a, chunk=64, interpret=True), xs, la, b, c),
+        flops=2 * 256 * (64 * 32 * 3)))
+    return rows
+
+
+def main():
+    rows = run()
+    for r in rows:
+        print(f"{r['name']:26s} max_err={r['max_err']:.2e} "
+              f"ref={r['us_ref']:9.1f}us interp={r['us_kernel_interpret']:9.1f}us")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

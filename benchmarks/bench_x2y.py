@@ -1,0 +1,52 @@
+"""Benchmark: X2Y mapping schemas vs Theorems 25 (LB) and 26 (UB)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import plan_x2y, x2y_comm_lower_bound, x2y_comm_upper_bound
+
+
+def run(q: float = 1.0, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    cases = {
+        "balanced(30x30)": (rng.uniform(0.05, 0.45, 30),
+                            rng.uniform(0.05, 0.45, 30)),
+        "skew_join(200x8)": (rng.uniform(0.01, 0.1, 200),
+                             rng.uniform(0.2, 0.45, 8)),
+        "tiny_y(60x3)": (rng.uniform(0.05, 0.3, 60),
+                         rng.uniform(0.3, 0.5, 3)),
+        "uniform(50x20)": (np.full(50, 0.2), np.full(20, 0.25)),
+    }
+    rows = []
+    for name, (wx, wy) in cases.items():
+        s = plan_x2y(wx, wy, q)
+        s.validate("x2y", x_ids=range(len(wx)),
+                   y_ids=range(len(wx), len(wx) + len(wy)))
+        lb = x2y_comm_lower_bound(wx, wy, q)
+        ub = x2y_comm_upper_bound(wx, wy, q / 2)
+        comm = s.communication_cost()
+        rows.append(dict(case=name, comm=round(comm, 2), lower=round(lb, 2),
+                         upper=round(ub, 2),
+                         ratio=round(comm / lb, 3),
+                         reducers=s.num_reducers, algo=s.algorithm))
+    return rows
+
+
+def main():
+    rows = run()
+    print(f"{'case':20s} {'comm':>9s} {'LB':>9s} {'UB':>9s} {'c/LB':>6s} "
+          f"{'reducers':>8s}  algo")
+    bad = 0
+    for r in rows:
+        ok = r["lower"] - 1e-6 <= r["comm"] <= r["upper"] + 1e-6
+        bad += not ok
+        print(f"{r['case']:20s} {r['comm']:9.2f} {r['lower']:9.2f} "
+              f"{r['upper']:9.2f} {r['ratio']:6.3f} {r['reducers']:8d}  "
+              f"{r['algo']}{'' if ok else '  ** OUT OF BOUNDS **'}")
+    print(f"\n{len(rows)} cases, {bad} out of bounds")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,109 @@
+"""Assemble the §Roofline / §Dry-run tables from dry-run JSON records.
+
+Usage:  PYTHONPATH=src:. python -m benchmarks.roofline_report [--tag __opt]
+Emits a markdown table (stdout) — pasted into EXPERIMENTS.md.
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results", "dryrun")
+
+ARCH_ORDER = [
+    "mixtral-8x7b", "llama4-maverick-400b-a17b", "whisper-large-v3",
+    "internvl2-26b", "mamba2-370m", "jamba-1.5-large-398b", "granite-34b",
+    "stablelm-1.6b", "gemma3-4b", "stablelm-3b",
+]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(tag: str = "", mesh: str = "pod_16x16"):
+    rows = {}
+    for path in glob.glob(os.path.join(RESULTS, f"*__{mesh}{tag}.json")):
+        base = os.path.basename(path)[: -len(".json")]
+        parts = base.split("__")
+        arch, shape = parts[0], parts[1]
+        if tag and not base.endswith(tag):
+            continue
+        if not tag and len(parts) > 3:
+            continue
+        with open(path) as f:
+            rows[(arch, shape)] = json.load(f)
+    return rows
+
+
+def fmt_sec(x):
+    if x >= 100:
+        return f"{x:7.0f}"
+    if x >= 1:
+        return f"{x:7.2f}"
+    return f"{x:7.4f}"
+
+
+def table(rows, kernel_resident=True):
+    print("| arch | shape | t_compute (s) | t_memory (s) | t_collective (s)"
+          " | bottleneck | roofline frac | useful FLOPs |")
+    print("|---|---|---|---|---|---|---|---|")
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            r = rows.get((arch, shape))
+            if r is None:
+                continue
+            if r.get("status") == "skipped":
+                print(f"| {arch} | {shape} | — | — | — | *skipped:"
+                      f" full-attention arch* | — | — |")
+                continue
+            if r.get("status") != "ok":
+                print(f"| {arch} | {shape} | — | — | — | **ERROR** | — | — |")
+                continue
+            if kernel_resident:
+                tm = r["t_memory_kernel_resident"]
+                bn = r["bottleneck_kernel_resident"]
+                fr = r["roofline_fraction_kernel_resident"]
+            else:
+                tm, bn, fr = r["t_memory"], r["bottleneck"], \
+                    r["roofline_fraction"]
+            print(f"| {arch} | {shape} | {fmt_sec(r['t_compute'])} | "
+                  f"{fmt_sec(tm)} | {fmt_sec(r['t_collective'])} | {bn} | "
+                  f"{fr:.3f} | {r['useful_flops_ratio']:.3f} |")
+
+
+def memory_table(rows):
+    print("| arch | shape | HLO args (GB/dev) | temps (GB/dev) | fits 16GB? |")
+    print("|---|---|---|---|---|")
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            r = rows.get((arch, shape))
+            if not r or r.get("status") != "ok" or \
+                    not r.get("memory_per_device"):
+                continue
+            m = r["memory_per_device"]
+            args = m["argument_bytes"] / 1e9
+            temp = m["temp_bytes"] / 1e9
+            # note: CPU-backend temps are not VMEM-scheduled; indicative only
+            print(f"| {arch} | {shape} | {args:.2f} | {temp:.2f} | "
+                  f"{'yes' if args + min(temp, 4) < 16 else 'needs remat/offload'} |")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--mesh", default="pod_16x16",
+                    choices=["pod_16x16", "multipod_2x16x16"])
+    ap.add_argument("--naive", action="store_true",
+                    help="use naive (non-kernel-resident) memory accounting")
+    ap.add_argument("--memory", action="store_true")
+    args = ap.parse_args()
+    rows = load(args.tag, args.mesh)
+    if args.memory:
+        memory_table(rows)
+    else:
+        table(rows, kernel_resident=not args.naive)
+
+
+if __name__ == "__main__":
+    main()

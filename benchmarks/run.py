@@ -1,0 +1,44 @@
+"""Benchmark harness: one function per paper table / claim.
+
+  bench_a2a      — Table 1 (A2A bounds, optimal + approx algorithms)
+  bench_x2y      — Table 1 X2Y rows (Thm 25/26)
+  bench_engine   — schema comm vs naive replication, end-to-end engine
+  bench_packing  — FFD bins applied to the data pipeline
+  bench_kernels  — Pallas kernels vs oracles
+
+Prints ``name,us_per_call,derived`` CSV lines plus detailed tables; the
+roofline table lives in benchmarks/roofline_report.py (reads dry-run JSON).
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks import bench_a2a, bench_engine, bench_kernels, \
+        bench_packing, bench_x2y
+
+    sections = [
+        ("bench_a2a", bench_a2a.main),
+        ("bench_x2y", bench_x2y.main),
+        ("bench_engine", bench_engine.main),
+        ("bench_packing", bench_packing.main),
+        ("bench_kernels", bench_kernels.main),
+    ]
+    csv = []
+    for name, fn in sections:
+        print(f"\n===== {name} " + "=" * (60 - len(name)))
+        t0 = time.perf_counter()
+        rows = fn()
+        dt = (time.perf_counter() - t0) * 1e6
+        derived = len(rows) if rows is not None else 0
+        csv.append(f"{name},{dt:.0f},{derived}")
+    print("\n# name,us_per_call,derived")
+    for line in csv:
+        print(line)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+"""Architecture configs: one module per assigned arch + registry."""
+from .base import ArchConfig, SHAPES, get_config, list_archs, register
+
+__all__ = ["ArchConfig", "SHAPES", "get_config", "list_archs", "register"]

@@ -1,0 +1,41 @@
+"""Core: mapping schemas for different-sized inputs in MapReduce.
+
+Reproduces Afrati, Dolev, Korach, Sharma, Ullman — "Assignment Problems of
+Different-Sized Inputs in MapReduce" (2015): A2A and X2Y mapping-schema
+planners with capacity-q reducers, bin-packing approximations, the optimal
+unit-size constructions (q=2, q=3, AU method + extensions), the hybrid and
+big-input paths, plus the paper's lower/upper bounds for validation.
+"""
+
+from .binpack import bfd, ffd, pack
+from .bounds import (
+    a2a_algk_comm_upper_bound,
+    a2a_binpack_comm_lower_bound,
+    a2a_comm_lower_bound,
+    a2a_k2_comm_upper_bound,
+    a2a_reducers_lower_bound,
+    a2a_unit_comm_lower_bound,
+    a2a_unit_reducers_lower_bound,
+    big_input_comm_upper_bound,
+    x2y_comm_lower_bound,
+    x2y_comm_upper_bound,
+    x2y_reducers_lower_bound,
+)
+from .planner import naive_pairs, plan_a2a, plan_unit, plan_x2y
+from .primes import is_prime, next_prime, prev_prime
+from .schema import InfeasibleError, MappingSchema
+from . import unit_schemas
+
+__all__ = [
+    "MappingSchema", "InfeasibleError",
+    "plan_a2a", "plan_x2y", "plan_unit", "naive_pairs",
+    "ffd", "bfd", "pack",
+    "is_prime", "prev_prime", "next_prime",
+    "unit_schemas",
+    "a2a_comm_lower_bound", "a2a_reducers_lower_bound",
+    "a2a_binpack_comm_lower_bound", "a2a_unit_comm_lower_bound",
+    "a2a_unit_reducers_lower_bound", "a2a_k2_comm_upper_bound",
+    "a2a_algk_comm_upper_bound", "big_input_comm_upper_bound",
+    "x2y_comm_lower_bound", "x2y_comm_upper_bound",
+    "x2y_reducers_lower_bound",
+]

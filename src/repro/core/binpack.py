@@ -1,0 +1,83 @@
+"""Bin-packing primitives used by every approximation algorithm in the paper.
+
+First-Fit Decreasing (FFD) and Best-Fit Decreasing (BFD) give the classical
+11/9 * OPT + O(1) guarantee the paper leans on (Theorem 10, 18, 26): every bin
+except possibly one is at least half full, so ``#bins <= 2 * s / b`` for bin
+size ``b`` and total weight ``s``.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import numpy as np
+
+__all__ = ["ffd", "bfd", "pack", "num_bins_lower_bound"]
+
+
+def _decreasing_order(weights: np.ndarray) -> np.ndarray:
+    # stable sort for reproducibility
+    return np.argsort(-weights, kind="stable")
+
+
+def ffd(weights: Sequence[float], bin_size: float) -> list[list[int]]:
+    """First-Fit Decreasing.  Returns bin -> list of item indices."""
+    w = np.asarray(weights, dtype=np.float64)
+    if np.any(w > bin_size + 1e-12):
+        bad = int(np.argmax(w))
+        raise ValueError(
+            f"item {bad} (w={w[bad]}) does not fit in bin of size {bin_size}")
+    bins: list[list[int]] = []
+    space: list[float] = []
+    for i in _decreasing_order(w):
+        placed = False
+        for b in range(len(bins)):
+            if w[i] <= space[b] + 1e-12:
+                bins[b].append(int(i))
+                space[b] -= w[i]
+                placed = True
+                break
+        if not placed:
+            bins.append([int(i)])
+            space.append(bin_size - w[i])
+    return bins
+
+
+def bfd(weights: Sequence[float], bin_size: float) -> list[list[int]]:
+    """Best-Fit Decreasing: place each item into the fullest bin it fits."""
+    w = np.asarray(weights, dtype=np.float64)
+    if np.any(w > bin_size + 1e-12):
+        bad = int(np.argmax(w))
+        raise ValueError(
+            f"item {bad} (w={w[bad]}) does not fit in bin of size {bin_size}")
+    bins: list[list[int]] = []
+    space: list[float] = []
+    for i in _decreasing_order(w):
+        best, best_space = -1, np.inf
+        for b in range(len(bins)):
+            if w[i] <= space[b] + 1e-12 and space[b] < best_space:
+                best, best_space = b, space[b]
+        if best < 0:
+            bins.append([int(i)])
+            space.append(bin_size - w[i])
+        else:
+            bins[best].append(int(i))
+            space[best] -= w[i]
+    return bins
+
+
+def pack(weights: Sequence[float], bin_size: float,
+         method: str = "ffd") -> list[list[int]]:
+    if method == "ffd":
+        return ffd(weights, bin_size)
+    if method == "bfd":
+        return bfd(weights, bin_size)
+    if method == "best":
+        a, b = ffd(weights, bin_size), bfd(weights, bin_size)
+        return a if len(a) <= len(b) else b
+    raise ValueError(method)
+
+
+def num_bins_lower_bound(weights: Sequence[float], bin_size: float) -> int:
+    s = float(np.sum(np.asarray(weights, dtype=np.float64)))
+    return int(np.ceil(s / bin_size - 1e-12))

@@ -1,0 +1,88 @@
+"""Lower bounds from the paper (Theorems 8, 9, 11, 25) and Table-1 upper
+bounds, used by tests and the benchmark harness to validate the reproduction
+against the paper's own claims."""
+
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = [
+    "a2a_comm_lower_bound",
+    "a2a_reducers_lower_bound",
+    "a2a_binpack_comm_lower_bound",
+    "a2a_unit_comm_lower_bound",
+    "a2a_unit_reducers_lower_bound",
+    "x2y_comm_lower_bound",
+    "x2y_reducers_lower_bound",
+    "a2a_k2_comm_upper_bound",
+    "a2a_algk_comm_upper_bound",
+    "x2y_comm_upper_bound",
+    "big_input_comm_upper_bound",
+]
+
+
+def a2a_comm_lower_bound(weights, q: float) -> float:
+    """Theorem 8: comm >= s^2 / q (valid when s >= q)."""
+    s = float(np.sum(weights))
+    return s * s / q if s >= q else s
+
+
+def a2a_reducers_lower_bound(weights, q: float) -> float:
+    """Theorem 8: reducers >= s^2 / q^2."""
+    s = float(np.sum(weights))
+    return max(1.0, s * s / (q * q))
+
+
+def a2a_binpack_comm_lower_bound(weights, q: float, k: int) -> float:
+    """Theorem 9: comm >= s * floor((sk/q - 1)/(k - 1)) for the bin-packing
+    strategy with bins of size q/k."""
+    s = float(np.sum(weights))
+    x = s * k / q
+    return s * np.floor((x - 1) / (k - 1)) if k > 1 else s
+
+
+def a2a_unit_comm_lower_bound(m: int, q: int) -> int:
+    """Theorem 11: m * floor((m-1)/(q-1)) for unit-size inputs."""
+    return m * ((m - 1) // (q - 1)) if q > 1 else m
+
+def a2a_unit_reducers_lower_bound(m: int, q: int) -> int:
+    return (m // q) * ((m - 1) // (q - 1)) if q > 1 else 1
+
+
+def x2y_comm_lower_bound(wx, wy, q: float) -> float:
+    """Theorem 25: comm >= 2 * sum_x * sum_y / q."""
+    sx, sy = float(np.sum(wx)), float(np.sum(wy))
+    return 2.0 * sx * sy / q
+
+
+def x2y_reducers_lower_bound(wx, wy, q: float) -> float:
+    sx, sy = float(np.sum(wx)), float(np.sum(wy))
+    return max(1.0, 2.0 * sx * sy / (q * q))
+
+
+# ------------------------------------------------------------------ upper
+def a2a_k2_comm_upper_bound(weights, q: float) -> float:
+    """Theorem 10 (k=2 bin packing): comm <= 4 s^2 / q."""
+    s = float(np.sum(weights))
+    return 4.0 * s * s / q
+
+
+def a2a_algk_comm_upper_bound(weights, q: float, k: int) -> float:
+    """Theorem 18 (Algorithms 1 and 2): comm <=
+    (q / 2k) * ceil(sk/(q(k-1))) * (ceil(sk/(q(k-1))) - 1)."""
+    s = float(np.sum(weights))
+    g = np.ceil(s * k / (q * (k - 1)))
+    return (q / (2.0 * k)) * g * (g - 1) if k > 1 else s
+
+
+def x2y_comm_upper_bound(wx, wy, b: float) -> float:
+    """Theorem 26: comm <= 4 sum_x sum_y / b for bin size b, q = 2b."""
+    sx, sy = float(np.sum(wx)), float(np.sum(wy))
+    return 4.0 * sx * sy / b
+
+
+def big_input_comm_upper_bound(weights, q: float) -> float:
+    """Theorem 24: comm <= (m-1) q + 4 s^2 / q when one input > q/2."""
+    m = len(weights)
+    s = float(np.sum(weights))
+    return (m - 1) * q + 4.0 * s * s / q

@@ -1,0 +1,281 @@
+"""Planner: different-sized inputs -> mapping schema (paper Sections 4-10).
+
+``plan_a2a`` is the main entry point.  It reproduces the paper's case
+analysis:
+
+  * one input with  q/2 < w < q            -> big-input path (Section 9)
+  * all inputs <= q/k for some k >= 2      -> bin packing to bins of q/k,
+    then a unit-size scheduler on the bins (Sections 4-7)
+  * mixed profile around q/3 .. q/2        -> hybrid Algorithm 5 (Section 8)
+
+Going beyond the paper, ``method='auto'`` runs a *portfolio*: it evaluates
+every applicable strategy (all feasible k, every unit scheduler, the hybrid)
+and returns the schema with the smallest actual communication cost.  The
+paper picks one strategy per case a priori; measuring and taking the argmin
+is strictly better and is one of our beyond-paper optimizations (it never
+does worse than the paper's choice, which is always in the portfolio).
+
+``plan_x2y`` implements Section 10 with a swept bin-size split.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Sequence
+
+import numpy as np
+
+from . import unit_schemas as us
+from .binpack import pack
+from .primes import is_prime, prev_prime
+from .schema import InfeasibleError, MappingSchema
+
+__all__ = ["plan_a2a", "plan_x2y", "plan_unit", "naive_pairs"]
+
+
+# ---------------------------------------------------------------------------
+# unit-size dispatcher (items are bins; capacity k items per reducer)
+# ---------------------------------------------------------------------------
+def plan_unit(n: int, k: int, method: str = "auto") -> tuple[list[list[int]], str]:
+    """Best unit-size schema for n items, integer capacity k >= 2.
+
+    Returns (reducers over range(n), algorithm-name).
+    """
+    assert k >= 2
+    if n <= k:
+        return [list(range(n))], "single"
+    candidates: list[tuple[list[list[int]], str]] = []
+
+    def consider(name: str, reds: Optional[list[list[int]]]):
+        if reds is not None:
+            candidates.append((reds, name))
+
+    if method in ("auto", "alg_even") and k % 2 == 0:
+        consider("alg_even", us.alg_even(n, k))
+    if method in ("auto", "alg_odd") and k % 2 == 1 and k >= 3:
+        consider("alg_odd", us.alg_odd(n, k))
+    if method in ("auto", "au") and is_prime(k) and n <= k * k:
+        reds, _ = us.au_square(k, with_teams=True)
+        consider("au_square", _filter(reds, n))
+    if method in ("auto", "au_projective") and is_prime(k - 1) \
+            and n <= (k - 1) ** 2 + k:
+        consider("au_projective", _filter(us.au_projective(k - 1), n))
+    if method in ("auto", "alg3"):
+        consider("alg3", us.alg3(n, k))
+    if method in ("auto", "alg4") and is_prime(k):
+        l = round(math.log(n, k)) if n > 1 else 0
+        # only when exact power and the tree stays small
+        if l >= 2 and k ** l == n and (k * (k + 1)) ** (l - 1) <= 200_000:
+            consider("alg4", us.alg4(n, k))
+    if not candidates:
+        # always-applicable fallback
+        if k % 2 == 0:
+            consider("alg_even", us.alg_even(n, k))
+        else:
+            consider("alg_odd", us.alg_odd(n, k))
+    # pick minimum total copies (= comm in the unit world)
+    best = min(candidates, key=lambda c: sum(len(r) for r in c[0]))
+    return best
+
+
+def _filter(reducers: list[list[int]], n: int) -> list[list[int]]:
+    out = [[i for i in red if i < n] for red in reducers]
+    return [r for r in out if len(r) >= 1]
+
+
+# ---------------------------------------------------------------------------
+# A2A for different-sized inputs
+# ---------------------------------------------------------------------------
+def plan_a2a(weights: Sequence[float], q: float,
+             method: str = "auto") -> MappingSchema:
+    w = np.asarray(weights, dtype=np.float64)
+    m = len(w)
+    if m == 0:
+        return MappingSchema(w, q, [], [], algorithm="empty")
+    if np.any(w > q + 1e-12):
+        raise InfeasibleError("an input exceeds the reducer capacity")
+    big = np.flatnonzero(w > q / 2 + 1e-12)
+    if len(big) >= 2:
+        raise InfeasibleError(
+            "two inputs larger than q/2 cannot share a reducer")
+    if float(np.sum(w)) <= q + 1e-12:
+        # everything fits in one reducer
+        return MappingSchema(
+            w, q, [[i] for i in range(m)], [list(range(m))],
+            algorithm="single")
+
+    if len(big) == 1:
+        return _plan_big_input(w, q, int(big[0]), method)
+
+    if method == "auto":
+        cands = [s for s in _candidate_schemas(w, q) if s is not None]
+        assert cands, "portfolio produced no schema"
+        return min(cands, key=lambda s: s.communication_cost())
+    if method.startswith("binpack"):
+        # e.g. 'binpack-k2', 'binpack-k3'
+        k = int(method.split("k")[-1]) if "k" in method else 2
+        s = _binpack_schema(w, q, k)
+        if s is None:
+            raise InfeasibleError(f"inputs too large for bins of q/{k}")
+        return s
+    if method == "hybrid":
+        s = _hybrid_schema(w, q)
+        if s is None:
+            raise InfeasibleError("hybrid (Alg 5) inapplicable")
+        return s
+    raise ValueError(f"unknown method {method!r}")
+
+
+def _candidate_schemas(w: np.ndarray, q: float):
+    wmax = float(np.max(w))
+    kmax = max(2, min(int(q / max(wmax, 1e-12)), 64))
+    for k in range(2, kmax + 1):
+        yield _binpack_schema(w, q, k)
+    yield _hybrid_schema(w, q)
+
+
+def _binpack_schema(w: np.ndarray, q: float, k: int) -> Optional[MappingSchema]:
+    """Sections 4.1 / 6 / 7: bins of size q/k, then unit scheduler."""
+    b = q / k
+    if float(np.max(w)) > b + 1e-12:
+        return None
+    bins = pack(w, b, method="best")
+    reducers, name = plan_unit(len(bins), k)
+    return MappingSchema(
+        weights=w, q=q, bins=bins, reducers=reducers,
+        algorithm=f"binpack-k{k}+{name}",
+        meta={"k": k, "bin_size": b, "num_bins": len(bins)},
+    )
+
+
+def _hybrid_schema(w: np.ndarray, q: float) -> Optional[MappingSchema]:
+    """Algorithm 5 (Section 8): mixed big (q/3, q/2] and small (<= q/3).
+
+    Small inputs get packed twice (medium q/2 bins and small q/3 bins), so
+    bins overlap — meta['bins_overlap']=True.
+    """
+    a_ids = np.flatnonzero((w > q / 3 + 1e-12) & (w <= q / 2 + 1e-12))
+    b_ids = np.flatnonzero(w <= q / 3 + 1e-12)
+    if len(a_ids) + len(b_ids) != len(w):
+        return None  # some input > q/2 — handled by big-input path
+    if len(a_ids) == 0 or len(b_ids) == 0:
+        return None  # degenerate: plain bin packing covers it
+    big_bins = [[int(a_ids[i]) for i in bn]
+                for bn in pack(w[a_ids], q / 2, "best")]
+    med_bins = [[int(b_ids[i]) for i in bn]
+                for bn in pack(w[b_ids], q / 2, "best")]
+    small_bins = [[int(b_ids[i]) for i in bn]
+                  for bn in pack(w[b_ids], q / 3, "best")]
+    bins = big_bins + med_bins + small_bins
+    nb, nm = len(big_bins), len(med_bins)
+    reducers: list[list[int]] = []
+    # step 2: all pairs of big bins
+    for i in range(nb):
+        for j in range(i + 1, nb):
+            reducers.append([i, j])
+    if nb == 1:
+        # single big bin still pairs internally via itself? pairs inside one
+        # bin never co-reduce otherwise; give it one reducer alone
+        reducers.append([0])
+    # step 3: big x medium
+    for i in range(nb):
+        for j in range(nm):
+            reducers.append([i, nb + j])
+    # step 4: all pairs of small bins, capacity 3 in the unit world
+    sub, _ = plan_unit(len(small_bins), 3)
+    off = nb + nm
+    for red in sub:
+        reducers.append([off + i for i in red])
+    return MappingSchema(
+        weights=w, q=q, bins=bins, reducers=reducers,
+        algorithm="hybrid-alg5",
+        meta={"bins_overlap": True, "big_bins": nb, "med_bins": nm,
+              "small_bins": len(small_bins)},
+    )
+
+
+def _plan_big_input(w: np.ndarray, q: float, big: int,
+                    method: str) -> MappingSchema:
+    """Section 9: one input of size in (q/2, q)."""
+    wb = float(w[big])
+    rest = [i for i in range(len(w)) if i != big]
+    rest_w = w[rest]
+    if len(rest) and float(np.max(rest_w)) > q - wb + 1e-12:
+        raise InfeasibleError(
+            "an input cannot share a reducer with the big input")
+    # (a) pair the big input with everything: bins of size q - w_big
+    small_bins = [[rest[i] for i in bn]
+                  for bn in pack(rest_w, q - wb, "best")]
+    bins: list[list[int]] = [[big]] + small_bins
+    reducers: list[list[int]] = [[0, 1 + b] for b in range(len(small_bins))]
+    schema_a = MappingSchema(
+        weights=w, q=q, bins=bins, reducers=reducers,
+        algorithm="big-input-pairing", meta={"bins_overlap": True})
+    # (b) all pairs among the small inputs: recurse on the sub-universe
+    sub = plan_a2a(rest_w, q, method="auto" if method == "auto" else method)
+    sub_bins = [[rest[i] for i in bn] for bn in sub.bins]
+    schema_b = MappingSchema(
+        weights=w, q=q, bins=sub_bins, reducers=sub.reducers,
+        algorithm=f"rest:{sub.algorithm}", meta={"bins_overlap": True})
+    out = MappingSchema.concat(schema_a, schema_b)
+    out.algorithm = f"big-input+{sub.algorithm}"
+    out.meta["bins_overlap"] = True
+    return out
+
+
+# ---------------------------------------------------------------------------
+# X2Y (Section 10)
+# ---------------------------------------------------------------------------
+def plan_x2y(wx: Sequence[float], wy: Sequence[float], q: float,
+             num_splits: int = 8) -> MappingSchema:
+    """Bipartite schema: X ids are 0..m-1, Y ids are m..m+n-1.
+
+    Paper: pack X into bins of size b, Y into bins of q - b, cross product.
+    We sweep b over a small grid (the paper fixes b = max_x resp. q/2) and
+    keep the cheapest — the paper's choices are grid points.
+    """
+    wx = np.asarray(wx, dtype=np.float64)
+    wy = np.asarray(wy, dtype=np.float64)
+    m, n = len(wx), len(wy)
+    if m == 0 or n == 0:
+        return MappingSchema(np.concatenate([wx, wy]), q, [], [],
+                             algorithm="empty")
+    max_x, max_y = float(np.max(wx)), float(np.max(wy))
+    if max_x + max_y > q + 1e-12:
+        raise InfeasibleError("largest X and Y inputs cannot co-reduce")
+    w_all = np.concatenate([wx, wy])
+    lo, hi = max_x, q - max_y
+    grid = sorted({lo, hi, q / 2, *np.linspace(lo, hi, num_splits).tolist()})
+    best: Optional[MappingSchema] = None
+    for b in grid:
+        if b < max_x - 1e-12 or q - b < max_y - 1e-12:
+            continue
+        xbins = pack(wx, b, "best")
+        ybins = [[m + i for i in bn] for bn in pack(wy, q - b, "best")]
+        bins = [list(bn) for bn in xbins] + ybins
+        nx = len(xbins)
+        reducers = [[i, nx + j] for i in range(nx) for j in range(len(ybins))]
+        s = MappingSchema(
+            weights=w_all, q=q, bins=bins, reducers=reducers,
+            algorithm=f"x2y-binpack(b={b:.3g})",
+            meta={"b": b, "x_bins": nx, "y_bins": len(ybins)})
+        if best is None or s.communication_cost() < best.communication_cost():
+            best = s
+    assert best is not None
+    return best
+
+
+# ---------------------------------------------------------------------------
+# naive baseline: one reducer per pair (worst-case comm, used in benchmarks)
+# ---------------------------------------------------------------------------
+def naive_pairs(weights: Sequence[float], q: float) -> MappingSchema:
+    w = np.asarray(weights, dtype=np.float64)
+    m = len(w)
+    reducers = []
+    for i in range(m):
+        for j in range(i + 1, m):
+            if w[i] + w[j] > q + 1e-12:
+                raise InfeasibleError(f"pair ({i},{j}) exceeds q")
+            reducers.append([i, j])
+    return MappingSchema(w, q, [[i] for i in range(m)], reducers,
+                         algorithm="naive-pairs")

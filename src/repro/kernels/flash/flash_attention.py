@@ -1,0 +1,121 @@
+"""Pallas TPU kernel: flash attention (causal / sliding-window / full).
+
+Online-softmax blocked attention for one head: grid is (q_blocks, kv_blocks)
+with the kv dimension innermost and sequential; running max / normalizer /
+output accumulator live in VMEM scratch across the kv sweep, so HBM traffic
+is O(S * d) instead of O(S^2).
+
+Used by: prefill attention for every transformer arch (GQA wrappers vmap over
+heads and batch; KV heads are broadcast to query groups in ops.py), and the
+window path implements Mixtral SWA / Gemma-3 local layers.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention"]
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  scale: float, causal: bool, window: int,
+                  bq: int, bk: int, n_kv: int, skv: int):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[...]                                     # (bq, d)
+    k = k_ref[...]                                     # (bk, d)
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale    # (bq, bk)
+
+    rows = i * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    cols = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = cols < skv          # padded kv rows never win the softmax
+    if causal:
+        mask &= cols <= rows
+    if window > 0:
+        mask &= (rows - cols) < window
+        if not causal:
+            mask &= (cols - rows) < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]                                # (bq, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)                             # (bq, bk)
+    corr = jnp.exp(m_prev - m_new)                     # (bq, 1)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+    m_ref[...] = m_new
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+        p, v_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(j == n_kv - 1)
+    def _flush():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[...] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "scale", "bq", "bk", "interpret"))
+def flash_attention(
+    q: jax.Array,                  # (Sq, d)
+    k: jax.Array,                  # (Skv, d)
+    v: jax.Array,                  # (Skv, d)
+    *,
+    causal: bool = True,
+    window: int = 0,               # 0 = unbounded
+    scale: float | None = None,
+    bq: int = 128,
+    bk: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    Sq, d = q.shape
+    Skv = k.shape[0]
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+    bq = min(bq, max(8, Sq))
+    bk = min(bk, max(8, Skv))
+
+    def pad_rows(a, mult):
+        p = -a.shape[0] % mult
+        return jnp.pad(a, ((0, p), (0, 0))) if p else a
+
+    qp, kp, vp = pad_rows(q, bq), pad_rows(k, bk), pad_rows(v, bk)
+    n_q, n_kv = qp.shape[0] // bq, kp.shape[0] // bk
+    grid = (n_q, n_kv)
+
+    kern = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window,
+        bq=bq, bk=bk, n_kv=n_kv, skv=Skv)
+    out = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bq, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((bk, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((bk, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bq, d), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((qp.shape[0], d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qp, kp, vp)
+    return out[:Sq]

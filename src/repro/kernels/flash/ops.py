@@ -1,0 +1,46 @@
+"""Multi-head / GQA wrapper around the flash-attention kernel.
+
+``mha``: (B, Sq, Hq, D) x (B, Skv, Hkv, D) -> (B, Sq, Hq, D), broadcasting
+KV heads over query groups (GQA).  On CPU the default dispatches to the
+reference; on TPU set use_kernel=True (interpret=False).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .flash_attention import flash_attention
+from .ref import attention_ref
+
+__all__ = ["mha"]
+
+
+def _broadcast_kv(k, hq):
+    hkv = k.shape[2]
+    if hkv == hq:
+        return k
+    assert hq % hkv == 0
+    return jnp.repeat(k, hq // hkv, axis=2)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "use_kernel", "interpret", "bq", "bk"))
+def mha(q, k, v, *, causal=True, window=0, use_kernel=False,
+        interpret=True, bq=128, bk=128):
+    B, Sq, Hq, D = q.shape
+    k = _broadcast_kv(k, Hq)
+    v = _broadcast_kv(v, Hq)
+    # (B, H, S, D)
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    if use_kernel:
+        fn = functools.partial(flash_attention, causal=causal, window=window,
+                               interpret=interpret, bq=bq, bk=bk)
+    else:
+        fn = functools.partial(attention_ref, causal=causal, window=window)
+    out = jax.vmap(jax.vmap(fn))(qt, kt, vt)
+    return out.transpose(0, 2, 1, 3)

@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for flash attention (one head)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["attention_ref"]
+
+
+def attention_ref(q, k, v, *, causal=True, window=0, scale=None):
+    Sq, d = q.shape
+    Skv = k.shape[0]
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+    s = (q.astype(jnp.float32) @ k.astype(jnp.float32).T) * scale
+    rows = jnp.arange(Sq)[:, None]
+    cols = jnp.arange(Skv)[None, :]
+    mask = jnp.ones_like(s, dtype=bool)
+    if causal:
+        mask &= cols <= rows
+    if window > 0:
+        mask &= (rows - cols) < window
+        if not causal:
+            mask &= (cols - rows) < window
+    s = jnp.where(mask, s, -1e30)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
+    return (p @ v.astype(jnp.float32)).astype(q.dtype)

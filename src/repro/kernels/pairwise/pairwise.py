@@ -1,0 +1,87 @@
+"""Pallas TPU kernel: blocked all-pairs Gram matrix (the reducer hot spot).
+
+Within a reducer the A2A problem computes a similarity for every pair of its
+inputs — a Gram matrix ``X @ X^T`` over the reducer's (L, d) block.  On TPU
+this is MXU work; we tile (bm, bn, bk) so each step keeps two input tiles and
+one accumulator tile in VMEM and issues 128x128-aligned matmuls.
+
+The kernel computes C[i, j] = sum_k X[i, k] * Y[j, k] with fp32 accumulation;
+metric post-processing (L2 / cosine) happens in ops.py from the same Gram
+values (norms are the diagonal, so no extra memory pass).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["pairwise_gram"]
+
+
+def _gram_kernel(x_ref, y_ref, o_ref, acc_ref, *, n_k: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[...], y_ref[...],
+        dimension_numbers=(((1,), (1,)), ((), ())),     # X @ Y^T
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(pl.program_id(2) == n_k - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("bm", "bn", "bk", "interpret", "out_dtype"))
+def pairwise_gram(
+    x: jax.Array,                 # (M, K)
+    y: jax.Array,                 # (N, K)
+    *,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 512,
+    interpret: bool = False,
+    out_dtype=jnp.float32,
+) -> jax.Array:                   # (M, N) = x @ y^T
+    M, K = x.shape
+    N, Ky = y.shape
+    assert K == Ky, (x.shape, y.shape)
+    bm = min(bm, max(8, M))
+    bn = min(bn, max(8, N))
+    bk = min(bk, max(8, K))
+
+    def pad(a, mult0, mult1):
+        p0 = -a.shape[0] % mult0
+        p1 = -a.shape[1] % mult1
+        if p0 or p1:
+            a = jnp.pad(a, ((0, p0), (0, p1)))
+        return a
+
+    xp = pad(x, bm, bk)
+    yp = pad(y, bn, bk)
+    Mp, Kp = xp.shape
+    Np = yp.shape[0]
+    n_k = Kp // bk
+    grid = (Mp // bm, Np // bn, n_k)
+
+    out = pl.pallas_call(
+        functools.partial(_gram_kernel, n_k=n_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bn, bk), lambda i, j, k: (j, k)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Mp, Np), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(xp, yp)
+    return out[:M, :N]

@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the pairwise kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["pairwise_gram_ref", "pairwise_ref"]
+
+
+def pairwise_gram_ref(x, y, out_dtype=jnp.float32):
+    return (x.astype(jnp.float32) @ y.astype(jnp.float32).T).astype(out_dtype)
+
+
+def pairwise_ref(x, metric: str = "dot"):
+    g = pairwise_gram_ref(x, x)
+    if metric == "dot":
+        return g
+    n2 = jnp.diagonal(g)
+    if metric == "l2":
+        return n2[:, None] + n2[None, :] - 2.0 * g
+    if metric == "cosine":
+        nrm = jnp.sqrt(jnp.clip(n2, 1e-18))
+        return g / (nrm[:, None] * nrm[None, :])
+    raise ValueError(metric)

@@ -1,0 +1,38 @@
+"""Batched/multi-head wrapper for the SSD scan kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .ref import ssd_scan_chunked, ssd_scan_ref
+from .ssd import ssd_scan
+
+__all__ = ["ssd"]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "use_kernel",
+                                             "interpret", "impl"))
+def ssd(x, log_a, b, c, *, chunk=128, use_kernel=False, interpret=True,
+        impl="step"):
+    """x (B, S, H, P), log_a (B, S, H), b/c (B, S, H, N) -> (B, S, H, P).
+
+    impl: 'step' (literal recurrence, baseline) | 'chunked' (XLA-only
+    production path, S/chunk scan iterations of MXU matmuls)."""
+    def one_head(xh, lah, bh, ch):
+        if use_kernel:
+            return ssd_scan(xh, lah, bh, ch, chunk=chunk,
+                            interpret=interpret)
+        if impl == "chunked":
+            return ssd_scan_chunked(xh, lah, bh, ch, chunk=chunk)
+        return ssd_scan_ref(xh, lah, bh, ch)
+
+    # (B, H, S, *)
+    xt = x.transpose(0, 2, 1, 3)
+    lat = log_a.transpose(0, 2, 1)
+    bt = b.transpose(0, 2, 1, 3)
+    ct = c.transpose(0, 2, 1, 3)
+    out = jax.vmap(jax.vmap(one_head))(xt, lat, bt, ct)
+    return out.transpose(0, 2, 1, 3)

@@ -1,0 +1,74 @@
+"""Pure-jnp oracles for the SSD scan.
+
+``ssd_scan_ref``     — literal per-step recurrence (ground truth; O(S) scan
+                       steps, slow and HBM-heavy — baseline path).
+``ssd_scan_chunked`` — chunked formulation in pure jnp, same math as the
+                       Pallas kernel: intra-chunk masked matmul + O(S/Q)
+                       scan over chunk states.  This is the XLA-only
+                       production path (hillclimb §Perf): it turns S scan
+                       iterations into S/Q and makes the hot loop MXU work.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["ssd_scan_ref", "ssd_scan_chunked"]
+
+
+def ssd_scan_ref(x, log_a, b, c):
+    """x (S,P), log_a (S,), b (S,N), c (S,N) -> y (S,P).
+
+    h_t = a_t h_{t-1} + b_t x_t^T ;  y_t = c_t . h_t
+    """
+    S, P = x.shape
+    N = b.shape[1]
+
+    def step(h, inp):
+        xt, lat, bt, ct = inp
+        h = jnp.exp(lat) * h + jnp.outer(bt, xt)
+        y = ct @ h
+        return h, y
+
+    h0 = jnp.zeros((N, P), jnp.float32)
+    _, ys = jax.lax.scan(
+        step, h0,
+        (x.astype(jnp.float32), log_a.astype(jnp.float32),
+         b.astype(jnp.float32), c.astype(jnp.float32)))
+    return ys.astype(x.dtype)
+
+
+def ssd_scan_chunked(x, log_a, b, c, *, chunk: int = 128):
+    """Chunked SSD, pure jnp (same recurrence as ssd_scan_ref)."""
+    S, P = x.shape
+    N = b.shape[1]
+    Q = min(chunk, S)
+    pad = -S % Q
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, pad), (0, 0)))
+        c = jnp.pad(c, ((0, pad), (0, 0)))
+        log_a = jnp.pad(log_a, (0, pad))
+    nc = x.shape[0] // Q
+    xc = x.reshape(nc, Q, P).astype(jnp.float32)
+    bc = b.reshape(nc, Q, N).astype(jnp.float32)
+    cc = c.reshape(nc, Q, N).astype(jnp.float32)
+    lac = jnp.cumsum(log_a.reshape(nc, Q, 1).astype(jnp.float32), axis=1)
+
+    rows = jnp.arange(Q)[:, None]
+    cols = jnp.arange(Q)[None, :]
+    tri = cols <= rows                                    # (Q, Q)
+
+    def step(h, inp):
+        xq, bq, cq, la = inp                              # (Q,P),(Q,N),(Q,1)
+        decay = jnp.exp(la - la.T)
+        g = jnp.where(tri, (cq @ bq.T) * decay, 0.0)
+        y = g @ xq + (cq * jnp.exp(la)) @ h               # intra + inter
+        la_end = la[-1:, :]
+        h = jnp.exp(la_end) * h + bq.T @ (xq * jnp.exp(la_end - la))
+        return h, y
+
+    h0 = jnp.zeros((N, P), jnp.float32)
+    _, ys = jax.lax.scan(step, h0, (xc, bc, cc, lac))
+    return ys.reshape(nc * Q, P)[:S].astype(x.dtype)

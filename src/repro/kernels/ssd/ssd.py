@@ -1,0 +1,103 @@
+"""Pallas TPU kernel: Mamba-2 SSD (state-space duality) chunked scan.
+
+One head: inputs x (S, P), per-step log-decay log_a (S, 1) <= 0, input/output
+projections B, C (S, N).  Recurrence
+
+    h_t = a_t h_{t-1} + B_t (x_t)^T        y_t = C_t . h_t
+
+is evaluated chunk-by-chunk (chunk Q): the intra-chunk term is a masked
+(Q, Q) "attention" matmul on the MXU; the inter-chunk term carries the
+(N, P) state in VMEM scratch across the sequential chunk grid.  All decay
+factors are exponentials of non-positive numbers — numerically stable.
+
+This is the TPU-native adaptation of the SSD algorithm: instead of the GPU
+warp-level scan, chunks map to MXU matmuls + one small sequential grid.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["ssd_scan"]
+
+
+def _ssd_kernel(x_ref, b_ref, c_ref, la_ref, y_ref, h_ref, *, Q: int):
+    t = pl.program_id(0)
+
+    @pl.when(t == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    x = x_ref[...].astype(jnp.float32)        # (Q, P)
+    b = b_ref[...].astype(jnp.float32)        # (Q, N)
+    c = c_ref[...].astype(jnp.float32)        # (Q, N)
+    la = jnp.cumsum(la_ref[...].astype(jnp.float32), axis=0)  # (Q, 1)
+
+    # intra-chunk: masked decay-weighted attention
+    rows = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    decay = jnp.exp(la - la.T)                 # (Q, Q); <=1 below diagonal
+    g = jax.lax.dot_general(c, b, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    g = jnp.where(cols <= rows, g * decay, 0.0)
+    y = jax.lax.dot_general(g, x, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+
+    # inter-chunk: contribution of carried state
+    h = h_ref[...]                             # (N, P)
+    y += jax.lax.dot_general(c * jnp.exp(la), h, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+
+    # state update
+    la_end = la[-1:, :]                        # (1, 1)
+    w = jnp.exp(la_end - la)                   # (Q, 1)
+    h_ref[...] = jnp.exp(la_end) * h + jax.lax.dot_general(
+        b, x * w, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    y_ref[...] = y.astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(
+    x: jax.Array,                  # (S, P)
+    log_a: jax.Array,              # (S,) log decay, <= 0
+    b: jax.Array,                  # (S, N)
+    c: jax.Array,                  # (S, N)
+    *,
+    chunk: int = 128,
+    interpret: bool = False,
+) -> jax.Array:                    # (S, P)
+    S, P = x.shape
+    N = b.shape[1]
+    Q = min(chunk, S)
+    pad = -S % Q
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, pad), (0, 0)))
+        c = jnp.pad(c, ((0, pad), (0, 0)))
+        log_a = jnp.pad(log_a, (0, pad))
+    Sp = x.shape[0]
+    la2 = log_a[:, None].astype(jnp.float32)
+    n_chunks = Sp // Q
+
+    out = pl.pallas_call(
+        functools.partial(_ssd_kernel, Q=Q),
+        grid=(n_chunks,),
+        in_specs=[
+            pl.BlockSpec((Q, P), lambda t: (t, 0)),
+            pl.BlockSpec((Q, N), lambda t: (t, 0)),
+            pl.BlockSpec((Q, N), lambda t: (t, 0)),
+            pl.BlockSpec((Q, 1), lambda t: (t, 0)),
+        ],
+        out_specs=pl.BlockSpec((Q, P), lambda t: (t, 0)),
+        out_shape=jax.ShapeDtypeStruct((Sp, P), x.dtype),
+        scratch_shapes=[pltpu.VMEM((N, P), jnp.float32)],
+        interpret=interpret,
+    )(x, b, c, la2)
+    return out[:S]

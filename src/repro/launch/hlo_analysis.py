@@ -1,0 +1,358 @@
+"""HLO-text analyzer: flops / HBM-traffic / collective bytes with correct
+while-loop (lax.scan) multipliers.
+
+XLA's ``compiled.cost_analysis()`` counts a while-loop body ONCE, so any
+scanned-layers model under-reports by ~num_layers x.  This walks the
+optimized HLO:
+
+  * builds a per-computation symbol table (%name -> shape) from defs;
+  * dot flops: 2 * prod(result) * contracted_size (parsed from
+    dot_dimension_numbers), scaled by the product of enclosing while-loop
+    trip counts (trip count = max int constant in the loop condition —
+    XLA canonicalizes counted loops to `iter < C`);
+  * collective bytes: ring-model per kind (AG/AR/RS/A2A/permute), also
+    trip-count scaled;
+  * HBM traffic: every top-level op reads operands + writes result once
+    (fusions count as one op — a good model of TPU fusion behavior);
+    shape-only ops (bitcast/tuple/gte/parameter/constant) are free.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+__all__ = ["analyze_hlo_text", "HloStats"]
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e3m4": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\(?.+?\)?)\s+"
+                     r"([\w\-]+)\(")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s*->")
+_CALLED_RE = re.compile(
+    r"(?:calls|body|condition|to_apply|branch_computations)="
+    r"[{]?%?([\w.\-]+(?:,\s*%?[\w.\-]+)*)[}]?")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_CONST_INT_RE = re.compile(r"constant\((\d+)\)")
+_TRIPCOUNT_RE = re.compile(r'known_trip_count.{0,10}?[:=]\s*.?\{?"?n"?[:=]"?(\d+)')
+
+_FREE_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "bitcast-convert", "after-all", "partition-id", "replica-id", "iota",
+    "reshape",  # layout-preserving reshapes are free on TPU
+}
+
+_COLLECTIVES = {"all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute", "all-gather-start", "all-reduce-start",
+                "collective-permute-start"}
+
+
+def _dims(dim_str: str) -> list[int]:
+    return [int(d) for d in dim_str.split(",")] if dim_str else []
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in _dims(dims):
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_elems(type_str: str) -> int:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return 0
+    n = 1
+    for d in _dims(m.group(2)):
+        n *= d
+    return n
+
+
+@dataclasses.dataclass
+class _Op:
+    name: str
+    type_str: str
+    opcode: str
+    line: str
+
+
+class _Computation:
+    def __init__(self, name):
+        self.name = name
+        self.ops: list[_Op] = []
+        self.symbols: dict[str, str] = {}   # name -> type str
+
+
+def _parse_computations(text: str) -> dict[str, _Computation]:
+    comps: dict[str, _Computation] = {}
+    cur: Optional[_Computation] = None
+    entry = None
+    for raw in text.splitlines():
+        line = raw.strip()
+        if not line:
+            continue
+        hdr = _COMP_HDR_RE.match(raw) if raw and raw[0] not in " }" else None
+        if hdr and "{" in raw:
+            cur = _Computation(hdr.group(1))
+            comps[cur.name] = cur
+            if raw.startswith("ENTRY"):
+                entry = cur.name
+            continue
+        if cur is None:
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        m = _DEF_RE.match(line)
+        if m:
+            name, type_str, opcode = m.groups()
+            cur.ops.append(_Op(name, type_str, opcode, line))
+            cur.symbols[name] = type_str
+    if entry:
+        comps["__entry__"] = comps[entry]
+    return comps
+
+
+def _group_size(line: str, num_partitions: int) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    return num_partitions
+
+
+def _dot_flops(op: _Op, comp: _Computation) -> float:
+    # result elements x contracted size x 2
+    res = _shape_elems(op.type_str)
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.line)
+    operands = re.findall(r"\(([^)]*)\)", op.line)
+    # lhs operand name = first arg inside dot(...)
+    argm = re.search(op.opcode + r"\(%?([\w.\-]+)", op.line)
+    csize = 1
+    if m and argm:
+        lhs_type = comp.symbols.get(argm.group(1))
+        if lhs_type:
+            sm = _SHAPE_RE.search(lhs_type)
+            if sm:
+                dims = _dims(sm.group(2))
+                for ci in _dims(m.group(1)):
+                    if ci < len(dims):
+                        csize *= dims[ci]
+    return 2.0 * res * csize
+
+
+def _conv_flops(op: _Op, comp: _Computation) -> float:
+    # rough: 2 * out_elems * kernel_elems_per_output (parse window size)
+    res = _shape_elems(op.type_str)
+    m = re.search(r"window=\{size=([0-9x]+)", op.line)
+    k = 1
+    if m:
+        for d in m.group(1).split("x"):
+            k *= int(d)
+    return 2.0 * res * k
+
+
+def _collective_moved(op: _Op, line: str, num_partitions: int,
+                      bf16_native: bool = True) -> float:
+    n = max(_group_size(line, num_partitions), 1)
+    frac = (n - 1) / n if n > 1 else 0.0
+    size = _shape_bytes(op.type_str)
+    if bf16_native and "promoted" in line and "f32[" in op.type_str:
+        # XLA:CPU promotes bf16 all-reduces to f32; TPU keeps them bf16
+        size //= 2
+    kind = op.opcode.replace("-start", "")
+    if kind == "all-gather":
+        return size * frac
+    if kind == "all-reduce":
+        return 2.0 * size * frac
+    if kind == "reduce-scatter":
+        return size  # result is the shard; n*size enters the ring
+    if kind == "all-to-all":
+        return size * frac
+    if kind == "collective-permute":
+        return size
+    return 0.0
+
+
+def _trip_count(cond: _Computation) -> int:
+    best = 1
+    for op in cond.ops:
+        for mm in _CONST_INT_RE.finditer(op.line):
+            best = max(best, int(mm.group(1)))
+    return best
+
+
+@dataclasses.dataclass
+class HloStats:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    collective_bytes: float = 0.0
+    collective_by_kind: dict = dataclasses.field(default_factory=dict)
+    collective_ops: int = 0
+    while_trip_counts: list = dataclasses.field(default_factory=list)
+
+
+def _f32_act_bytes_adjust(type_str: str) -> int:
+    """Bytes of type_str counting rank>=3 f32 tensors at bf16 width.
+
+    With compute_dtype=bf16, every rank>=3 f32 activation in the optimized
+    CPU HLO stems from XLA:CPU's bf16 dot/all-reduce promotion — on TPU the
+    MXU and ICI consume bf16 natively.  Genuine f32 regions (loss scalars,
+    optimizer leaves, norm statistics) are rank<=2 or tiny."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        dl = _dims(dims)
+        for d in dl:
+            n *= d
+        b = n * _DTYPE_BYTES[dt]
+        if dt == "f32" and len(dl) >= 3:
+            b //= 2
+        total += b
+    return total
+
+
+def _is_resident(type_str: str, min_dim: int = 1024) -> bool:
+    """True for attention-score-like tensors: trailing two dims both large
+    (q_seq x kv_seq).  With the Pallas flash kernel these tiles never leave
+    VMEM; `attn_resident=True` accounting excludes their HBM traffic."""
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return False
+    dims = _dims(m.group(2))
+    return len(dims) >= 2 and dims[-1] >= min_dim and dims[-2] >= min_dim
+
+
+def analyze_hlo_text(text: str, num_partitions: int = 1,
+                     attn_resident: bool = False,
+                     bf16_native: bool = True) -> HloStats:
+    """bf16_native: XLA:CPU legalizes bf16 dots by inserting f32 converts of
+    their operands; the TPU MXU consumes bf16 directly, so convert-rooted
+    f32 fusions are counted at bf16 width (documented approximation)."""
+    comps = _parse_computations(text)
+    stats = HloStats()
+    entry = comps.get("__entry__")
+    if entry is None:
+        return stats
+
+    fused: set[str] = set()
+    for c in comps.values():
+        for op in c.ops:
+            if op.opcode == "fusion":
+                m = _CALLED_RE.search(op.line)
+                if m:
+                    for name in m.group(1).replace("%", "").split(","):
+                        fused.add(name.strip())
+
+    visited_guard: set = set()
+
+    def walk(comp: _Computation, mult: float, as_fusion_interior: bool):
+        key = (comp.name, as_fusion_interior)
+        for op in comp.ops:
+            line = op.line
+            oc = op.opcode
+            # ---- flops (counted even inside fusions)
+            if oc == "dot":
+                stats.flops += mult * _dot_flops(op, comp)
+            elif oc == "convolution":
+                stats.flops += mult * _conv_flops(op, comp)
+            elif oc in ("multiply", "add", "subtract", "divide", "exponential",
+                        "tanh", "rsqrt", "power", "maximum", "minimum"):
+                stats.flops += mult * _shape_elems(op.type_str)
+            # ---- collectives
+            if oc in _COLLECTIVES:
+                moved = _collective_moved(op, line, num_partitions,
+                                          bf16_native=bf16_native)
+                kind = oc.replace("-start", "")
+                stats.collective_bytes += mult * moved
+                stats.collective_by_kind[kind] = \
+                    stats.collective_by_kind.get(kind, 0.0) + mult * moved
+                stats.collective_ops += 1
+            # ---- HBM traffic: top-level ops only
+            if not as_fusion_interior and oc not in _FREE_OPS:
+                sizer = _f32_act_bytes_adjust if bf16_native else _shape_bytes
+                res_bytes = sizer(op.type_str)
+                if attn_resident and _is_resident(op.type_str):
+                    res_bytes = 0
+                # XLA names fusions after their root op; slice-rooted fusions
+                # touch only the slice, update-rooted ones only the update.
+                is_ds = (oc in ("dynamic-slice", "gather")
+                         or (oc == "fusion"
+                             and ("dynamic-slice" in op.name
+                                  or "gather" in op.name)))
+                is_dus = (oc in ("dynamic-update-slice", "scatter")
+                          or (oc == "fusion"
+                              and ("dynamic-update-slice" in op.name
+                                   or "scatter" in op.name)))
+                if is_dus:
+                    # in-place update: traffic ~ 2 x update operand
+                    # (operands = carried buffer [== result size] + update)
+                    sizes = []
+                    argm = re.search(oc + r"\(([^)]*)\)", line)
+                    if argm:
+                        for nm in argm.group(1).split(","):
+                            t = comp.symbols.get(nm.strip().lstrip("%"))
+                            if t:
+                                sizes.append(sizer(t))
+                    upd = (sum(sizes) - max(sizes)) if sizes else res_bytes
+                    stats.hbm_bytes += mult * 2 * max(upd, 1)
+                elif is_ds:
+                    # reads only the slice, writes the result
+                    stats.hbm_bytes += mult * 2 * res_bytes
+                else:
+                    opnds = 0
+                    argm = re.search(oc + r"\(([^)]*)\)", line)
+                    if argm:
+                        for nm in argm.group(1).split(","):
+                            nm = nm.strip().lstrip("%")
+                            t = comp.symbols.get(nm)
+                            if t and not (attn_resident and _is_resident(t)):
+                                opnds += sizer(t)
+                    stats.hbm_bytes += mult * (opnds + res_bytes)
+            # ---- control flow recursion
+            if oc == "while":
+                m = _CALLED_RE.search(line)
+                body = cond = None
+                bm = re.search(r"body=%?([\w.\-]+)", line)
+                cm = re.search(r"condition=%?([\w.\-]+)", line)
+                tc = 1
+                tm = _TRIPCOUNT_RE.search(line)
+                if tm:
+                    tc = int(tm.group(1))
+                elif cm and cm.group(1) in comps:
+                    tc = _trip_count(comps[cm.group(1)])
+                stats.while_trip_counts.append(tc)
+                if bm and bm.group(1) in comps:
+                    walk(comps[bm.group(1)], mult * tc, False)
+            elif oc == "fusion":
+                m = re.search(r"calls=%?([\w.\-]+)", line)
+                if m and m.group(1) in comps:
+                    walk(comps[m.group(1)], mult, True)
+            elif oc in ("call", "custom-call", "conditional", "reduce",
+                        "sort", "scatter", "select-and-scatter", "map"):
+                for m in re.finditer(
+                        r"(?:to_apply|calls)=%?([\w.\-]+)", line):
+                    if m.group(1) in comps:
+                        walk(comps[m.group(1)], mult, True)
+
+    walk(entry, 1.0, False)
+    return stats

@@ -1,0 +1,36 @@
+"""Production mesh definitions.
+
+Functions, not module-level constants, so importing never touches jax device
+state.  Single pod: 16x16 = 256 chips ('data', 'model').  Multi-pod: 2 pods
+of 256 = 512 chips ('pod', 'data', 'model') — the 'pod' axis carries only
+data parallelism (gradient all-reduce over DCI), 'model' stays intra-pod.
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_local_mesh", "mesh_axis_sizes"]
+
+
+def _mk(shape, axes):
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return _mk(shape, axes)
+
+
+def make_local_mesh(model: int = 1):
+    """CPU/test mesh: all local devices on ('data','model')."""
+    n = len(jax.devices())
+    assert n % model == 0
+    return _mk((n // model, model), ("data", "model"))
+
+
+def mesh_axis_sizes(mesh) -> dict:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))

@@ -1,0 +1,81 @@
+"""Per-(arch, mesh, flags) sharding-rule derivation.
+
+The logical rules table is adjusted for divisibility: a logical dim only
+shards over 'model' when the arch's dimension divides the axis (e.g.
+Gemma-3's 8 query heads cannot shard over TP=16 — its TP parallelism comes
+from d_ff/vocab/head_dim instead; Granite's single KV head is replicated).
+"""
+
+from __future__ import annotations
+
+from repro.configs.base import ArchConfig
+from repro.models.configs_runtime import RuntimeFlags
+from repro.parallel.sharding import ShardingRules
+
+from .mesh import mesh_axis_sizes
+
+__all__ = ["rules_for", "cache_logical_axes"]
+
+
+def rules_for(cfg: ArchConfig, mesh, flags: RuntimeFlags) -> ShardingRules:
+    sizes = mesh_axis_sizes(mesh)
+    tp = sizes.get("model", 1)
+    extra: dict = {}
+    if cfg.num_heads % tp:
+        extra["heads"] = (None,)
+        extra["act_heads"] = (None,)
+    if cfg.num_kv_heads % tp:
+        extra["kv_heads"] = (None,)
+    if cfg.num_experts and cfg.num_experts % tp:
+        extra["experts"] = (None,)
+    if cfg.d_ff and cfg.d_ff % tp:
+        extra["mlp"] = (None,)
+        extra["act_mlp"] = (None,)
+    if cfg.ssm_state:
+        H = cfg.mamba_meta()["H"]
+        if H % tp:
+            extra["ssm_heads"] = (None,)
+    if flags.seq_shard_decode and flags.seq_shard_axes == "all":
+        # long-context decode: KV sequence sharded over every mesh axis
+        # (batch=1 leaves 'data' idle otherwise)
+        extra["seq_shard"] = (("pod", "data", "model"),)
+        extra["batch"] = (None,)
+    elif flags.seq_shard_decode:
+        # decode with kv_heads % tp != 0: the cache would replicate over
+        # 'model' — shard its sequence dim there instead (batch stays on
+        # the data axes)
+        extra["seq_shard"] = ("model",)
+    else:
+        extra["seq_shard"] = (None,)
+    return ShardingRules.create(mesh, fsdp=flags.fsdp, extra=extra)
+
+
+# keyed by cache-leaf name: logical axes of the trailing dims
+_CACHE_AXES = {
+    "k": ("batch", "seq_shard", "kv_heads", None),
+    "v": ("batch", "seq_shard", "kv_heads", None),
+    "k_scale": ("batch", "seq_shard", "kv_heads"),
+    "v_scale": ("batch", "seq_shard", "kv_heads"),
+    "h": ("batch", "ssm_heads", None, None),
+    "conv_x": ("batch", None, "act_mlp"),
+    "conv_b": ("batch", None, None),
+    "conv_c": ("batch", None, None),
+    "len": (),
+}
+
+
+def cache_logical_axes(cache_shapes):
+    """Mirror an (abstract) cache tree with logical-axis tuples; leading
+    stacked-layer dims map to None."""
+    import jax
+
+    def one(path, leaf):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        tail = _CACHE_AXES.get(name, None)
+        nd = len(leaf.shape)
+        if tail is None:
+            return (None,) * nd
+        pad = nd - len(tail)
+        return (None,) * pad + tuple(tail)
+
+    return jax.tree_util.tree_map_with_path(one, cache_shapes)

@@ -1,0 +1,93 @@
+"""ShapeDtypeStruct stand-ins for every (arch x shape) cell + step builders.
+
+``input_specs(cfg, shape_name, flags)`` returns the exact abstract inputs a
+train/serve step takes — weak-type-correct, shardable, zero allocation —
+which is what the dry-run lowers against.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import SHAPES, ArchConfig
+from repro.models import RuntimeFlags, build_model
+from repro.models.configs_runtime import RuntimeFlags
+from repro.parallel.sharding import ShardingRules
+
+__all__ = ["input_specs", "shape_applicable", "default_flags"]
+
+SDS = jax.ShapeDtypeStruct
+
+
+def shape_applicable(cfg: ArchConfig, shape_name: str) -> tuple[bool, str]:
+    """Whether this (arch, shape) cell runs; reason string if skipped."""
+    seq, batch, kind = SHAPES[shape_name]
+    if shape_name == "long_500k" and not cfg.subquadratic:
+        return False, ("full-attention arch: 500k-token KV decode is "
+                       "excluded per assignment (no sub-quadratic path)")
+    return True, ""
+
+
+def default_flags(cfg: ArchConfig, shape_name: str,
+                  mesh=None) -> RuntimeFlags:
+    """Baseline runtime flags per cell (documented in DESIGN.md)."""
+    seq, batch, kind = SHAPES[shape_name]
+    big = cfg.param_count() > 100e9
+    tp = 16 if mesh is None else dict(
+        zip(mesh.axis_names, mesh.devices.shape)).get("model", 1)
+    long_ctx = kind == "decode" and seq >= 2 ** 19
+    # decode caches with kv_heads % tp != 0 would replicate over 'model';
+    # shard their sequence dim there instead (§Perf iteration 7)
+    kv_rep = kind == "decode" and cfg.num_kv_heads % tp != 0 \
+        and cfg.family != "ssm"
+    return RuntimeFlags(
+        param_dtype="bfloat16",
+        compute_dtype="bfloat16",
+        remat="full" if kind == "train" else "none",
+        fsdp=big,
+        seq_shard_decode=long_ctx or kv_rep,
+        seq_shard_axes="all" if long_ctx else "model",
+        capacity_factor=1.25 if kind == "train" else 1.5,
+    )
+
+
+def input_specs(cfg: ArchConfig, shape_name: str,
+                flags: Optional[RuntimeFlags] = None) -> dict:
+    """Abstract batch for the step of this shape.
+
+    train/prefill: token batch (prefill lowers the same teacher-forced
+    forward used for scoring; its FLOPs profile equals inference prefill).
+    decode: one-token step against a seq_len KV cache.
+    """
+    seq, batch, kind = SHAPES[shape_name]
+    if flags is None:
+        flags = default_flags(cfg, shape_name)
+    it = jnp.int32
+    if kind in ("train", "prefill"):
+        s_text = seq - (cfg.num_frontend_tokens
+                        if cfg.frontend == "vision" else 0)
+        specs = {
+            "tokens": SDS((batch, s_text), it),
+            "targets": SDS((batch, s_text), it),
+            "mask": SDS((batch, s_text), jnp.float32),
+        }
+        if cfg.frontend == "vision":
+            specs["image_embeds"] = SDS(
+                (batch, cfg.num_frontend_tokens, cfg.d_model), flags.cdtype)
+        if cfg.frontend == "audio":
+            specs["audio_embeds"] = SDS(
+                (batch, cfg.encoder_seq, cfg.d_model), flags.cdtype)
+        return specs
+    # decode step: tokens (B,1) + pos; cache is built separately
+    specs = {
+        "tokens": SDS((batch, 1), it),
+        "pos": SDS((), it),
+    }
+    if cfg.frontend == "audio":
+        specs["enc_out"] = SDS(
+            (batch, cfg.encoder_seq, cfg.d_model), flags.cdtype)
+    return specs

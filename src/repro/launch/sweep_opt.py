@@ -1,0 +1,33 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Optimized-config sweep: every cell with the beyond-paper optimizations
+(grouped MoE dispatch + fused-norm VJP are code defaults; chunked SSD and
+bf16 attention probabilities are flags).  Results tagged __opt."""
+
+from repro.configs.base import SHAPES, list_archs
+from repro.launch.dryrun import run_cell
+
+OVERRIDES = {"ssd_impl": "chunked", "attn_probs_dtype": "bfloat16"}
+
+
+def main():
+    for arch in list_archs():
+        for shape in SHAPES:
+            for mp in (False, True):
+                rec = run_cell(arch, shape, mp, skip_existing=True,
+                               opt_overrides=OVERRIDES, tag="__opt")
+                status = rec.get("status")
+                line = (f"[{status:7s}] {arch:28s} {shape:12s} "
+                        f"{'multipod' if mp else 'pod':8s} "
+                        f"t={rec.get('compile_s', 0):6.1f}s")
+                if status == "ok":
+                    line += (f" frac={rec['roofline_fraction']:.3f}"
+                             f" frac_res="
+                             f"{rec['roofline_fraction_kernel_resident']:.3f}")
+                elif status == "error":
+                    line += " " + rec["error"][:100]
+                print(line, flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,16 @@
+"""JAX execution engine for mapping schemas.
+
+The planner (repro.core) decides *where* inputs go; this package executes the
+plan on a device mesh: the map->reduce shuffle becomes a static gather whose
+communication volume is exactly the schema's communication cost, and the
+reduce phase becomes a vmapped/shard_mapped reducer function.
+"""
+
+from .engine import ReducerPlan, build_plan, run_reducers
+from .allpairs import pairwise_similarity, assemble_pair_matrix
+from .skewjoin import skew_join
+
+__all__ = [
+    "ReducerPlan", "build_plan", "run_reducers",
+    "pairwise_similarity", "assemble_pair_matrix", "skew_join",
+]

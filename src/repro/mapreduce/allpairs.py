@@ -1,0 +1,93 @@
+"""A2A applications: all-pairs similarity (common friends, drug interaction).
+
+Every input is a feature row (multi-hot friend vector, patient-history
+embedding, ...).  The planner guarantees each pair of rows meets at >= 1
+reducer; reducers compute the dense pairwise block with the MXU-friendly
+``pairwise`` kernel; results are scattered back into the (m, m) matrix.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import plan_a2a
+from repro.core.schema import MappingSchema
+
+from .engine import ReducerPlan, build_plan, run_reducers
+
+__all__ = ["pairwise_similarity", "assemble_pair_matrix", "block_similarity"]
+
+
+def block_similarity(block: jax.Array, mask: jax.Array, *,
+                     metric: str = "dot", use_kernel: bool = False):
+    """(L, d), (L,) -> (L, L) similarity of the valid rows; invalid -> 0."""
+    if use_kernel:
+        from repro.kernels.pairwise.ops import pairwise_kernel
+        sims = pairwise_kernel(block, metric=metric, interpret=True)
+    else:
+        if metric == "dot":
+            sims = block @ block.T
+        elif metric == "l2":
+            n2 = jnp.sum(block * block, axis=-1)
+            sims = n2[:, None] + n2[None, :] - 2.0 * (block @ block.T)
+        elif metric == "cosine":
+            nrm = jnp.sqrt(jnp.sum(block * block, axis=-1) + 1e-9)
+            sims = (block @ block.T) / (nrm[:, None] * nrm[None, :])
+        else:
+            raise ValueError(metric)
+    valid = mask[:, None] & mask[None, :]
+    return jnp.where(valid, sims, 0.0)
+
+
+def pairwise_similarity(
+    x: jax.Array,                       # (m, d)
+    *,
+    q: float,
+    weights=None,                       # per-input sizes; default: uniform
+    schema: Optional[MappingSchema] = None,
+    metric: str = "dot",
+    mesh=None,
+    use_kernel: bool = False,
+    pad_slots_to: int = 1,
+):
+    """All-pairs similarity executed through a mapping schema.
+
+    Returns (sims (m, m) with zero diagonal, plan, schema)."""
+    m = x.shape[0]
+    if schema is None:
+        w = np.full(m, 1.0) if weights is None else np.asarray(weights, float)
+        schema = plan_a2a(w, q)
+    plan = build_plan(
+        schema,
+        pad_reducers_to=(mesh.devices.size if mesh is not None else 1),
+        pad_slots_to=pad_slots_to,
+    )
+    fn = partial(block_similarity, metric=metric, use_kernel=use_kernel)
+    blocks = run_reducers(x, plan, fn, mesh=mesh)    # (R, L, L)
+    sims = assemble_pair_matrix(blocks, plan, m)
+    return sims, plan, schema
+
+
+def assemble_pair_matrix(blocks: jax.Array, plan: ReducerPlan, m: int):
+    """Scatter per-reducer (L, L) blocks into the global (m, m) matrix.
+
+    A pair may meet at several reducers; values agree, so `max` combine is
+    deterministic.  Diagonal is zeroed (no self-pairs in A2A)."""
+    idx = jnp.asarray(plan.idx)                       # (R, L)
+    R, L = idx.shape
+    rows = jnp.repeat(idx[:, :, None], L, axis=2)     # (R, L, L) row ids
+    cols = jnp.repeat(idx[:, None, :], L, axis=1)     # (R, L, L) col ids
+    mask = jnp.asarray(plan.mask)
+    valid = (mask[:, :, None] & mask[:, None, :])
+    flat_vals = jnp.where(valid, blocks, -jnp.inf).reshape(-1)
+    flat_rows = rows.reshape(-1)
+    flat_cols = cols.reshape(-1)
+    out = jnp.full((m, m), -jnp.inf, dtype=blocks.dtype)
+    out = out.at[flat_rows, flat_cols].max(flat_vals)
+    out = jnp.where(jnp.isneginf(out), 0.0, out)
+    return out * (1.0 - jnp.eye(m, dtype=blocks.dtype))

@@ -1,0 +1,140 @@
+"""Mapping schema -> static gather plan -> sharded reducer execution.
+
+The MapReduce shuffle of the paper is adapted to TPU/JAX as follows
+(DESIGN.md "hardware adaptation"):
+
+  * reducers become *reducer slots*, a leading array dimension sharded across
+    the device mesh;
+  * the map->reduce shuffle becomes ``jnp.take`` from the input array with a
+    static index matrix computed from the schema — XLA lowers this to
+    all-gather/collective traffic whose volume is the schema's communication
+    cost (this is what the roofline benchmark measures);
+  * the reduce function is vmapped over slots, so every device processes its
+    slots in parallel (the MXU does the per-reducer all-pairs work through
+    the Pallas ``pairwise`` kernel).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.schema import MappingSchema
+
+__all__ = ["ReducerPlan", "build_plan", "run_reducers"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ReducerPlan:
+    """Static arrays derived from a MappingSchema.
+
+    idx   (R, L) int32 — input ids per reducer slot; padded entries point at
+          input 0 and are masked out.
+    mask  (R, L) bool  — slot validity.
+    """
+
+    idx: np.ndarray
+    mask: np.ndarray
+    num_reducers: int          # before padding
+    comm_cost: float           # schema communication cost (weighted bytes)
+    max_inputs: int
+
+    @property
+    def R(self) -> int:
+        return int(self.idx.shape[0])
+
+    @property
+    def L(self) -> int:
+        return int(self.idx.shape[1])
+
+
+def build_plan(schema: MappingSchema, *, pad_reducers_to: int = 1,
+               pad_slots_to: int = 1) -> ReducerPlan:
+    """Flatten a schema into (idx, mask).  ``pad_reducers_to`` rounds the
+    reducer count up to a multiple (device count), ``pad_slots_to`` rounds the
+    per-reducer slot count (kernel tile alignment)."""
+    expanded = schema.expand()
+    R0 = len(expanded)
+    L0 = max((len(ids) for ids in expanded), default=1)
+    L = -(-L0 // pad_slots_to) * pad_slots_to
+    R = -(-max(R0, 1) // pad_reducers_to) * pad_reducers_to
+    idx = np.zeros((R, L), dtype=np.int32)
+    mask = np.zeros((R, L), dtype=bool)
+    for r, ids in enumerate(expanded):
+        idx[r, : len(ids)] = ids
+        mask[r, : len(ids)] = True
+    return ReducerPlan(idx=idx, mask=mask, num_reducers=R0,
+                       comm_cost=schema.communication_cost(), max_inputs=L0)
+
+
+def run_reducers(
+    inputs: jax.Array,                     # (m, d) one row per input
+    plan: ReducerPlan,
+    reducer_fn: Callable[[jax.Array, jax.Array], jax.Array],
+    *,
+    mesh: Optional[jax.sharding.Mesh] = None,
+    shard_axes: Optional[tuple[str, ...]] = None,
+    donate: bool = False,
+):
+    """Execute ``reducer_fn(block (L, d), mask (L,)) -> pytree`` per reducer.
+
+    With a mesh, reducer slots are sharded over ``shard_axes`` (all mesh axes
+    by default) and the input table is left replicated — the gather *is* the
+    map->reduce shuffle.  Without a mesh, runs locally (CPU tests).
+    """
+    idx = jnp.asarray(plan.idx)
+    mask = jnp.asarray(plan.mask)
+
+    def _run(x, idx, mask):
+        gathered = jnp.take(x, idx, axis=0)          # (R, L, d) — the shuffle
+        gathered = jnp.where(mask[..., None], gathered, 0)
+        return jax.vmap(reducer_fn)(gathered, mask)
+
+    if mesh is None:
+        return jax.jit(_run)(inputs, idx, mask)
+
+    axes = shard_axes if shard_axes is not None else mesh.axis_names
+    P = jax.sharding.PartitionSpec
+    red_sharding = jax.sharding.NamedSharding(mesh, P(axes))
+    rep = jax.sharding.NamedSharding(mesh, P())
+    fn = jax.jit(
+        _run,
+        in_shardings=(rep, red_sharding, red_sharding),
+        out_shardings=red_sharding,
+    )
+    return fn(inputs, idx, mask)
+
+
+def lower_reducers(
+    input_shape: tuple[int, int],
+    plan: ReducerPlan,
+    reducer_fn: Callable,
+    mesh: jax.sharding.Mesh,
+    dtype=jnp.float32,
+    shard_axes: Optional[tuple[str, ...]] = None,
+):
+    """Lower (no execution) for dry-run / roofline analysis."""
+    idx = jax.ShapeDtypeStruct(plan.idx.shape, jnp.int32)
+    mask = jax.ShapeDtypeStruct(plan.mask.shape, jnp.bool_)
+    x = jax.ShapeDtypeStruct(input_shape, dtype)
+
+    def _run(x, idx, mask):
+        gathered = jnp.take(x, idx, axis=0)
+        gathered = jnp.where(mask[..., None], gathered, 0)
+        return jax.vmap(reducer_fn)(gathered, mask)
+
+    axes = shard_axes if shard_axes is not None else mesh.axis_names
+    P = jax.sharding.PartitionSpec
+    red_sharding = jax.sharding.NamedSharding(mesh, P(axes))
+    rep = jax.sharding.NamedSharding(mesh, P())
+    fn = jax.jit(
+        _run,
+        in_shardings=(rep, red_sharding, red_sharding),
+        out_shardings=red_sharding,
+    )
+    return fn.lower(x, idx, mask)

@@ -1,0 +1,94 @@
+"""X2Y application: skew join of X(A, B) and Y(B, C) on a heavy hitter.
+
+All X- and Y-tuples sharing the heavy-hitter B-value must pairwise meet
+(Example 3 of the paper).  The X2Y planner packs tuples into bins; each
+reducer joins one X-bin against one Y-bin.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import plan_x2y
+from repro.core.schema import MappingSchema
+
+__all__ = ["skew_join"]
+
+
+def skew_join(
+    x_vals: jax.Array,            # (mx, dx) — A-side payloads for one HH key
+    y_vals: jax.Array,            # (my, dy) — C-side payloads
+    *,
+    q: float,
+    wx=None,
+    wy=None,
+    schema: Optional[MappingSchema] = None,
+    mesh=None,
+):
+    """Join every X row with every Y row through an X2Y mapping schema.
+
+    Returns (pairs (mx, my, dx+dy), schema).  The dense output is assembled
+    by scattering per-reducer cross products — each (x, y) pair is produced
+    by >= 1 reducer (coverage guarantee), duplicates agree.
+    """
+    mx, my = x_vals.shape[0], y_vals.shape[0]
+    if schema is None:
+        wx_ = np.full(mx, 1.0) if wx is None else np.asarray(wx, float)
+        wy_ = np.full(my, 1.0) if wy is None else np.asarray(wy, float)
+        schema = plan_x2y(wx_, wy_, q)
+
+    # split bins back into X-part / Y-part (ids < mx are X)
+    x_bins = [b for b in schema.bins if b and b[0] < mx]
+    y_bins = [[i - mx for i in b] for b in schema.bins if b and b[0] >= mx]
+    Lx = max(len(b) for b in x_bins)
+    Ly = max(len(b) for b in y_bins)
+    xb = np.zeros((len(x_bins), Lx), np.int32)
+    xm = np.zeros((len(x_bins), Lx), bool)
+    for i, b in enumerate(x_bins):
+        xb[i, : len(b)] = b
+        xm[i, : len(b)] = True
+    yb = np.zeros((len(y_bins), Ly), np.int32)
+    ym = np.zeros((len(y_bins), Ly), bool)
+    for i, b in enumerate(y_bins):
+        yb[i, : len(b)] = b
+        ym[i, : len(b)] = True
+
+    # reducer -> (x_bin, y_bin): planner emits [x_bin_id, y_bin_id_global]
+    nx = len(x_bins)
+    red = np.asarray(
+        [[r[0], r[1] - nx] for r in schema.reducers], np.int32)  # (R, 2)
+
+    def _join(xv, yv, xb, xm, yb, ym, red):
+        # gather bins per reducer — this is the shuffle
+        bx = jnp.take(xb, red[:, 0], axis=0)         # (R, Lx)
+        mxk = jnp.take(xm, red[:, 0], axis=0)
+        by = jnp.take(yb, red[:, 1], axis=0)         # (R, Ly)
+        myk = jnp.take(ym, red[:, 1], axis=0)
+        gx = jnp.take(xv, bx, axis=0)                # (R, Lx, dx)
+        gy = jnp.take(yv, by, axis=0)                # (R, Ly, dy)
+        # per-reducer cross product
+        R = bx.shape[0]
+        gxx = jnp.broadcast_to(gx[:, :, None, :], (R, Lx, Ly, gx.shape[-1]))
+        gyy = jnp.broadcast_to(gy[:, None, :, :], (R, Lx, Ly, gy.shape[-1]))
+        joined = jnp.concatenate([gxx, gyy], axis=-1)
+        valid = mxk[:, :, None] & myk[:, None, :]
+        return joined, valid, bx, by
+
+    joined, valid, bx, by = jax.jit(_join)(
+        jnp.asarray(x_vals), jnp.asarray(y_vals), jnp.asarray(xb),
+        jnp.asarray(xm), jnp.asarray(yb), jnp.asarray(ym), jnp.asarray(red))
+
+    # assemble into (mx, my, dx+dy)
+    rows = jnp.broadcast_to(bx[:, :, None], valid.shape)
+    cols = jnp.broadcast_to(by[:, None, :], valid.shape)
+    d = joined.shape[-1]
+    out = jnp.zeros((mx, my, d), joined.dtype)
+    flat_r = jnp.where(valid, rows, mx).reshape(-1)   # invalid -> OOB drop
+    flat_c = jnp.where(valid, cols, 0).reshape(-1)
+    out = out.at[flat_r, flat_c].set(
+        joined.reshape(-1, d), mode="drop")
+    return out, schema

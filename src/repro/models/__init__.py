@@ -1,0 +1,12 @@
+"""Model zoo: composable pure-JAX transformer / MoE / SSM / hybrid blocks.
+
+Everything is functional: ``init_*`` builds param pytrees, ``apply``-style
+functions are pure.  Layers are tagged with logical sharding axes
+(repro.parallel.sharding); layer stacks are scanned so 90-layer models lower
+to one-layer HLO.
+"""
+
+from .lm import LMModel, build_model
+from .configs_runtime import RuntimeFlags
+
+__all__ = ["LMModel", "build_model", "RuntimeFlags"]

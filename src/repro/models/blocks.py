@@ -1,0 +1,253 @@
+"""Layer blocks and scanned stacks.
+
+An architecture is a repeating *pattern* of LayerSpecs (e.g. Gemma-3:
+5 local-window layers + 1 global layer; Jamba: 1 attention + 7 Mamba with
+MoE every other FFN).  Full pattern repetitions are stacked and lax.scan'ed
+(one-superblock HLO regardless of depth — critical for 512-device compile
+times); the remainder layers form an unrolled tail.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import ShardingRules
+
+from .layers import (
+    AttnSpec,
+    attn_apply,
+    attn_init,
+    attn_init_cache,
+    mlp_apply,
+    mlp_init,
+    rms_norm,
+)
+from .mamba import mamba_apply, mamba_init, mamba_init_cache
+from .moe import moe_apply, moe_init
+
+__all__ = ["LayerSpec", "StackDef", "stack_init", "stack_apply",
+           "stack_init_cache"]
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    mixer: str = "attn"          # 'attn' | 'mamba'
+    window: int = 0              # sliding window (attn only; 0 = full)
+    ffn: str = "dense"           # 'dense' | 'moe' | 'none'
+    cross: bool = False          # cross-attention (enc-dec decoder)
+    causal: bool = True
+
+
+@dataclasses.dataclass(frozen=True)
+class StackDef:
+    pattern: tuple[LayerSpec, ...]
+    n_blocks: int                # scanned repetitions of the pattern
+    tail: tuple[LayerSpec, ...]  # unrolled remainder
+
+    @property
+    def num_layers(self) -> int:
+        return self.n_blocks * len(self.pattern) + len(self.tail)
+
+
+# --------------------------------------------------------------------- init
+
+def _layer_init(key, spec: LayerSpec, cfg, flags):
+    ks = jax.random.split(key, 6)
+    dtype = flags.pdtype
+    p: dict = {"ln1": jnp.zeros((cfg.d_model,), jnp.float32)}
+    ax: dict = {"ln1": ("embed",)}
+    if spec.mixer == "attn":
+        mp, max_ = attn_init(ks[0], cfg.d_model, _attn_spec(spec, cfg), dtype)
+    else:
+        mp, max_ = mamba_init(ks[0], cfg.d_model, cfg.ssm_state, dtype)
+    p["mixer"], ax["mixer"] = mp, max_
+    if spec.cross:
+        cp, cax = attn_init(ks[1], cfg.d_model, _cross_spec(cfg), dtype)
+        p["cross"], ax["cross"] = cp, cax
+        p["ln_cross"] = jnp.zeros((cfg.d_model,), jnp.float32)
+        ax["ln_cross"] = ("embed",)
+    if spec.ffn != "none":
+        p["ln2"] = jnp.zeros((cfg.d_model,), jnp.float32)
+        ax["ln2"] = ("embed",)
+        if spec.ffn == "moe":
+            fp, fax = moe_init(ks[2], cfg.d_model, cfg.d_ff,
+                               cfg.num_experts, dtype)
+        else:
+            fp, fax = mlp_init(ks[2], cfg.d_model, cfg.d_ff, dtype,
+                               variant=cfg.mlp_variant)
+        p["ffn"], ax["ffn"] = fp, fax
+    return p, ax
+
+
+def _attn_spec(spec: LayerSpec, cfg) -> AttnSpec:
+    return AttnSpec(
+        num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
+        head_dim=cfg.head_dim_(), window=spec.window, causal=spec.causal,
+        rope_theta=cfg.rope_theta)
+
+
+def _cross_spec(cfg) -> AttnSpec:
+    return AttnSpec(
+        num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
+        head_dim=cfg.head_dim_(), window=0, causal=False, use_rope=False)
+
+
+def stack_init(key, stack: StackDef, cfg, flags):
+    """Returns (params, logical_axes).  Scanned positions get a leading
+    'layers' axis of size n_blocks."""
+    kb, kt = jax.random.split(key)
+    params: dict = {}
+    axes: dict = {}
+    if stack.n_blocks > 0:
+        for i, spec in enumerate(stack.pattern):
+            keys = jax.random.split(
+                jax.random.fold_in(kb, i), stack.n_blocks)
+            init_one = functools.partial(_layer_init, spec=spec, cfg=cfg,
+                                         flags=flags)
+            stacked_p = jax.vmap(lambda k: init_one(k)[0])(keys)
+            _, ax = _layer_init(keys[0], spec, cfg, flags)
+            params[f"pos{i}"] = stacked_p
+            axes[f"pos{i}"] = jax.tree.map(
+                lambda a: ("layers",) + tuple(a), ax,
+                is_leaf=lambda a: isinstance(a, tuple))
+    for j, spec in enumerate(stack.tail):
+        p, ax = _layer_init(jax.random.fold_in(kt, j), spec, cfg, flags)
+        params[f"tail{j}"] = p
+        axes[f"tail{j}"] = ax
+    return params, axes
+
+
+# -------------------------------------------------------------------- apply
+
+def _block_apply(p, x, spec: LayerSpec, cfg, flags, rules: ShardingRules,
+                 cache=None, positions=None, enc_out=None):
+    new_cache = {}
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    import jax.numpy as _jnp
+    if spec.mixer == "attn":
+        y, mc = attn_apply(
+            p["mixer"], h, _attn_spec(spec, cfg), rules,
+            cache=None if cache is None else cache["mixer"],
+            positions=positions, use_pallas=flags.use_pallas,
+            probs_dtype=_jnp.dtype(flags.attn_probs_dtype))
+    else:
+        meta = cfg.mamba_meta()
+        y, mc = mamba_apply(
+            p["mixer"], h, meta, rules,
+            cache=None if cache is None else cache["mixer"],
+            use_pallas=flags.use_pallas, ssd_impl=flags.ssd_impl)
+    x = x + y
+    if cache is not None:
+        new_cache["mixer"] = mc
+    aux = jnp.zeros((), jnp.float32)
+    if spec.cross:
+        assert enc_out is not None
+        h = rms_norm(x, p["ln_cross"], cfg.norm_eps)
+        y, _ = attn_apply(p["cross"], h, _cross_spec(cfg), rules,
+                          kv_src=enc_out)
+        x = x + y
+    if spec.ffn != "none":
+        h = rms_norm(x, p["ln2"], cfg.norm_eps)
+        if spec.ffn == "moe":
+            y, moe_aux = moe_apply(
+                p["ffn"], h, top_k=cfg.experts_per_token,
+                capacity_factor=flags.capacity_factor, rules=rules)
+            aux = aux + moe_aux["load_balance"]
+        else:
+            y = mlp_apply(p["ffn"], h, rules)
+        x = x + y
+    return x, new_cache if cache is not None else None, aux
+
+
+def _remat(fn, flags):
+    if flags.remat == "none":
+        return fn
+    if flags.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn)
+
+
+def stack_apply(params, x, stack: StackDef, cfg, flags,
+                rules: ShardingRules, *, cache=None, positions=None,
+                enc_out=None):
+    """Returns (x, new_cache, aux_sum)."""
+    aux_total = jnp.zeros((), jnp.float32)
+
+    def superblock(x, block_params, block_cache):
+        aux_sb = jnp.zeros((), jnp.float32)
+        new_bc = {}
+        for i, spec in enumerate(stack.pattern):
+            x, nc, aux = _block_apply(
+                block_params[f"pos{i}"], x, spec, cfg, flags, rules,
+                cache=None if block_cache is None else block_cache[f"pos{i}"],
+                positions=positions, enc_out=enc_out)
+            if block_cache is not None:
+                new_bc[f"pos{i}"] = nc
+            aux_sb = aux_sb + aux
+        return x, (new_bc if block_cache is not None else None), aux_sb
+
+    new_cache: dict = {}
+    if stack.n_blocks > 0:
+        scanned_params = {f"pos{i}": params[f"pos{i}"]
+                          for i in range(len(stack.pattern))}
+        scanned_cache = (None if cache is None else
+                         {f"pos{i}": cache[f"pos{i}"]
+                          for i in range(len(stack.pattern))})
+
+        if cache is None:
+            def body(carry, xs):
+                x, aux = carry
+                x, _, aux_sb = _remat(superblock, flags)(x, xs, None)
+                return (x, aux + aux_sb), None
+
+            (x, aux_total), _ = jax.lax.scan(
+                body, (x, aux_total), scanned_params)
+        else:
+            def body(carry, xs):
+                x, aux = carry
+                bp, bc = xs
+                x, nbc, aux_sb = superblock(x, bp, bc)
+                return (x, aux + aux_sb), nbc
+
+            (x, aux_total), new_scan_cache = jax.lax.scan(
+                body, (x, aux_total), (scanned_params, scanned_cache))
+            new_cache.update(new_scan_cache)
+
+    for j, spec in enumerate(stack.tail):
+        x, nc, aux = _block_apply(
+            params[f"tail{j}"], x, spec, cfg, flags, rules,
+            cache=None if cache is None else cache[f"tail{j}"],
+            positions=positions, enc_out=enc_out)
+        if cache is not None:
+            new_cache[f"tail{j}"] = nc
+        aux_total = aux_total + aux
+    return x, (new_cache if cache is not None else None), aux_total
+
+
+# -------------------------------------------------------------------- cache
+
+def _layer_init_cache(spec: LayerSpec, cfg, flags, batch, max_len):
+    if spec.mixer == "attn":
+        return {"mixer": attn_init_cache(
+            batch, max_len, _attn_spec(spec, cfg), flags.cdtype,
+            kv_quant=flags.kv_quant)}
+    return {"mixer": mamba_init_cache(batch, cfg.mamba_meta(), flags.cdtype)}
+
+
+def stack_init_cache(stack: StackDef, cfg, flags, batch, max_len):
+    cache: dict = {}
+    for i, spec in enumerate(stack.pattern):
+        one = _layer_init_cache(spec, cfg, flags, batch, max_len)
+        cache[f"pos{i}"] = jax.tree.map(
+            lambda a: jnp.broadcast_to(
+                a[None], (stack.n_blocks,) + a.shape), one)
+    for j, spec in enumerate(stack.tail):
+        cache[f"tail{j}"] = _layer_init_cache(spec, cfg, flags, batch,
+                                              max_len)
+    return cache

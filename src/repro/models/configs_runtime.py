@@ -1,0 +1,36 @@
+"""Runtime (non-architecture) knobs shared by train/serve/dry-run."""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class RuntimeFlags:
+    param_dtype: str = "bfloat16"
+    compute_dtype: str = "bfloat16"
+    remat: str = "full"              # 'none' | 'full' | 'dots'
+    use_pallas: bool = False         # TPU kernels (interpret on CPU tests)
+    ssd_impl: str = "step"           # 'step' (baseline) | 'chunked'
+    kv_quant: str = "none"           # 'none' | 'int8' (halves KV capacity)
+    attn_probs_dtype: str = "float32"  # 'bfloat16' halves PV-matmul traffic
+    kernel_resident_attn: bool = False  # roofline: scores live in VMEM
+                                        # (Pallas flash kernel accounting)
+    moe_mode: str = "auto"           # 'ep' | 'tp' | 'auto'
+    capacity_factor: float = 1.25
+    fsdp: bool = False               # ZeRO-3 param sharding over data axes
+    seq_shard_decode: bool = False   # shard KV cache sequence over 'model'
+    seq_shard_axes: str = "model"    # 'model' | 'all' (long-context, B=1)
+    scan_layers: bool = True
+    grad_compression: str = "none"   # 'none' | 'bf16' | 'int8'
+    zero1: bool = True               # shard optimizer state over data axes
+
+    @property
+    def pdtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    @property
+    def cdtype(self):
+        return jnp.dtype(self.compute_dtype)

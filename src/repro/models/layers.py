@@ -1,0 +1,310 @@
+"""Primitive layers: norm, RoPE, GQA attention (+KV cache), MLP, embedding.
+
+Parameters are dicts of arrays; every init returns (params, logical_axes)
+where logical_axes mirrors the param tree with tuples of logical axis names
+consumed by repro.parallel.sharding.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import ShardingRules, shard_constraint
+
+# ---------------------------------------------------------------- utilities
+
+def _normal(key, shape, scale, dtype):
+    return (scale * jax.random.normal(key, shape, jnp.float32)).astype(dtype)
+
+
+import functools as _functools
+
+
+@_functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def rms_norm(x, gamma, eps):
+    """Fused RMSNorm: f32 math inside, activation-dtype in/out.
+
+    The hand-written VJP keeps the f32 gradient chain inside one fused
+    expression and emits cotangents in x.dtype — without it, autodiff
+    materializes ~5 full (B, S, d) f32 tensors per norm in the backward
+    pass (measured: the dominant HBM-traffic term on every dense arch;
+    see EXPERIMENTS.md §Perf iteration 2)."""
+    out, _ = _rms_norm_fwd(x, gamma, eps)
+    return out
+
+
+def _rms_norm_fwd(x, gamma, eps):
+    x32 = x.astype(jnp.float32)
+    rstd = jax.lax.rsqrt(jnp.mean(jnp.square(x32), -1, keepdims=True) + eps)
+    out = (x32 * rstd * (1.0 + gamma.astype(jnp.float32))).astype(x.dtype)
+    return out, (x, rstd, gamma)
+
+
+def _rms_norm_bwd(eps, res, g):
+    x, rstd, gamma = res
+    x32 = x.astype(jnp.float32)
+    g32 = g.astype(jnp.float32)
+    xhat = x32 * rstd
+    dxhat = g32 * (1.0 + gamma.astype(jnp.float32))
+    dgamma = jnp.sum(g32 * xhat,
+                     axis=tuple(range(x.ndim - 1))).astype(gamma.dtype)
+    dx = rstd * (dxhat - xhat * jnp.mean(dxhat * xhat, -1, keepdims=True))
+    return dx.astype(x.dtype), dgamma
+
+
+rms_norm.defvjp(_rms_norm_fwd, _rms_norm_bwd)
+
+
+def rope(x, positions, theta: float):
+    """x (..., S, H, D) rotated by position; D even."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., :, None].astype(jnp.float32) * freq  # (..., S, half)
+    sin = jnp.sin(ang)[..., :, None, :]
+    cos = jnp.cos(ang)[..., :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1).astype(x.dtype)
+
+
+# ------------------------------------------------------------------ embed
+
+def embed_init(key, vocab, d_model, dtype):
+    p = {"table": _normal(key, (vocab, d_model), 0.02, dtype)}
+    ax = {"table": ("vocab", "embed")}
+    return p, ax
+
+
+def embed_apply(params, tokens, rules: ShardingRules):
+    out = jnp.take(params["table"], tokens, axis=0)
+    return shard_constraint(out, rules, "batch", None, "act_embed")
+
+
+def unembed_apply(params, x, rules: ShardingRules):
+    logits = jnp.einsum("bsd,vd->bsv", x, params["table"])
+    return shard_constraint(logits, rules, "batch", None, "act_vocab")
+
+
+# ------------------------------------------------------------------ MLP
+
+def mlp_init(key, d_model, d_ff, dtype, variant: str = "swiglu"):
+    k1, k2, k3 = jax.random.split(key, 3)
+    scale_in = d_model ** -0.5
+    scale_out = d_ff ** -0.5
+    if variant == "gelu":           # classic 2-matrix MLP (Whisper, Granite)
+        p = {
+            "wi": _normal(k1, (d_model, d_ff), scale_in, dtype),
+            "wo": _normal(k3, (d_ff, d_model), scale_out, dtype),
+        }
+        ax = {"wi": ("embed", "mlp"), "wo": ("mlp", "embed")}
+        return p, ax
+    p = {
+        "wi_gate": _normal(k1, (d_model, d_ff), scale_in, dtype),
+        "wi_up": _normal(k2, (d_model, d_ff), scale_in, dtype),
+        "wo": _normal(k3, (d_ff, d_model), scale_out, dtype),
+    }
+    ax = {
+        "wi_gate": ("embed", "mlp"),
+        "wi_up": ("embed", "mlp"),
+        "wo": ("mlp", "embed"),
+    }
+    return p, ax
+
+
+def mlp_apply(params, x, rules: ShardingRules):
+    if "wi" in params:              # gelu variant
+        h = jnp.einsum("bsd,df->bsf", x, params["wi"])
+        h = shard_constraint(jax.nn.gelu(h), rules, "batch", None, "act_mlp")
+    else:
+        h = jnp.einsum("bsd,df->bsf", x, params["wi_gate"])
+        u = jnp.einsum("bsd,df->bsf", x, params["wi_up"])
+        h = shard_constraint(jax.nn.silu(h) * u, rules,
+                             "batch", None, "act_mlp")
+    out = jnp.einsum("bsf,fd->bsd", h, params["wo"])
+    return shard_constraint(out, rules, "batch", None, "act_embed")
+
+
+# ------------------------------------------------------------ GQA attention
+
+@dataclasses.dataclass(frozen=True)
+class AttnSpec:
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+    window: int = 0            # 0 = full attention
+    causal: bool = True
+    rope_theta: float = 10000.0
+    use_rope: bool = True
+
+
+def attn_init(key, d_model, spec: AttnSpec, dtype):
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    H, Hkv, D = spec.num_heads, spec.num_kv_heads, spec.head_dim
+    s = d_model ** -0.5
+    p = {
+        "wq": _normal(kq, (d_model, H, D), s, dtype),
+        "wk": _normal(kk, (d_model, Hkv, D), s, dtype),
+        "wv": _normal(kv, (d_model, Hkv, D), s, dtype),
+        "wo": _normal(ko, (H, D, d_model), (H * D) ** -0.5, dtype),
+    }
+    ax = {
+        "wq": ("embed", "heads", "head_dim"),
+        "wk": ("embed", "kv_heads", "head_dim"),
+        "wv": ("embed", "kv_heads", "head_dim"),
+        "wo": ("heads", "head_dim", "embed"),
+    }
+    return p, ax
+
+
+def _grouped_attention(q, k, v, *, causal, window, q_pos, kv_len,
+                       rules: ShardingRules, probs_dtype=jnp.float32):
+    """q (B,S,H,D), k/v (B,Skv,Hkv,D) without repeating KV heads.
+
+    q_pos: (S,) global positions of queries; keys occupy positions [0, Skv)
+    masked by kv_len (scalar or (B,)).  Softmax in fp32.
+    """
+    B, S, H, D = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    qg = q.reshape(B, S, Hkv, G, D)
+    scale = D ** -0.5
+    scores = jnp.einsum("bshgd,bthd->bhgst", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale  # (B,Hkv,G,S,Skv)
+    kv_pos = jnp.arange(Skv)
+    mask = kv_pos[None, :] < (
+        kv_len if jnp.ndim(kv_len) else jnp.full((1,), kv_len))[:, None]
+    mask = mask[:, None, None, None, :]                  # (B,1,1,1,Skv)
+    rel = q_pos[:, None] - kv_pos[None, :]               # (S, Skv)
+    if causal:
+        mask = mask & (rel >= 0)[None, None, None]
+    if window and window > 0:
+        mask = mask & (rel < window)[None, None, None]
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(probs_dtype)
+    out = jnp.einsum("bhgst,bthd->bshgd", probs, v.astype(probs_dtype))
+    out = out.reshape(B, S, H, D)
+    return shard_constraint(out.astype(q.dtype), rules,
+                            "batch", None, "act_heads", "head_dim")
+
+
+def _kv_quantize(t):
+    """Symmetric per-(token, head) int8: t (B,S,H,D) -> (int8, f32 scale)."""
+    amax = jnp.max(jnp.abs(t.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(t.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale[..., 0]
+
+
+def _kv_dequantize(q, scale, dtype):
+    return (q.astype(jnp.float32) * scale[..., None]).astype(dtype)
+
+
+def attn_apply(params, x, spec: AttnSpec, rules: ShardingRules, *,
+               cache: Optional[dict] = None,
+               positions: Optional[jax.Array] = None,
+               use_pallas: bool = False,
+               kv_src: Optional[jax.Array] = None,
+               probs_dtype=jnp.float32):
+    """Self-attention (or cross-attention when kv_src is the encoder output).
+
+    cache: {'k','v': (B, Smax, Hkv, D), 'len': ()} — decode appends at 'len'.
+    Returns (y, new_cache).
+    """
+    B, S, _ = x.shape
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    q = shard_constraint(q, rules, "batch", None, "act_heads", "head_dim")
+    src = x if kv_src is None else kv_src
+    k = jnp.einsum("bsd,dhk->bshk", src, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", src, params["wv"])
+
+    if positions is None:
+        positions = jnp.arange(S)
+    if spec.use_rope:
+        q = rope(q, positions, spec.rope_theta)
+        if kv_src is None:
+            k = rope(k, positions, spec.rope_theta)
+
+    new_cache = None
+    if cache is not None:
+        # decode: write this step's k/v at index cache['len'].  Windowed
+        # layers use a RING buffer of size `window` (allocated that way by
+        # attn_init_cache): absolute position -> slot pos % window.  Keys are
+        # RoPE'd with absolute positions before writing, so ring entries stay
+        # valid; every live slot is inside the window by construction, which
+        # replaces the causal/window mask with a plain validity mask.
+        idx = cache["len"]
+        cache_len = cache["k"].shape[1]
+        ring = spec.window > 0 and cache_len <= spec.window
+        write_idx = (idx % cache_len) if ring else idx
+        quant = cache["k"].dtype == jnp.int8
+        if quant:
+            # int8 KV (kv_quant='int8'): 2x cache capacity; per-(token,
+            # head) symmetric scales stored alongside
+            kq, ks = _kv_quantize(k)
+            vq, vs = _kv_quantize(v)
+            ck = jax.lax.dynamic_update_slice_in_dim(
+                cache["k"], kq, write_idx, axis=1)
+            cv = jax.lax.dynamic_update_slice_in_dim(
+                cache["v"], vq, write_idx, axis=1)
+            cks = jax.lax.dynamic_update_slice_in_dim(
+                cache["k_scale"], ks, write_idx, axis=1)
+            cvs = jax.lax.dynamic_update_slice_in_dim(
+                cache["v_scale"], vs, write_idx, axis=1)
+            new_cache = {"k": ck, "v": cv, "k_scale": cks, "v_scale": cvs,
+                         "len": idx + S}
+            k = _kv_dequantize(ck, cks, x.dtype)
+            v = _kv_dequantize(cv, cvs, x.dtype)
+        else:
+            ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(
+                cache["k"].dtype), write_idx, axis=1)
+            cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(
+                cache["v"].dtype), write_idx, axis=1)
+            new_cache = {"k": ck, "v": cv, "len": idx + S}
+            k, v = ck, cv
+        k = shard_constraint(k, rules, "batch", "seq_shard", None, None)
+        v = shard_constraint(v, rules, "batch", "seq_shard", None, None)
+        kv_len = jnp.minimum(idx + S, cache_len)
+        out = _grouped_attention(
+            q, k, v, causal=spec.causal and not ring,
+            window=0 if ring else spec.window,
+            q_pos=positions, kv_len=kv_len, rules=rules,
+            probs_dtype=probs_dtype)
+    else:
+        kv_len = k.shape[1]
+        if use_pallas and spec.causal and kv_override is None:
+            from repro.kernels.flash.ops import mha
+            out = mha(q, k, v, causal=True, window=spec.window,
+                      use_kernel=True, interpret=True)
+        else:
+            out = _grouped_attention(
+                q, k, v, causal=spec.causal, window=spec.window,
+                q_pos=positions, kv_len=kv_len, rules=rules,
+                probs_dtype=probs_dtype)
+
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    return shard_constraint(y, rules, "batch", None, "act_embed"), new_cache
+
+
+def attn_init_cache(batch, max_len, spec: AttnSpec, dtype,
+                    kv_quant: str = "none"):
+    Hkv, D = spec.num_kv_heads, spec.head_dim
+    if spec.window > 0:
+        max_len = min(max_len, spec.window)   # ring buffer for SWA layers
+    if kv_quant == "int8":
+        return {
+            "k": jnp.zeros((batch, max_len, Hkv, D), jnp.int8),
+            "v": jnp.zeros((batch, max_len, Hkv, D), jnp.int8),
+            "k_scale": jnp.zeros((batch, max_len, Hkv), jnp.float32),
+            "v_scale": jnp.zeros((batch, max_len, Hkv), jnp.float32),
+            "len": jnp.zeros((), jnp.int32),
+        }
+    return {
+        "k": jnp.zeros((batch, max_len, Hkv, D), dtype),
+        "v": jnp.zeros((batch, max_len, Hkv, D), dtype),
+        "len": jnp.zeros((), jnp.int32),
+    }

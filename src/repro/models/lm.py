@@ -1,0 +1,175 @@
+"""Top-level language models: decoder-only, encoder-decoder, frontend stubs.
+
+``build_model(cfg, flags)`` returns an ``LMModel`` exposing:
+
+  init(key)                         -> params
+  param_logical_axes()              -> pytree of logical axis tuples
+  loss(params, batch)               -> (scalar, metrics)     [train fwd]
+  init_cache(batch, max_len)        -> decode cache
+  decode_step(params, cache, batch) -> (logits, new_cache)   [serve fwd]
+
+batch dicts:
+  decoder-only: {'tokens' (B,S), 'targets' (B,S), 'mask' (B,S)}
+  audio:        + {'audio_embeds' (B, S_enc, d)}   (frontend stub)
+  vision:       + {'image_embeds' (B, F, d)}       (frontend stub)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.parallel.sharding import ShardingRules, shard_constraint
+
+from .blocks import (
+    LayerSpec,
+    StackDef,
+    stack_apply,
+    stack_init,
+    stack_init_cache,
+)
+from .configs_runtime import RuntimeFlags
+from .layers import embed_apply, embed_init, rms_norm, unembed_apply
+
+__all__ = ["LMModel", "build_model"]
+
+
+def _specs_to_stack(kinds: list[dict], period: int) -> StackDef:
+    specs = [LayerSpec(mixer=k["mixer"], window=k["window"], ffn=k["ffn"],
+                       cross=k["cross"]) for k in kinds]
+    n = len(specs)
+    if period <= 1:
+        # uniform stack: scan every layer individually
+        assert all(s == specs[0] for s in specs)
+        return StackDef(pattern=(specs[0],), n_blocks=n, tail=())
+    n_blocks = n // period
+    tail = tuple(specs[n_blocks * period:])
+    # all full blocks must share the pattern
+    pattern = tuple(specs[:period])
+    for b in range(1, n_blocks):
+        assert tuple(specs[b * period:(b + 1) * period]) == pattern, \
+            "layer kinds are not periodic"
+    return StackDef(pattern=pattern, n_blocks=n_blocks, tail=tail)
+
+
+@dataclasses.dataclass(frozen=True)
+class LMModel:
+    cfg: ArchConfig
+    flags: RuntimeFlags
+    rules: ShardingRules
+    stack: StackDef
+    enc_stack: Optional[StackDef]
+
+    # ------------------------------------------------------------------ init
+    def init(self, key):
+        kd, ke, kenc = jax.random.split(key, 3)
+        params: dict = {}
+        axes: dict = {}
+        params["embed"], axes["embed"] = embed_init(
+            ke, self.cfg.padded_vocab(), self.cfg.d_model, self.flags.pdtype)
+        params["stack"], axes["stack"] = stack_init(
+            kd, self.stack, self.cfg, self.flags)
+        params["ln_f"] = jnp.zeros((self.cfg.d_model,), jnp.float32)
+        axes["ln_f"] = ("embed",)
+        if self.enc_stack is not None:
+            params["enc_stack"], axes["enc_stack"] = stack_init(
+                kenc, self.enc_stack, self.cfg, self.flags)
+            params["enc_ln_f"] = jnp.zeros((self.cfg.d_model,), jnp.float32)
+            axes["enc_ln_f"] = ("embed",)
+        object.__setattr__(self, "_axes_cache", axes)
+        return params
+
+    def param_logical_axes(self):
+        if not hasattr(self, "_axes_cache"):
+            # build axes without materializing params
+            jax.eval_shape(self.init, jax.random.key(0))
+        return self._axes_cache
+
+    # ------------------------------------------------------------- encoder
+    def _encode(self, params, audio_embeds):
+        x = audio_embeds.astype(self.flags.cdtype)
+        x = shard_constraint(x, self.rules, "batch", None, "act_embed")
+        x, _, _ = stack_apply(
+            params["enc_stack"], x, self.enc_stack, self.cfg, self.flags,
+            self.rules)
+        return rms_norm(x, params["enc_ln_f"], self.cfg.norm_eps)
+
+    # -------------------------------------------------------------- forward
+    def forward(self, params, batch, *, cache=None, positions=None):
+        """Returns (logits, new_cache, aux)."""
+        cfg, flags, rules = self.cfg, self.flags, self.rules
+        tokens = batch["tokens"]
+        x = embed_apply(params["embed"], tokens, rules)
+        x = x.astype(flags.cdtype)
+        if cfg.frontend == "vision" and "image_embeds" in batch:
+            img = batch["image_embeds"].astype(flags.cdtype)
+            x = jnp.concatenate([img, x], axis=1)
+        enc_out = None
+        if self.enc_stack is not None:
+            # decode passes a precomputed encoder output ('enc_out') so the
+            # encoder does not rerun every step
+            if "enc_out" in batch:
+                enc_out = batch["enc_out"]
+            else:
+                enc_out = self._encode(params, batch["audio_embeds"])
+        if positions is None:
+            positions = jnp.arange(x.shape[1])
+        x, new_cache, aux = stack_apply(
+            params["stack"], x, self.stack, cfg, flags, rules,
+            cache=cache, positions=positions, enc_out=enc_out)
+        x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+        if cfg.frontend == "vision" and "image_embeds" in batch:
+            x = x[:, batch["image_embeds"].shape[1]:, :]
+        logits = unembed_apply(params["embed"], x, rules)
+        return logits, new_cache, aux
+
+    def loss(self, params, batch):
+        logits, _, aux = self.forward(params, batch)
+        targets = batch["targets"]
+        mask = batch.get("mask")
+        if mask is None:
+            mask = jnp.ones_like(targets, jnp.float32)
+        logits = logits.astype(jnp.float32)
+        logz = jax.scipy.special.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, targets[..., None], axis=-1)[..., 0]
+        nll = (logz - gold) * mask
+        denom = jnp.maximum(jnp.sum(mask), 1.0)
+        ce = jnp.sum(nll) / denom
+        total = ce + 0.01 * aux
+        metrics = {"ce": ce, "aux": aux,
+                   "tokens": jnp.sum(mask)}
+        return total, metrics
+
+    # --------------------------------------------------------------- serve
+    def init_cache(self, batch_size: int, max_len: int):
+        return stack_init_cache(self.stack, self.cfg, self.flags,
+                                batch_size, max_len)
+
+    def decode_step(self, params, cache, batch):
+        """One-token step.  batch: {'tokens' (B,1), 'pos' () int32} plus
+        frontend embeds for enc-dec archs."""
+        pos = batch["pos"]
+        positions = pos[None] if jnp.ndim(pos) == 0 else pos
+        logits, new_cache, _ = self.forward(
+            params, batch, cache=cache, positions=positions)
+        return logits, new_cache
+
+
+def build_model(cfg: ArchConfig, flags: RuntimeFlags,
+                rules: ShardingRules) -> LMModel:
+    period = max(1, cfg.attn_period, cfg.local_global_period,
+                 cfg.moe_period if cfg.num_experts else 1)
+    stack = _specs_to_stack(cfg.layer_kinds(), period)
+    enc_stack = None
+    if cfg.encoder_layers:
+        enc_spec = LayerSpec(mixer="attn", window=0, ffn="dense",
+                             cross=False, causal=False)
+        enc_stack = StackDef(pattern=(enc_spec,),
+                             n_blocks=cfg.encoder_layers, tail=())
+    return LMModel(cfg=cfg, flags=flags, rules=rules, stack=stack,
+                   enc_stack=enc_stack)

@@ -1,0 +1,162 @@
+"""Mamba-2 (SSD) mixer: conv frontend + selective state-space scan.
+
+Faithful to the SSD parameterization (scalar decay per head, multi-head
+state (N, P)); the chunked scan runs through the Pallas kernel on TPU and
+its jnp oracle elsewhere.  Decode carries (conv window, ssm state) instead
+of a KV cache — O(1) per step, which is why the hybrid/SSM archs are the
+ones that run the long_500k shape.
+
+Projections are kept separate (x, z, B, C, dt) rather than fused so each can
+carry its own sharding: d_inner and the SSD head dim shard over 'model' (TP),
+the small B/C/dt projections stay replicated.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd.ops import ssd
+from repro.parallel.sharding import ShardingRules, shard_constraint
+
+from .layers import _normal
+
+__all__ = ["mamba_init", "mamba_apply", "mamba_init_cache"]
+
+CONV_K = 4  # depthwise conv kernel width
+
+
+def mamba_init(key, d_model, ssm_state, dtype, *, head_dim=64, expand=2):
+    d_inner = expand * d_model
+    H = d_inner // head_dim
+    N = ssm_state
+    ks = jax.random.split(key, 9)
+    s = d_model ** -0.5
+    p = {
+        "w_x": _normal(ks[0], (d_model, d_inner), s, dtype),
+        "w_z": _normal(ks[1], (d_model, d_inner), s, dtype),
+        "w_b": _normal(ks[2], (d_model, N), s, dtype),
+        "w_c": _normal(ks[3], (d_model, N), s, dtype),
+        "w_dt": _normal(ks[4], (d_model, H), s, dtype),
+        "conv_x": _normal(ks[5], (CONV_K, d_inner), 0.5, dtype),
+        "conv_b": _normal(ks[6], (CONV_K, N), 0.5, dtype),
+        "conv_c": _normal(ks[7], (CONV_K, N), 0.5, dtype),
+        "a_log": jnp.zeros((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "d_skip": jnp.ones((H,), jnp.float32),
+        "norm": jnp.zeros((d_inner,), jnp.float32),
+        "w_out": _normal(ks[8], (d_inner, d_model), d_inner ** -0.5, dtype),
+    }
+    ax = {
+        "w_x": ("embed", "act_mlp"),
+        "w_z": ("embed", "act_mlp"),
+        "w_b": ("embed", None),
+        "w_c": ("embed", None),
+        "w_dt": ("embed", "ssm_heads"),
+        "conv_x": (None, "act_mlp"),
+        "conv_b": (None, None),
+        "conv_c": (None, None),
+        "a_log": ("ssm_heads",),
+        "dt_bias": ("ssm_heads",),
+        "d_skip": ("ssm_heads",),
+        "norm": ("act_mlp",),
+        "w_out": ("act_mlp", "embed"),
+    }
+    return p, ax
+
+
+def _causal_conv(x, w, state: Optional[jax.Array] = None):
+    """Depthwise causal conv along seq.  x (B,S,D), w (K,D).
+
+    state (B, K-1, D) holds the trailing inputs for decode; returns
+    (y, new_state).  Long sequences use one depthwise conv op (single HBM
+    round-trip — §Perf iteration 4); short/decode steps use shifted adds
+    (cheaper than conv setup for S ~ 1)."""
+    K = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)            # (B, S+K-1, D)
+    if x.shape[1] >= 32:
+        y = jax.lax.conv_general_dilated(
+            xp, w[:, None, :].astype(x.dtype),
+            window_strides=(1,), padding="VALID",
+            dimension_numbers=("NWC", "WIO", "NWC"),
+            feature_group_count=x.shape[2])
+    else:
+        y = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :]
+                for i in range(K))
+    new_state = xp[:, -(K - 1):, :]
+    return jax.nn.silu(y), new_state
+
+
+def mamba_apply(params, x, meta, rules: ShardingRules, *,
+                cache: Optional[dict] = None, use_pallas: bool = False,
+                ssd_impl: str = "step"):
+    """x (B, S, d_model) -> (B, S, d_model).  cache: {'conv_*', 'h'}."""
+    B, S, _ = x.shape
+    d_inner, H, N, P = meta["d_inner"], meta["H"], meta["N"], meta["P"]
+
+    xs = jnp.einsum("bsd,de->bse", x, params["w_x"])
+    xs = shard_constraint(xs, rules, "batch", None, "act_mlp")
+    z = jnp.einsum("bsd,de->bse", x, params["w_z"])
+    b = jnp.einsum("bsd,dn->bsn", x, params["w_b"])
+    c = jnp.einsum("bsd,dn->bsn", x, params["w_c"])
+    dt = jnp.einsum("bsd,dh->bsh", x, params["w_dt"])
+
+    cs = cache if cache is not None else {}
+    xs, ncx = _causal_conv(xs, params["conv_x"], cs.get("conv_x"))
+    b, ncb = _causal_conv(b, params["conv_b"], cs.get("conv_b"))
+    c, ncc = _causal_conv(c, params["conv_c"], cs.get("conv_c"))
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # B,S,H
+    a = -jnp.exp(params["a_log"])                      # (H,) < 0
+    log_a = dt * a                                      # (B, S, H) <= 0
+
+    xh = xs.reshape(B, S, H, P)
+    xh = shard_constraint(xh, rules, "batch", None, "ssm_heads", None)
+    xh_dt = xh * dt[..., None].astype(xh.dtype)        # dt-scaled input
+    bh = jnp.broadcast_to(b[:, :, None, :], (B, S, H, N))
+    ch = jnp.broadcast_to(c[:, :, None, :], (B, S, H, N))
+
+    if cache is None:
+        y = ssd(xh_dt, log_a, bh, ch, use_kernel=use_pallas,
+                impl=ssd_impl)
+        new_h = None  # training path does not export state
+    else:
+        # step recurrence for decode (S small)
+        h = cache["h"]                                 # (B, H, N, P) fp32
+        ys = []
+        for t in range(S):
+            at = jnp.exp(log_a[:, t])                  # (B, H)
+            h = h * at[..., None, None] + jnp.einsum(
+                "bhn,bhp->bhnp", bh[:, t].astype(jnp.float32),
+                xh_dt[:, t].astype(jnp.float32))
+            ys.append(jnp.einsum("bhn,bhnp->bhp",
+                                 ch[:, t].astype(jnp.float32), h))
+        y = jnp.stack(ys, axis=1).astype(x.dtype)      # (B, S, H, P)
+        new_h = h
+
+    y = y + params["d_skip"][None, None, :, None].astype(y.dtype) * xh
+    y = y.reshape(B, S, d_inner)
+    # gated RMS norm (fused custom-vjp norm — see layers.rms_norm)
+    from .layers import rms_norm
+    y = rms_norm(y * jax.nn.silu(z), params["norm"], 1e-6)
+    out = jnp.einsum("bse,ed->bsd", y, params["w_out"])
+    out = shard_constraint(out, rules, "batch", None, "act_embed")
+    new_cache = (None if cache is None else
+                 {"conv_x": ncx, "conv_b": ncb, "conv_c": ncc, "h": new_h})
+    return out, new_cache
+
+
+def mamba_init_cache(batch, meta, dtype):
+    return {
+        "conv_x": jnp.zeros((batch, CONV_K - 1, meta["d_inner"]), dtype),
+        "conv_b": jnp.zeros((batch, CONV_K - 1, meta["N"]), dtype),
+        "conv_c": jnp.zeros((batch, CONV_K - 1, meta["N"]), dtype),
+        "h": jnp.zeros(
+            (batch, meta["H"], meta["N"], meta["P"]), jnp.float32),
+    }

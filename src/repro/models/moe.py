@@ -1,0 +1,119 @@
+"""Mixture-of-Experts layer with capacity-constrained sparse dispatch.
+
+The dispatch problem is exactly the paper's setting: variable-cost inputs
+(tokens) must be routed to capacity-bounded reducers (experts) while
+minimizing shuffled bytes.  We use *grouped* argsort dispatch (GShard-style
+groups = batch rows, so every per-group tensor keeps the leading batch dim
+and shards over 'data'):
+
+  1. top-k routing -> (token, expert) assignments;
+  2. per group: stable argsort by expert id, position-within-expert
+     (rank - segment start) enforces the capacity C = cf * S * k / E,
+     overflow drops (standard GShard semantics);
+  3. one gather builds (B, E, C, d) expert batches -> batched expert FFN on
+     the MXU -> weighted scatter-add combines results.
+
+Grouping is what keeps the compiled per-device FLOPs proportional to the
+LOCAL batch (a global argsort forces GSPMD to replicate the expert compute
+across the data axis — 14x compute inflation measured in the dry-run; see
+EXPERIMENTS.md §Perf iteration 1).  Expert weights shard over 'model' as EP
+when E divides the axis (Llama-4: 128/16), else TP over d_ff (Mixtral: 8).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import ShardingRules, shard_constraint
+
+from .layers import _normal
+
+__all__ = ["moe_init", "moe_apply"]
+
+
+def moe_init(key, d_model, d_ff, num_experts, dtype):
+    kg, k1, k2, k3 = jax.random.split(key, 4)
+    s_in, s_out = d_model ** -0.5, d_ff ** -0.5
+    p = {
+        "router": _normal(kg, (d_model, num_experts), s_in, jnp.float32),
+        "wi_gate": _normal(k1, (num_experts, d_model, d_ff), s_in, dtype),
+        "wi_up": _normal(k2, (num_experts, d_model, d_ff), s_in, dtype),
+        "wo": _normal(k3, (num_experts, d_ff, d_model), s_out, dtype),
+    }
+    ax = {
+        "router": ("embed", None),
+        "wi_gate": ("experts", "embed", "mlp"),
+        "wi_up": ("experts", "embed", "mlp"),
+        "wo": ("experts", "mlp", "embed"),
+    }
+    return p, ax
+
+
+def moe_apply(params, x, *, top_k: int, capacity_factor: float,
+              rules: ShardingRules):
+    """x (B, S, d) -> (B, S, d); aux losses returned as dict."""
+    B, S, d = x.shape
+    E = params["router"].shape[1]
+    C = max(1, int(capacity_factor * S * top_k / E))
+
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32),
+                        params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)                # (B, S, E)
+    gate_vals, gate_idx = jax.lax.top_k(probs, top_k)      # (B, S, k)
+    gate_vals = gate_vals / jnp.clip(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+
+    # load-balance auxiliary loss (Switch-style)
+    me = jnp.mean(probs, axis=(0, 1))
+    ce = jnp.mean(jax.nn.one_hot(gate_idx[..., 0], E, dtype=jnp.float32),
+                  axis=(0, 1))
+    aux = {"load_balance": E * jnp.sum(me * ce)}
+
+    A = S * top_k
+
+    def dispatch_one(flat_e, flat_g):
+        """Per group (batch row): (A,) expert ids -> slot tables (E*C,)."""
+        order = jnp.argsort(flat_e, stable=True)
+        sorted_e = flat_e[order]
+        counts = jnp.bincount(flat_e, length=E)
+        starts = jnp.cumsum(counts) - counts
+        pos = jnp.arange(A) - starts[sorted_e]
+        keep = pos < C
+        dest = jnp.where(keep, sorted_e * C + pos, E * C)   # OOB -> drop
+        src_token = (order // top_k).astype(jnp.int32)
+        slot_src = jnp.full((E * C,), S, jnp.int32).at[dest].set(
+            src_token, mode="drop")
+        slot_gate = jnp.zeros((E * C,), jnp.float32).at[dest].set(
+            flat_g[order], mode="drop")
+        return slot_src, slot_gate
+
+    slot_src, slot_gate = jax.vmap(dispatch_one)(
+        gate_idx.reshape(B, A), gate_vals.reshape(B, A))    # (B, E*C)
+
+    x_pad = jnp.concatenate([x, jnp.zeros((B, 1, d), x.dtype)], axis=1)
+    xe = jnp.take_along_axis(
+        x_pad, slot_src[..., None].astype(jnp.int32), axis=1)  # the shuffle
+    xe = xe.reshape(B, E, C, d)
+    xe = shard_constraint(xe, rules, "batch", "experts", None, "act_embed")
+
+    h = jnp.einsum("becd,edf->becf", xe, params["wi_gate"])
+    u = jnp.einsum("becd,edf->becf", xe, params["wi_up"])
+    h = shard_constraint(jax.nn.silu(h) * u, rules,
+                         "batch", "experts", None, "act_mlp")
+    ye = jnp.einsum("becf,efd->becd", h, params["wo"])      # (B, E, C, d)
+    # NOTE (§Perf iteration 5, refuted): forcing a reduce-scatter epilogue
+    # here (d-sharded ye + combine while sharded + one all-gather) was
+    # predicted to cut the capacity-expanded all-reduce ~2.5x, but GSPMD
+    # inserts extra resharding around the sharded-d scatter-add and the
+    # measured collective term ROSE 10.4s -> 14.2s.  Keeping XLA's
+    # all-reduce placement.
+
+    y_slots = ye.reshape(B, E * C, d) * slot_gate[..., None].astype(ye.dtype)
+
+    def combine_one(ys, src):
+        return jnp.zeros((S + 1, d), ys.dtype).at[src].add(ys)[:S]
+
+    y = jax.vmap(combine_one)(y_slots, slot_src)
+    y = shard_constraint(y, rules, "batch", None, "act_embed")
+    return y.astype(x.dtype), aux

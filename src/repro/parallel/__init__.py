@@ -1,0 +1,14 @@
+"""Distribution substrate: logical-axis sharding rules, mesh helpers,
+collective utilities, pipeline parallelism."""
+
+from .sharding import (
+    LOGICAL_RULES_BASE,
+    ShardingRules,
+    logical_to_spec,
+    shard_constraint,
+)
+
+__all__ = [
+    "ShardingRules", "LOGICAL_RULES_BASE", "logical_to_spec",
+    "shard_constraint",
+]

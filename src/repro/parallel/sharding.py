@@ -1,0 +1,128 @@
+"""Logical-axis sharding (MaxText-style rules table).
+
+Model code tags every parameter and key activation with *logical* axis names
+('embed', 'heads', 'mlp', 'vocab', 'experts', 'batch', 'seq', ...).  A rules
+table maps logical names to mesh axes; changing the parallelism layout is a
+rules edit, not a model edit.  This is how the same model lowers on the
+16x16 single-pod mesh, the 2x16x16 multi-pod mesh, and a 1-device CPU mesh.
+
+Layouts provided:
+  * TP        — heads / mlp / vocab / experts over 'model'
+  * FSDP      — additionally shard the embed dim of big params over 'data'
+                (+ 'pod'), all-gathered on use (GSPMD inserts the gathers
+                inside the layer scan, i.e. ZeRO-3 semantics)
+  * SP        — long-context: KV-cache sequence dim over 'model'
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "ShardingRules", "LOGICAL_RULES_BASE", "logical_to_spec",
+    "shard_constraint", "named_sharding",
+]
+
+# logical name -> preferred mesh axes (first existing axis wins; tuples mean
+# shard over multiple axes jointly)
+LOGICAL_RULES_BASE: dict[str, tuple] = {
+    # data / activation dims
+    "batch": (("pod", "data"),),
+    "seq": (None,),
+    "seq_shard": ("model",),       # sequence-parallel KV cache (long context)
+    "act_embed": (None,),
+    "act_heads": ("model",),
+    "act_mlp": ("model",),
+    "act_vocab": ("model",),
+    "act_embed_tp": ("model",),    # d_model sharded over TP (RS+AG regions)
+    # parameter dims
+    "embed": (None,),              # FSDP layout overrides to ('data',)
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "head_dim": (None,),
+    "mlp": ("model",),
+    "vocab": ("model",),
+    "experts": ("model",),         # EP
+    "conv": (None,),
+    "ssm_state": (None,),
+    "ssm_heads": ("model",),
+    "layers": (None,),             # scan dim — never sharded
+    "stage": ("stage",),           # pipeline stage dim (PP meshes only)
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    rules: tuple                      # tuple of (logical, axes) pairs
+    mesh_axis_names: tuple
+
+    @staticmethod
+    def create(mesh: Mesh, *, fsdp: bool = False, ep: bool = True,
+               seq_shard_decode: bool = False,
+               extra: Optional[dict] = None) -> "ShardingRules":
+        table = dict(LOGICAL_RULES_BASE)
+        if fsdp:
+            # ZeRO-3: embed dims of params sharded over the data axes too
+            table["embed"] = (("pod", "data"),)
+        if not ep:
+            table["experts"] = (None,)
+        if extra:
+            table.update(extra)
+        return ShardingRules(rules=tuple(table.items()),
+                             mesh_axis_names=tuple(mesh.axis_names))
+
+    def spec(self, *logical: Optional[str]) -> P:
+        return logical_to_spec(self, logical)
+
+
+def _resolve(rules: ShardingRules, name: Optional[str]):
+    if name is None:
+        return None
+    table = dict(rules.rules)
+    if name not in table:
+        return None
+    for cand in table[name]:
+        if cand is None:
+            return None
+        if isinstance(cand, tuple):
+            present = tuple(a for a in cand if a in rules.mesh_axis_names)
+            if present:
+                return present if len(present) > 1 else present[0]
+            continue
+        if cand in rules.mesh_axis_names:
+            return cand
+    return None
+
+
+def logical_to_spec(rules: ShardingRules,
+                    logical: Sequence[Optional[str]]) -> P:
+    resolved, used = [], set()
+    for name in logical:
+        axis = _resolve(rules, name)
+        # an axis may appear only once in a PartitionSpec
+        if axis is not None:
+            flat = axis if isinstance(axis, tuple) else (axis,)
+            if any(a in used for a in flat):
+                axis = None
+            else:
+                used.update(flat)
+        resolved.append(axis)
+    return P(*resolved)
+
+
+def shard_constraint(x, rules: ShardingRules, *logical: Optional[str]):
+    """with_sharding_constraint by logical names (no-op off-mesh dims)."""
+    spec = logical_to_spec(rules, logical)
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except (ValueError, RuntimeError):
+        return x  # not under a mesh (plain CPU tests)
+
+
+def named_sharding(mesh: Mesh, rules: ShardingRules,
+                   *logical: Optional[str]) -> NamedSharding:
+    return NamedSharding(mesh, logical_to_spec(rules, logical))

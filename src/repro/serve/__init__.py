@@ -1,0 +1,6 @@
+"""Serving substrate: batched decode engine with slot-based continuous
+batching over the model's KV caches."""
+
+from .engine import BatchedServer, Request
+
+__all__ = ["BatchedServer", "Request"]

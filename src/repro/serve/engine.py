@@ -1,0 +1,109 @@
+"""Wave-based batched serving on top of LMModel.decode_step.
+
+A wave admits up to B requests; all slots decode in lock-step sharing the
+cache write position (slot s's token at tick t lands at position t of its
+own cache lane — correct because every lane advances together).  Slots whose
+request finishes early idle (their outputs are ignored) until the wave
+drains, then the next wave starts with a fresh cache.
+
+True continuous batching (mid-flight admission) requires per-slot cache
+write indices + per-slot attention-start masks; that variant is documented
+as future work in DESIGN.md — wave batching is what the shared scalar
+`cache['len']` supports exactly, and it is what examples/serve_lm.py and
+the tests exercise.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["Request", "BatchedServer"]
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray              # (P,) int32
+    max_new_tokens: int
+    out: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class BatchedServer:
+    """Greedy-decoding server over B lock-step slots (wave batching)."""
+
+    def __init__(self, model, params, batch_slots: int, max_len: int,
+                 eos_id: Optional[int] = None):
+        self.model = model
+        self.params = params
+        self.B = batch_slots
+        self.max_len = max_len
+        self.eos_id = eos_id
+        self.queue: list[Request] = []
+        self._step = jax.jit(model.decode_step)
+        self._wave: list[Optional[Request]] = []
+        self._pending: list[list[int]] = []
+        self._pos = 0
+        self.cache = None
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _start_wave(self) -> bool:
+        if not self.queue:
+            return False
+        self._wave = [None] * self.B
+        self._pending = [[] for _ in range(self.B)]
+        for s in range(self.B):
+            if self.queue:
+                req = self.queue.pop(0)
+                self._wave[s] = req
+                self._pending[s] = list(map(int, req.prompt))
+        self.cache = self.model.init_cache(self.B, self.max_len)
+        self._pos = 0
+        return True
+
+    def tick(self) -> int:
+        """One lock-step decode; returns number of live requests."""
+        live = [s for s, r in enumerate(self._wave)
+                if r is not None and not r.done]
+        if not live:
+            if not self._start_wave():
+                return 0
+            live = [s for s, r in enumerate(self._wave) if r is not None]
+        tokens = np.zeros((self.B, 1), np.int32)
+        for s in live:
+            if self._pending[s]:
+                tokens[s, 0] = self._pending[s][0]
+            elif self._wave[s].out:
+                tokens[s, 0] = self._wave[s].out[-1]
+        logits, self.cache = self._step(
+            self.params, self.cache,
+            {"tokens": jnp.asarray(tokens),
+             "pos": jnp.asarray(self._pos, jnp.int32)})
+        nxt = np.asarray(jnp.argmax(logits[:, -1, :], axis=-1))
+        self._pos += 1
+        for s in live:
+            req = self._wave[s]
+            if self._pending[s]:
+                self._pending[s].pop(0)
+                if not self._pending[s]:
+                    req.out.append(int(nxt[s]))   # first generated token
+            else:
+                req.out.append(int(nxt[s]))
+            hit_eos = (self.eos_id is not None and req.out
+                       and req.out[-1] == self.eos_id)
+            if (len(req.out) >= req.max_new_tokens or hit_eos or
+                    self._pos >= self.max_len):
+                req.done = True
+        return len(live)
+
+    def run(self, max_ticks: int = 100_000) -> None:
+        for _ in range(max_ticks):
+            if self.tick() == 0 and not self.queue:
+                return

@@ -1,0 +1,11 @@
+"""Training substrate: optimizer, train step, checkpointing, elasticity."""
+
+from .optimizer import AdamWConfig, adamw_init, adamw_update, cosine_lr
+from .train_step import TrainState, make_train_step, make_state_shardings
+from .checkpoint import CheckpointManager
+
+__all__ = [
+    "AdamWConfig", "adamw_init", "adamw_update", "cosine_lr",
+    "TrainState", "make_train_step", "make_state_shardings",
+    "CheckpointManager",
+]

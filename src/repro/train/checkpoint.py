@@ -1,0 +1,140 @@
+"""Fault-tolerant checkpointing: atomic, versioned, reshard-on-restore.
+
+Layout:  <dir>/step_<N>/{manifest.json, arrays.npz}  written to a temp dir
+and atomically renamed, so a crash mid-save never corrupts the latest
+checkpoint.  Restore accepts a *different* mesh/sharding than the one that
+saved (elastic rescale): arrays are loaded and re-placed with jax.device_put
+to the new shardings.
+
+On a real multi-host fleet each host writes its local shards; the single
+process here writes the full arrays (documented in DESIGN.md §FT).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+import time
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+__all__ = ["CheckpointManager"]
+
+
+def _flatten(tree, prefix=""):
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten(v, f"{prefix}{k}/"))
+    else:
+        out[prefix[:-1]] = tree
+    return out
+
+
+def _unflatten(flat):
+    tree: dict = {}
+    for k, v in flat.items():
+        parts = k.split("/")
+        node = tree
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = v
+    return tree
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+
+    # ------------------------------------------------------------------ save
+    def save(self, step: int, state, extra: Optional[dict] = None) -> str:
+        flat = _flatten(state)
+        arrays = {}
+        for k, v in flat.items():
+            a = np.asarray(v)
+            if a.dtype.name == "bfloat16":   # npz can't store bf16: view u16
+                a = a.view(np.uint16)
+            arrays[k] = a
+        manifest = {
+            "step": int(step),
+            "time": time.time(),
+            "keys": sorted(arrays),
+            "dtypes": {k: str(np.asarray(v).dtype)
+                       for k, v in flat.items()},
+            "shapes": {k: list(a.shape) for k, a in arrays.items()},
+            "extra": extra or {},
+        }
+        final = os.path.join(self.directory, f"step_{step:08d}")
+        tmp = tempfile.mkdtemp(dir=self.directory, prefix=".tmp_")
+        try:
+            np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+            with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                json.dump(manifest, f)
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.rename(tmp, final)          # atomic publish
+        except BaseException:
+            shutil.rmtree(tmp, ignore_errors=True)
+            raise
+        self._gc()
+        return final
+
+    # --------------------------------------------------------------- restore
+    def latest_step(self) -> Optional[int]:
+        steps = []
+        for name in os.listdir(self.directory):
+            if name.startswith("step_") and os.path.exists(
+                    os.path.join(self.directory, name, "manifest.json")):
+                steps.append(int(name.split("_")[1]))
+        return max(steps) if steps else None
+
+    def restore(self, step: Optional[int] = None, *,
+                shardings=None, template=None):
+        """Load a checkpoint; optionally re-place onto new `shardings`
+        (pytree of NamedSharding matching the state tree — elastic restore
+        onto a different mesh)."""
+        if step is None:
+            step = self.latest_step()
+            if step is None:
+                return None, None
+        path = os.path.join(self.directory, f"step_{step:08d}")
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+        data = np.load(os.path.join(path, "arrays.npz"))
+        flat = {}
+        for k in manifest["keys"]:
+            a = data[k]
+            want = manifest["dtypes"].get(k)
+            if want == "bfloat16":
+                import ml_dtypes
+                a = a.view(ml_dtypes.bfloat16)
+            flat[k] = a
+        state = _unflatten(flat)
+        if template is not None:
+            t_flat = _flatten(template)
+            for k in list(flat):
+                want = t_flat[k].dtype if hasattr(t_flat[k], "dtype") else None
+                if want is not None and str(want) != str(flat[k].dtype):
+                    flat[k] = flat[k].astype(want)
+            state = _unflatten(flat)
+        if shardings is not None:
+            sh_flat = _flatten(shardings)
+            flat = {k: jax.device_put(v, sh_flat[k])
+                    for k, v in _flatten(state).items()}
+            state = _unflatten(flat)
+        return state, manifest
+
+    # -------------------------------------------------------------------- gc
+    def _gc(self):
+        steps = sorted(
+            int(n.split("_")[1]) for n in os.listdir(self.directory)
+            if n.startswith("step_"))
+        for s in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:08d}"),
+                          ignore_errors=True)

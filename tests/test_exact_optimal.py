@@ -1,0 +1,43 @@
+"""Planner vs exhaustive optimum on tiny instances: bounded gap."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import plan_a2a
+from repro.core.exact import optimal_a2a_bruteforce
+
+
+class TestExactOptimal:
+    def test_paper_example4_optimum_is_3_reducers(self):
+        w = np.array([0.20, 0.20, 0.20, 0.19, 0.19, 0.18, 0.18])
+        opt = optimal_a2a_bruteforce(w, 1.0)
+        opt.validate("a2a")
+        # the paper: best is 3 reducers at ~3q communication
+        assert opt.num_reducers == 3
+        assert opt.communication_cost() <= 3.01
+
+    @given(st.lists(st.floats(0.05, 0.45), min_size=3, max_size=6),
+           st.floats(1.0, 1.5))
+    @settings(max_examples=25, deadline=None)
+    def test_planner_within_3x_of_optimum(self, weights, q):
+        w = np.asarray(weights)
+        opt = optimal_a2a_bruteforce(w, q)
+        if opt is None:
+            pytest.skip("infeasible instance")
+        opt.validate("a2a")
+        plan = plan_a2a(w, q)
+        plan.validate("a2a")
+        ratio = plan.communication_cost() / max(opt.communication_cost(),
+                                                1e-9)
+        # tiny instances are the worst case for the asymptotic algorithms;
+        # the portfolio still stays within a small constant
+        assert ratio <= 3.0 + 1e-9, (ratio, w.tolist(), q)
+
+    def test_optimum_never_beats_lower_bound_logic(self):
+        rng = np.random.default_rng(0)
+        for _ in range(5):
+            w = rng.uniform(0.1, 0.4, 5)
+            opt = optimal_a2a_bruteforce(w, 1.0)
+            plan = plan_a2a(w, 1.0)
+            assert opt.communication_cost() <= plan.communication_cost() + 1e-9

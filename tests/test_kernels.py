@@ -1,0 +1,161 @@
+"""Per-kernel allclose vs pure-jnp oracle, swept over shapes and dtypes.
+
+All kernels run in interpret mode (CPU container); the same pallas_call
+lowers to real TPU kernels on hardware.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.pairwise.pairwise import pairwise_gram
+from repro.kernels.pairwise.ref import pairwise_gram_ref, pairwise_ref
+from repro.kernels.pairwise.ops import pairwise_kernel
+from repro.kernels.flash.flash_attention import flash_attention
+from repro.kernels.flash.ref import attention_ref
+from repro.kernels.flash.ops import mha
+from repro.kernels.ssd.ssd import ssd_scan
+from repro.kernels.ssd.ref import ssd_scan_ref
+from repro.kernels.ssd.ops import ssd
+
+
+def rnd(rng, shape, dtype):
+    x = rng.normal(size=shape).astype(np.float32)
+    return jnp.asarray(x, dtype=dtype)
+
+
+# ------------------------------------------------------------------ pairwise
+class TestPairwiseKernel:
+    @pytest.mark.parametrize("m,n,k", [
+        (8, 8, 8), (16, 24, 32), (100, 60, 72), (130, 70, 300),
+        (1, 5, 9), (257, 129, 65),
+    ])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_gram_matches(self, m, n, k, dtype):
+        rng = np.random.default_rng(m * 1000 + n + k)
+        x, y = rnd(rng, (m, k), dtype), rnd(rng, (n, k), dtype)
+        got = pairwise_gram(x, y, bm=32, bn=32, bk=64, interpret=True)
+        ref = pairwise_gram_ref(x, y)
+        tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(ref, np.float32),
+                                   rtol=tol, atol=tol)
+
+    @pytest.mark.parametrize("metric", ["dot", "l2", "cosine"])
+    def test_metrics(self, metric):
+        rng = np.random.default_rng(7)
+        x = rnd(rng, (33, 20), jnp.float32)
+        got = pairwise_kernel(x, metric=metric, interpret=True,
+                              bm=16, bn=16, bk=16)
+        ref = pairwise_ref(x, metric=metric)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   rtol=1e-4, atol=1e-4)
+
+    @given(st.integers(1, 50), st.integers(1, 50), st.integers(1, 40))
+    @settings(max_examples=12, deadline=None)
+    def test_property_shapes(self, m, n, k):
+        rng = np.random.default_rng(m + 17 * n + 31 * k)
+        x, y = rnd(rng, (m, k), jnp.float32), rnd(rng, (n, k), jnp.float32)
+        got = pairwise_gram(x, y, bm=16, bn=16, bk=16, interpret=True)
+        np.testing.assert_allclose(np.asarray(got),
+                                   np.asarray(pairwise_gram_ref(x, y)),
+                                   rtol=1e-4, atol=1e-4)
+
+
+# ------------------------------------------------------------------ flash
+class TestFlashAttention:
+    @pytest.mark.parametrize("sq,skv,d", [
+        (16, 16, 8), (64, 64, 16), (128, 128, 64), (100, 100, 32),
+        (33, 65, 16),
+    ])
+    @pytest.mark.parametrize("causal", [True, False])
+    def test_matches_ref(self, sq, skv, d, causal):
+        if causal and sq != skv:
+            pytest.skip("causal assumes aligned positions")
+        rng = np.random.default_rng(sq + skv + d)
+        q = rnd(rng, (sq, d), jnp.float32)
+        k = rnd(rng, (skv, d), jnp.float32)
+        v = rnd(rng, (skv, d), jnp.float32)
+        got = flash_attention(q, k, v, causal=causal, interpret=True,
+                              bq=32, bk=32)
+        ref = attention_ref(q, k, v, causal=causal)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   rtol=2e-4, atol=2e-4)
+
+    @pytest.mark.parametrize("window", [4, 16, 64])
+    def test_sliding_window(self, window):
+        rng = np.random.default_rng(window)
+        s, d = 96, 16
+        q, k, v = (rnd(rng, (s, d), jnp.float32) for _ in range(3))
+        got = flash_attention(q, k, v, causal=True, window=window,
+                              interpret=True, bq=32, bk=32)
+        ref = attention_ref(q, k, v, causal=True, window=window)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   rtol=2e-4, atol=2e-4)
+
+    def test_bf16(self):
+        rng = np.random.default_rng(3)
+        s, d = 64, 32
+        q, k, v = (rnd(rng, (s, d), jnp.bfloat16) for _ in range(3))
+        got = flash_attention(q, k, v, causal=True, interpret=True)
+        ref = attention_ref(q, k, v, causal=True)
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(ref, np.float32),
+                                   rtol=3e-2, atol=3e-2)
+
+    def test_gqa_mha_wrapper(self):
+        rng = np.random.default_rng(11)
+        B, S, Hq, Hkv, D = 2, 40, 8, 2, 16
+        q = rnd(rng, (B, S, Hq, D), jnp.float32)
+        k = rnd(rng, (B, S, Hkv, D), jnp.float32)
+        v = rnd(rng, (B, S, Hkv, D), jnp.float32)
+        got = mha(q, k, v, causal=True, use_kernel=True, interpret=True,
+                  bq=16, bk=16)
+        ref = mha(q, k, v, causal=True, use_kernel=False)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   rtol=2e-4, atol=2e-4)
+
+
+# ------------------------------------------------------------------ ssd
+class TestSSD:
+    @pytest.mark.parametrize("s,p,n,chunk", [
+        (32, 8, 4, 8), (64, 16, 16, 16), (100, 8, 8, 32), (128, 32, 16, 128),
+        (7, 4, 4, 8),
+    ])
+    def test_matches_ref(self, s, p, n, chunk):
+        rng = np.random.default_rng(s + p + n)
+        x = rnd(rng, (s, p), jnp.float32)
+        b = rnd(rng, (s, n), jnp.float32)
+        c = rnd(rng, (s, n), jnp.float32)
+        log_a = jnp.asarray(-np.abs(rng.normal(size=s)).astype(np.float32))
+        got = ssd_scan(x, log_a, b, c, chunk=chunk, interpret=True)
+        ref = ssd_scan_ref(x, log_a, b, c)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   rtol=2e-4, atol=2e-4)
+
+    def test_state_carry_across_chunks(self):
+        # strong decay contrast ensures cross-chunk state actually matters
+        rng = np.random.default_rng(0)
+        s, p, n = 64, 8, 8
+        x = rnd(rng, (s, p), jnp.float32)
+        b = rnd(rng, (s, n), jnp.float32)
+        c = rnd(rng, (s, n), jnp.float32)
+        log_a = jnp.full((s,), -0.01)  # nearly no decay: long memory
+        got = ssd_scan(x, log_a, b, c, chunk=16, interpret=True)
+        ref = ssd_scan_ref(x, log_a, b, c)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   rtol=2e-4, atol=2e-4)
+
+    def test_batched_wrapper(self):
+        rng = np.random.default_rng(1)
+        B, S, H, P, N = 2, 24, 3, 8, 4
+        x = rnd(rng, (B, S, H, P), jnp.float32)
+        b = rnd(rng, (B, S, H, N), jnp.float32)
+        c = rnd(rng, (B, S, H, N), jnp.float32)
+        la = jnp.asarray(-np.abs(rng.normal(size=(B, S, H))).astype(np.float32))
+        got = ssd(x, la, b, c, chunk=8, use_kernel=True, interpret=True)
+        ref = ssd(x, la, b, c, use_kernel=False)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   rtol=2e-4, atol=2e-4)
