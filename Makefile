@@ -1,0 +1,21 @@
+# Repo CI entry points (documented in README.md "Verify").
+# The tier-1 command is `make test`; `make ci` adds the compileall lint pass.
+
+PYTHON ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
+
+.PHONY: test lint ci bench bench-quick
+
+test:
+	$(PYTHON) -m pytest -q
+
+lint:
+	$(PYTHON) -m compileall -q src
+
+ci: lint test
+
+bench:
+	$(PYTHON) benchmarks/bench_planner.py
+
+bench-quick:
+	$(PYTHON) benchmarks/bench_planner.py --quick

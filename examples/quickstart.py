@@ -10,7 +10,7 @@ Run:  PYTHONPATH=src python examples/quickstart.py
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import a2a_comm_lower_bound, plan_a2a
+from repro.core import plan_a2a
 from repro.mapreduce import pairwise_similarity
 
 M_PEOPLE = 40
@@ -37,7 +37,8 @@ def main():
     print(f"planner chose      : {schema.algorithm}")
     print(f"reducers           : {schema.num_reducers}")
     print(f"communication cost : {schema.communication_cost():.2f} "
-          f"(lower bound {a2a_comm_lower_bound(weights, Q):.2f})")
+          f"(lower bound {schema.lower_bound:.2f}, "
+          f"gap {schema.optimality_gap():.2f}x)")
     print(f"max replication    : {schema.replication().max()} copies")
 
     sims, plan, _ = pairwise_similarity(

@@ -4,15 +4,33 @@ First-Fit Decreasing (FFD) and Best-Fit Decreasing (BFD) give the classical
 11/9 * OPT + O(1) guarantee the paper leans on (Theorem 10, 18, 26): every bin
 except possibly one is at least half full, so ``#bins <= 2 * s / b`` for bin
 size ``b`` and total weight ``s``.
+
+``ffd``/``bfd`` are O(n log n): FFD finds the leftmost bin with enough space
+by descending a max segment tree over bin spaces, BFD keeps the open-bin
+spaces in a sorted list.  Both produce bit-identical bins to the textbook
+O(n^2) scans (kept as ``ffd_reference``/``bfd_reference`` for tests and the
+packing benchmark) — the planner's estimate phase packs once per candidate
+bin size, so packing must not dominate planning time (see DESIGN.md,
+"strategy registry").
 """
 
 from __future__ import annotations
 
+from bisect import bisect_left, insort
 from typing import Sequence
 
 import numpy as np
 
-__all__ = ["ffd", "bfd", "pack", "num_bins_lower_bound"]
+__all__ = [
+    "ffd",
+    "bfd",
+    "pack",
+    "num_bins_lower_bound",
+    "ffd_reference",
+    "bfd_reference",
+]
+
+_EPS = 1e-12
 
 
 def _decreasing_order(weights: np.ndarray) -> np.ndarray:
@@ -20,19 +38,86 @@ def _decreasing_order(weights: np.ndarray) -> np.ndarray:
     return np.argsort(-weights, kind="stable")
 
 
-def ffd(weights: Sequence[float], bin_size: float) -> list[list[int]]:
-    """First-Fit Decreasing.  Returns bin -> list of item indices."""
-    w = np.asarray(weights, dtype=np.float64)
-    if np.any(w > bin_size + 1e-12):
+def _check_fits(w: np.ndarray, bin_size: float) -> None:
+    if np.any(w > bin_size + _EPS):
         bad = int(np.argmax(w))
         raise ValueError(
             f"item {bad} (w={w[bad]}) does not fit in bin of size {bin_size}")
+
+
+def ffd(weights: Sequence[float], bin_size: float) -> list[list[int]]:
+    """First-Fit Decreasing.  Returns bin -> list of item indices.
+
+    Leftmost-fitting-bin queries run over a max segment tree in which every
+    not-yet-opened bin reports a full ``bin_size`` of space, so "open a new
+    bin" is the same query as "reuse an old one".  O(n log n) total.
+    """
+    w = np.asarray(weights, dtype=np.float64)
+    _check_fits(w, bin_size)
+    n = len(w)
+    if n == 0:
+        return []
+    size = 1
+    while size < n:
+        size *= 2
+    # tree[1] is the root; leaves are tree[size : size + n] (extra leaves
+    # beyond n stay at -inf so they are never chosen).
+    tree = np.full(2 * size, -np.inf)
+    tree[size:size + n] = bin_size
+    for node in range(size - 1, 0, -1):
+        tree[node] = max(tree[2 * node], tree[2 * node + 1])
+    bins: list[list[int]] = []
+    for i in _decreasing_order(w):
+        need = w[i] - _EPS
+        node = 1
+        while node < size:  # descend to the leftmost leaf with enough space
+            node = 2 * node if tree[2 * node] >= need else 2 * node + 1
+        b = node - size
+        while b >= len(bins):
+            bins.append([])
+        bins[b].append(int(i))
+        tree[node] -= w[i]
+        node //= 2
+        while node:
+            tree[node] = max(tree[2 * node], tree[2 * node + 1])
+            node //= 2
+    return [b for b in bins if b]
+
+
+def bfd(weights: Sequence[float], bin_size: float) -> list[list[int]]:
+    """Best-Fit Decreasing: place each item into the fullest bin it fits.
+
+    Open-bin spaces live in a sorted list of ``(space, bin_id)``; best fit is
+    the first entry at least the item's size (ties resolve to the lowest bin
+    id, matching the sequential scan).
+    """
+    w = np.asarray(weights, dtype=np.float64)
+    _check_fits(w, bin_size)
+    bins: list[list[int]] = []
+    srt: list[tuple[float, int]] = []      # (space, bin_id), ascending
+    for i in _decreasing_order(w):
+        j = bisect_left(srt, (w[i] - _EPS, -1))
+        if j == len(srt):
+            bins.append([int(i)])
+            insort(srt, (bin_size - w[i], len(bins) - 1))
+        else:
+            space, b = srt.pop(j)
+            bins[b].append(int(i))
+            insort(srt, (space - w[i], b))
+    return bins
+
+
+def ffd_reference(weights: Sequence[float],
+                  bin_size: float) -> list[list[int]]:
+    """Textbook O(n^2) FFD — oracle for testing the fast implementation."""
+    w = np.asarray(weights, dtype=np.float64)
+    _check_fits(w, bin_size)
     bins: list[list[int]] = []
     space: list[float] = []
     for i in _decreasing_order(w):
         placed = False
         for b in range(len(bins)):
-            if w[i] <= space[b] + 1e-12:
+            if w[i] <= space[b] + _EPS:
                 bins[b].append(int(i))
                 space[b] -= w[i]
                 placed = True
@@ -43,19 +128,17 @@ def ffd(weights: Sequence[float], bin_size: float) -> list[list[int]]:
     return bins
 
 
-def bfd(weights: Sequence[float], bin_size: float) -> list[list[int]]:
-    """Best-Fit Decreasing: place each item into the fullest bin it fits."""
+def bfd_reference(weights: Sequence[float],
+                  bin_size: float) -> list[list[int]]:
+    """Textbook O(n^2) BFD — oracle for testing the fast implementation."""
     w = np.asarray(weights, dtype=np.float64)
-    if np.any(w > bin_size + 1e-12):
-        bad = int(np.argmax(w))
-        raise ValueError(
-            f"item {bad} (w={w[bad]}) does not fit in bin of size {bin_size}")
+    _check_fits(w, bin_size)
     bins: list[list[int]] = []
     space: list[float] = []
     for i in _decreasing_order(w):
         best, best_space = -1, np.inf
         for b in range(len(bins)):
-            if w[i] <= space[b] + 1e-12 and space[b] < best_space:
+            if w[i] <= space[b] + _EPS and space[b] < best_space:
                 best, best_space = b, space[b]
         if best < 0:
             bins.append([int(i)])

@@ -1,6 +1,14 @@
 """Lower bounds from the paper (Theorems 8, 9, 11, 25) and Table-1 upper
 bounds, used by tests and the benchmark harness to validate the reproduction
-against the paper's own claims."""
+against the paper's own claims.
+
+``some_pairs_comm_lower_bound`` extends the replication-rate argument of
+Afrati et al., "Upper and Lower Bounds on the Cost of a Map-Reduce
+Computation", to an explicit required-pair set (Ullman & Ullman's some-pairs
+problem).  The planner attaches the matching bound to every schema it
+returns (``MappingSchema.lower_bound``) so plans self-report their
+optimality gap.
+"""
 
 from __future__ import annotations
 
@@ -14,6 +22,7 @@ __all__ = [
     "a2a_unit_reducers_lower_bound",
     "x2y_comm_lower_bound",
     "x2y_reducers_lower_bound",
+    "some_pairs_comm_lower_bound",
     "a2a_k2_comm_upper_bound",
     "a2a_algk_comm_upper_bound",
     "x2y_comm_upper_bound",
@@ -58,6 +67,31 @@ def x2y_comm_lower_bound(wx, wy, q: float) -> float:
 def x2y_reducers_lower_bound(wx, wy, q: float) -> float:
     sx, sy = float(np.sum(wx)), float(np.sum(wy))
     return max(1.0, 2.0 * sx * sy / (q * q))
+
+
+def some_pairs_comm_lower_bound(weights, q: float, pairs) -> float:
+    """Replication-rate lower bound for an explicit required-pair set.
+
+    Two arguments, take the max:
+
+      * every input incident to >= 1 required pair ships at least once, so
+        comm >= sum of incident weights;
+      * a reducer holding inputs S with load L = sum_{i in S} w_i <= q
+        covers pair products sum_{{i,j} in S} 2 w_i w_j <= L^2 <= q L.
+        Summing over reducers, q * comm >= sum_{(i,j) in P} 2 w_i w_j,
+        i.e. comm >= 2 * sum_P w_i w_j / q.  With P = all pairs this
+        recovers Theorem 8 up to the diagonal term; with P = X x Y it is
+        exactly Theorem 25.
+    """
+    w = np.asarray(weights, dtype=np.float64)
+    p = np.asarray(list(pairs), dtype=np.int64).reshape(-1, 2)
+    if p.size == 0:
+        return 0.0
+    incident = np.zeros(len(w), dtype=bool)
+    incident[p.ravel()] = True
+    lb_ship = float(np.sum(w[incident]))
+    lb_pairs = 2.0 * float(np.sum(w[p[:, 0]] * w[p[:, 1]])) / q
+    return max(lb_ship, lb_pairs)
 
 
 # ------------------------------------------------------------------ upper

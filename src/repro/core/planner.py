@@ -8,14 +8,28 @@ analysis:
     then a unit-size scheduler on the bins (Sections 4-7)
   * mixed profile around q/3 .. q/2        -> hybrid Algorithm 5 (Section 8)
 
-Going beyond the paper, ``method='auto'`` runs a *portfolio*: it evaluates
-every applicable strategy (all feasible k, every unit scheduler, the hybrid)
-and returns the schema with the smallest actual communication cost.  The
-paper picks one strategy per case a priori; measuring and taking the argmin
-is strictly better and is one of our beyond-paper optimizations (it never
-does worse than the paper's choice, which is always in the portfolio).
+Going beyond the paper, ``method='auto'`` runs a *portfolio* over the
+strategy registry (``repro.core.strategies``): every applicable strategy —
+all feasible k, every unit scheduler, the hybrid — is *estimated* with its
+exact closed-form cost, and only the argmin winner is built.  The paper
+picks one strategy per case a priori; taking the argmin is strictly better
+(the paper's choice is always in the portfolio), and estimate-all/build-one
+makes it O(packing) instead of O(sum of candidate schema sizes) — see
+``benchmarks/bench_planner.py`` for the speedup curve and
+``plan_a2a_materialized`` for the measure-everything baseline it replaced.
 
 ``plan_x2y`` implements Section 10 with a swept bin-size split.
+``plan_some_pairs`` covers an explicit required-pair subset (Ullman &
+Ullman, "Some Pairs Problems"), reusing the same registry for its dense
+fallback and exploiting sparsity otherwise.
+
+Every schema returned by this module carries the matching replication-rate
+communication lower bound (``schema.lower_bound``, from ``repro.core.bounds``)
+so plans self-report their optimality gap.
+
+Results are memoized in ``strategies.PLAN_CACHE`` keyed by the
+(sorted-weights, q, method) profile; permutations of the same weight
+multiset share one cache entry.
 """
 
 from __future__ import annotations
@@ -25,12 +39,33 @@ from typing import Optional, Sequence
 
 import numpy as np
 
-from . import unit_schemas as us
 from .binpack import pack
-from .primes import is_prime, prev_prime
+from .bounds import (
+    a2a_comm_lower_bound,
+    some_pairs_comm_lower_bound,
+    x2y_comm_lower_bound,
+)
 from .schema import InfeasibleError, MappingSchema
+from .strategies import (
+    A2AProfile,
+    BinpackStrategy,
+    HybridStrategy,
+    PLAN_CACHE,
+    PlanCache,
+    a2a_portfolio,
+    argmin_estimate,
+    best_unit,
+)
 
-__all__ = ["plan_a2a", "plan_x2y", "plan_unit", "naive_pairs"]
+__all__ = [
+    "plan_a2a",
+    "plan_a2a_materialized",
+    "plan_x2y",
+    "plan_unit",
+    "plan_some_pairs",
+    "estimate_a2a",
+    "naive_pairs",
+]
 
 
 # ---------------------------------------------------------------------------
@@ -39,163 +74,185 @@ __all__ = ["plan_a2a", "plan_x2y", "plan_unit", "naive_pairs"]
 def plan_unit(n: int, k: int, method: str = "auto") -> tuple[list[list[int]], str]:
     """Best unit-size schema for n items, integer capacity k >= 2.
 
-    Returns (reducers over range(n), algorithm-name).
+    Returns (reducers over range(n), algorithm-name).  Selection is the
+    registry argmin over exact per-strategy costs — no candidate is built.
     """
     assert k >= 2
-    if n <= k:
-        return [list(range(n))], "single"
-    candidates: list[tuple[list[list[int]], str]] = []
-
-    def consider(name: str, reds: Optional[list[list[int]]]):
-        if reds is not None:
-            candidates.append((reds, name))
-
-    if method in ("auto", "alg_even") and k % 2 == 0:
-        consider("alg_even", us.alg_even(n, k))
-    if method in ("auto", "alg_odd") and k % 2 == 1 and k >= 3:
-        consider("alg_odd", us.alg_odd(n, k))
-    if method in ("auto", "au") and is_prime(k) and n <= k * k:
-        reds, _ = us.au_square(k, with_teams=True)
-        consider("au_square", _filter(reds, n))
-    if method in ("auto", "au_projective") and is_prime(k - 1) \
-            and n <= (k - 1) ** 2 + k:
-        consider("au_projective", _filter(us.au_projective(k - 1), n))
-    if method in ("auto", "alg3"):
-        consider("alg3", us.alg3(n, k))
-    if method in ("auto", "alg4") and is_prime(k):
-        l = round(math.log(n, k)) if n > 1 else 0
-        # only when exact power and the tree stays small
-        if l >= 2 and k ** l == n and (k * (k + 1)) ** (l - 1) <= 200_000:
-            consider("alg4", us.alg4(n, k))
-    if not candidates:
-        # always-applicable fallback
-        if k % 2 == 0:
-            consider("alg_even", us.alg_even(n, k))
-        else:
-            consider("alg_odd", us.alg_odd(n, k))
-    # pick minimum total copies (= comm in the unit world)
-    best = min(candidates, key=lambda c: sum(len(r) for r in c[0]))
-    return best
-
-
-def _filter(reducers: list[list[int]], n: int) -> list[list[int]]:
-    out = [[i for i in red if i < n] for red in reducers]
-    return [r for r in out if len(r) >= 1]
+    if n <= 0:
+        return [], "empty"
+    if method == "au":          # historical alias
+        method = "au_square"
+    strat, _ = best_unit(np.ones(n), k, method)
+    return strat.build(n, k), strat.name
 
 
 # ---------------------------------------------------------------------------
 # A2A for different-sized inputs
 # ---------------------------------------------------------------------------
-def plan_a2a(weights: Sequence[float], q: float,
-             method: str = "auto") -> MappingSchema:
-    w = np.asarray(weights, dtype=np.float64)
-    m = len(w)
-    if m == 0:
-        return MappingSchema(w, q, [], [], algorithm="empty")
+def _check_a2a_feasible(w: np.ndarray, q: float) -> np.ndarray:
     if np.any(w > q + 1e-12):
         raise InfeasibleError("an input exceeds the reducer capacity")
     big = np.flatnonzero(w > q / 2 + 1e-12)
     if len(big) >= 2:
         raise InfeasibleError(
             "two inputs larger than q/2 cannot share a reducer")
+    return big
+
+
+def plan_a2a(weights: Sequence[float], q: float, method: str = "auto",
+             use_cache: bool = True) -> MappingSchema:
+    """All-pairs mapping schema for different-sized inputs.
+
+    Treat the returned schema as immutable: cache hits share their reducer
+    lists with the ``PLAN_CACHE`` entry (copying them would defeat the O(m)
+    hit path), so mutating ``schema.reducers``/``schema.bins`` in place
+    would poison every future plan for the same weight profile.  Pass
+    ``use_cache=False`` to get a schema with no shared state.
+    """
+    w = np.asarray(weights, dtype=np.float64)
+    m = len(w)
+    if m == 0:
+        return MappingSchema(w, q, [], [], algorithm="empty", lower_bound=0.0)
+    _check_a2a_feasible(w, q)
+
+    # canonicalize to descending weights: plans depend only on the weight
+    # multiset, so permutations share one cache entry and one computation.
+    order = np.argsort(-w, kind="stable")
+    ws = w[order]
+    key = PlanCache.key(ws, q, method)
+    schema_s = PLAN_CACHE.get(key) if use_cache else None
+    if schema_s is None:
+        schema_s = _plan_a2a_sorted(ws, q, method, use_cache)
+        if use_cache:
+            PLAN_CACHE.put(key, schema_s)
+    return _remap_schema(schema_s, order, w)
+
+
+def _remap_schema(schema: MappingSchema, order: np.ndarray,
+                  w: np.ndarray) -> MappingSchema:
+    """Translate a canonical-order schema back to the caller's input ids.
+    Reducer lists are shared with the cached schema — treat plans as
+    immutable."""
+    bins = [[int(order[i]) for i in b] for b in schema.bins]
+    return MappingSchema(
+        weights=w, q=schema.q, bins=bins, reducers=schema.reducers,
+        algorithm=schema.algorithm, meta=dict(schema.meta),
+        lower_bound=schema.lower_bound,
+    )
+
+
+def _plan_a2a_sorted(w: np.ndarray, q: float, method: str,
+                     use_cache: bool) -> MappingSchema:
+    """Plan for descending-sorted weights (canonical cache order)."""
+    m = len(w)
+    lb = a2a_comm_lower_bound(w, q)
+    big = np.flatnonzero(w > q / 2 + 1e-12)
     if float(np.sum(w)) <= q + 1e-12:
         # everything fits in one reducer
         return MappingSchema(
             w, q, [[i] for i in range(m)], [list(range(m))],
-            algorithm="single")
-
+            algorithm="single", lower_bound=lb)
     if len(big) == 1:
-        return _plan_big_input(w, q, int(big[0]), method)
+        out = _plan_big_input(w, q, int(big[0]), method, use_cache)
+        out.lower_bound = lb
+        return out
 
+    prof = A2AProfile(w, q)
     if method == "auto":
-        cands = [s for s in _candidate_schemas(w, q) if s is not None]
-        assert cands, "portfolio produced no schema"
-        return min(cands, key=lambda s: s.communication_cost())
+        portfolio = a2a_portfolio(prof)
+        assert portfolio, "portfolio produced no strategy"
+        strat, est = argmin_estimate(portfolio)
+        schema = strat.build(prof)
+        schema.lower_bound = lb
+        schema.meta["estimated_cost"] = est
+        schema.meta["portfolio"] = {s.name: c for s, c in portfolio}
+        return schema
     if method.startswith("binpack"):
         # e.g. 'binpack-k2', 'binpack-k3'
         k = int(method.split("k")[-1]) if "k" in method else 2
-        s = _binpack_schema(w, q, k)
-        if s is None:
+        strat = BinpackStrategy(k)
+        if not strat.applicable(prof):
             raise InfeasibleError(f"inputs too large for bins of q/{k}")
-        return s
+        schema = strat.build(prof)
+        schema.lower_bound = lb
+        return schema
     if method == "hybrid":
-        s = _hybrid_schema(w, q)
-        if s is None:
+        strat = HybridStrategy()
+        if not strat.applicable(prof):
             raise InfeasibleError("hybrid (Alg 5) inapplicable")
-        return s
+        schema = strat.build(prof)
+        schema.lower_bound = lb
+        return schema
     raise ValueError(f"unknown method {method!r}")
 
 
-def _candidate_schemas(w: np.ndarray, q: float):
-    wmax = float(np.max(w))
-    kmax = max(2, min(int(q / max(wmax, 1e-12)), 64))
-    for k in range(2, kmax + 1):
-        yield _binpack_schema(w, q, k)
-    yield _hybrid_schema(w, q)
+def plan_a2a_materialized(weights: Sequence[float], q: float) -> MappingSchema:
+    """The seed portfolio: materialize every applicable candidate schema and
+    return the argmin by *measured* communication cost.
 
-
-def _binpack_schema(w: np.ndarray, q: float, k: int) -> Optional[MappingSchema]:
-    """Sections 4.1 / 6 / 7: bins of size q/k, then unit scheduler."""
-    b = q / k
-    if float(np.max(w)) > b + 1e-12:
-        return None
-    bins = pack(w, b, method="best")
-    reducers, name = plan_unit(len(bins), k)
-    return MappingSchema(
-        weights=w, q=q, bins=bins, reducers=reducers,
-        algorithm=f"binpack-k{k}+{name}",
-        meta={"k": k, "bin_size": b, "num_bins": len(bins)},
-    )
-
-
-def _hybrid_schema(w: np.ndarray, q: float) -> Optional[MappingSchema]:
-    """Algorithm 5 (Section 8): mixed big (q/3, q/2] and small (<= q/3).
-
-    Small inputs get packed twice (medium q/2 bins and small q/3 bins), so
-    bins overlap — meta['bins_overlap']=True.
+    Kept as the baseline for ``benchmarks/bench_planner.py`` and as the
+    oracle the estimate-based ``plan_a2a(method='auto')`` is validated
+    against: both must return schemas of identical cost.
     """
-    a_ids = np.flatnonzero((w > q / 3 + 1e-12) & (w <= q / 2 + 1e-12))
-    b_ids = np.flatnonzero(w <= q / 3 + 1e-12)
-    if len(a_ids) + len(b_ids) != len(w):
-        return None  # some input > q/2 — handled by big-input path
-    if len(a_ids) == 0 or len(b_ids) == 0:
-        return None  # degenerate: plain bin packing covers it
-    big_bins = [[int(a_ids[i]) for i in bn]
-                for bn in pack(w[a_ids], q / 2, "best")]
-    med_bins = [[int(b_ids[i]) for i in bn]
-                for bn in pack(w[b_ids], q / 2, "best")]
-    small_bins = [[int(b_ids[i]) for i in bn]
-                  for bn in pack(w[b_ids], q / 3, "best")]
-    bins = big_bins + med_bins + small_bins
-    nb, nm = len(big_bins), len(med_bins)
-    reducers: list[list[int]] = []
-    # step 2: all pairs of big bins
-    for i in range(nb):
-        for j in range(i + 1, nb):
-            reducers.append([i, j])
-    if nb == 1:
-        # single big bin still pairs internally via itself? pairs inside one
-        # bin never co-reduce otherwise; give it one reducer alone
-        reducers.append([0])
-    # step 3: big x medium
-    for i in range(nb):
-        for j in range(nm):
-            reducers.append([i, nb + j])
-    # step 4: all pairs of small bins, capacity 3 in the unit world
-    sub, _ = plan_unit(len(small_bins), 3)
-    off = nb + nm
-    for red in sub:
-        reducers.append([off + i for i in red])
-    return MappingSchema(
-        weights=w, q=q, bins=bins, reducers=reducers,
-        algorithm="hybrid-alg5",
-        meta={"bins_overlap": True, "big_bins": nb, "med_bins": nm,
-              "small_bins": len(small_bins)},
-    )
+    w = np.asarray(weights, dtype=np.float64)
+    m = len(w)
+    if m == 0:
+        return MappingSchema(w, q, [], [], algorithm="empty", lower_bound=0.0)
+    big = _check_a2a_feasible(w, q)
+    lb = a2a_comm_lower_bound(w, q)
+    if float(np.sum(w)) <= q + 1e-12:
+        return MappingSchema(
+            w, q, [[i] for i in range(m)], [list(range(m))],
+            algorithm="single", lower_bound=lb)
+    if len(big) == 1:
+        out = _plan_big_input(w, q, int(big[0]), "auto", use_cache=False)
+        out.lower_bound = lb
+        return out
+    prof = A2AProfile(w, q)
+    cands = [strat.build(prof) for strat, _ in a2a_portfolio(prof)]
+    assert cands, "portfolio produced no schema"
+    out = min(cands, key=lambda s: s.communication_cost())
+    out.lower_bound = lb
+    return out
 
 
-def _plan_big_input(w: np.ndarray, q: float, big: int,
-                    method: str) -> MappingSchema:
+def estimate_a2a(weights: Sequence[float], q: float) -> tuple[str, float]:
+    """(winning strategy label, exact cost) without building any schema.
+
+    This is the planning fast path: it mirrors ``plan_a2a``'s dispatch
+    (single reducer / big input / registry portfolio) but never materializes
+    reducers, so it is safe to call on instances whose plan would have
+    millions of them.
+    """
+    w = np.asarray(weights, dtype=np.float64)
+    m = len(w)
+    if m == 0:
+        return "empty", 0.0
+    big = _check_a2a_feasible(w, q)
+    s = float(np.sum(w))
+    if s <= q + 1e-12:
+        return "single", s
+    if len(big) == 1:
+        b = int(big[0])
+        wb = float(w[b])
+        rest_w = np.delete(w, b)
+        if len(rest_w) and float(np.max(rest_w)) > q - wb + 1e-12:
+            raise InfeasibleError(
+                "an input cannot share a reducer with the big input")
+        n_small = len(pack(rest_w, q - wb, "best"))
+        s_rest = float(np.sum(rest_w))
+        sub_name, sub_cost = estimate_a2a(rest_w, q)
+        return (f"big-input+{sub_name}",
+                wb * n_small + s_rest + sub_cost)
+    prof = A2AProfile(w, q)
+    portfolio = a2a_portfolio(prof)
+    assert portfolio, "portfolio produced no strategy"
+    strat, est = argmin_estimate(portfolio)
+    return strat.name, est
+
+
+def _plan_big_input(w: np.ndarray, q: float, big: int, method: str,
+                    use_cache: bool = True) -> MappingSchema:
     """Section 9: one input of size in (q/2, q)."""
     wb = float(w[big])
     rest = [i for i in range(len(w)) if i != big]
@@ -212,7 +269,8 @@ def _plan_big_input(w: np.ndarray, q: float, big: int,
         weights=w, q=q, bins=bins, reducers=reducers,
         algorithm="big-input-pairing", meta={"bins_overlap": True})
     # (b) all pairs among the small inputs: recurse on the sub-universe
-    sub = plan_a2a(rest_w, q, method="auto" if method == "auto" else method)
+    sub = plan_a2a(rest_w, q, method="auto" if method == "auto" else method,
+                   use_cache=use_cache)
     sub_bins = [[rest[i] for i in bn] for bn in sub.bins]
     schema_b = MappingSchema(
         weights=w, q=q, bins=sub_bins, reducers=sub.reducers,
@@ -221,6 +279,124 @@ def _plan_big_input(w: np.ndarray, q: float, big: int,
     out.algorithm = f"big-input+{sub.algorithm}"
     out.meta["bins_overlap"] = True
     return out
+
+
+# ---------------------------------------------------------------------------
+# some-pairs (Ullman & Ullman): cover an explicit subset of the pairs
+# ---------------------------------------------------------------------------
+def _normalize_pairs(m: int, pairs) -> np.ndarray:
+    p = np.asarray(list(pairs), dtype=np.int64).reshape(-1, 2)
+    if p.size == 0:
+        return p
+    if np.any(p < 0) or np.any(p >= m):
+        raise ValueError("pair references an input id out of range")
+    p = p[p[:, 0] != p[:, 1]]
+    p = np.sort(p, axis=1)                       # unordered pairs
+    return np.unique(p, axis=0)
+
+
+def _sparse_layout(w: np.ndarray, q: float, p: np.ndarray):
+    """Bins of q/2 over pair-incident inputs; a reducer per *needed* bin
+    pair.  Returns (bins, cross, lone, cost): cross = distinct inter-bin
+    pairs, lone = bins whose internal pairs are covered by no cross reducer.
+    """
+    incident = np.unique(p.ravel())
+    sub_bins = pack(w[incident], q / 2.0, "best")
+    bins = [[int(incident[i]) for i in bn] for bn in sub_bins]
+    bin_of = np.full(len(w), -1, dtype=np.int64)
+    for b, members in enumerate(bins):
+        bin_of[members] = b
+    pb = np.sort(np.stack([bin_of[p[:, 0]], bin_of[p[:, 1]]], axis=1), axis=1)
+    nb = len(bins)
+    bw = np.array([float(np.sum(w[np.asarray(b)])) for b in bins])
+    codes = np.unique(pb[:, 0] * nb + pb[:, 1])
+    b1, b2 = codes // nb, codes % nb
+    inter = b1 != b2
+    cross = np.stack([b1[inter], b2[inter]], axis=1)
+    internal = b1[~inter]                        # bins with an internal pair
+    covered = np.zeros(nb, dtype=bool)
+    covered[cross.ravel()] = True
+    lone = internal[~covered[internal]]
+    cost = float(np.sum(bw[cross.ravel()])) + float(np.sum(bw[lone]))
+    return bins, cross, lone, cost
+
+
+def plan_some_pairs(weights: Sequence[float], q: float, pairs,
+                    method: str = "auto") -> MappingSchema:
+    """Mapping schema covering an explicit set of required pairs.
+
+    The some-pairs problem (Ullman & Ullman) sits between A2A (all pairs
+    required) and nothing: when the pair set is dense the A2A portfolio is
+    the right tool, and when it is sparse a schema should only pay for the
+    pairs that exist.  Three registered strategies, argmin by exact
+    estimate, only the winner is built:
+
+      'a2a'     — the full A2A registry portfolio (covers every pair);
+      'sparse'  — bins of q/2 over pair-incident inputs, one reducer per
+                  *needed* bin pair (inputs with no required pair are never
+                  shipped: meta['partial_cover']=True);
+      'pairs'   — one reducer per required pair (optimal for very sparse P).
+
+    ``pairs`` is an iterable of (i, j) index pairs; order and duplicates are
+    ignored.  The returned schema carries the replication-rate lower bound
+    for the pair set (``some_pairs_comm_lower_bound``).
+    """
+    w = np.asarray(weights, dtype=np.float64)
+    m = len(w)
+    p = _normalize_pairs(m, pairs)
+    if m == 0 or len(p) == 0:
+        return MappingSchema(w, q, [], [], algorithm="some-pairs-empty",
+                             meta={"partial_cover": True}, lower_bound=0.0)
+    pair_w = w[p[:, 0]] + w[p[:, 1]]
+    if float(np.max(pair_w)) > q + 1e-12:
+        i, j = p[int(np.argmax(pair_w))]
+        raise InfeasibleError(f"required pair ({i},{j}) exceeds q")
+    lb = some_pairs_comm_lower_bound(w, q, p)
+
+    candidates: list[tuple[str, float]] = []
+    sparse = None
+    incident = np.unique(p.ravel())
+    if method in ("auto", "sparse") and \
+            float(np.max(w[incident])) <= q / 2.0 + 1e-12:
+        sparse = _sparse_layout(w, q, p)
+        candidates.append(("sparse", sparse[3]))
+    if method in ("auto", "pairs"):
+        candidates.append(("pairs", float(np.sum(pair_w))))
+    if method in ("auto", "a2a"):
+        try:
+            _, a2a_cost = estimate_a2a(w, q)
+            candidates.append(("a2a", a2a_cost))
+        except InfeasibleError:
+            pass
+    if not candidates:
+        raise InfeasibleError(f"no some-pairs strategy for method={method!r}")
+    winner, est = min(candidates, key=lambda c: c[1])
+
+    if winner == "a2a":
+        schema = plan_a2a(w, q)
+        schema.algorithm = f"some-pairs:a2a:{schema.algorithm}"
+    elif winner == "sparse":
+        bins, cross, lone, _ = sparse
+        reducers = [[int(a), int(b)] for a, b in cross]
+        reducers += [[int(b)] for b in lone]
+        schema = MappingSchema(
+            weights=w, q=q, bins=bins, reducers=reducers,
+            algorithm="some-pairs:sparse-bins",
+            meta={"partial_cover": True, "num_bins": len(bins)})
+    else:  # 'pairs'
+        incident_list = [int(i) for i in incident]
+        bin_of = {i: b for b, i in enumerate(incident_list)}
+        schema = MappingSchema(
+            weights=w, q=q,
+            bins=[[i] for i in incident_list],
+            reducers=[[bin_of[int(i)], bin_of[int(j)]] for i, j in p],
+            algorithm="some-pairs:pair-per-reducer",
+            meta={"partial_cover": True})
+    schema.lower_bound = lb
+    schema.meta["required_pairs"] = int(len(p))
+    schema.meta["estimated_cost"] = est
+    schema.meta["portfolio"] = dict(candidates)
+    return schema
 
 
 # ---------------------------------------------------------------------------
@@ -239,11 +415,12 @@ def plan_x2y(wx: Sequence[float], wy: Sequence[float], q: float,
     m, n = len(wx), len(wy)
     if m == 0 or n == 0:
         return MappingSchema(np.concatenate([wx, wy]), q, [], [],
-                             algorithm="empty")
+                             algorithm="empty", lower_bound=0.0)
     max_x, max_y = float(np.max(wx)), float(np.max(wy))
     if max_x + max_y > q + 1e-12:
         raise InfeasibleError("largest X and Y inputs cannot co-reduce")
     w_all = np.concatenate([wx, wy])
+    lb = x2y_comm_lower_bound(wx, wy, q)
     lo, hi = max_x, q - max_y
     grid = sorted({lo, hi, q / 2, *np.linspace(lo, hi, num_splits).tolist()})
     best: Optional[MappingSchema] = None
@@ -258,7 +435,8 @@ def plan_x2y(wx: Sequence[float], wy: Sequence[float], q: float,
         s = MappingSchema(
             weights=w_all, q=q, bins=bins, reducers=reducers,
             algorithm=f"x2y-binpack(b={b:.3g})",
-            meta={"b": b, "x_bins": nx, "y_bins": len(ybins)})
+            meta={"b": b, "x_bins": nx, "y_bins": len(ybins)},
+            lower_bound=lb)
         if best is None or s.communication_cost() < best.communication_cost():
             best = s
     assert best is not None
@@ -278,4 +456,5 @@ def naive_pairs(weights: Sequence[float], q: float) -> MappingSchema:
                 raise InfeasibleError(f"pair ({i},{j}) exceeds q")
             reducers.append([i, j])
     return MappingSchema(w, q, [[i] for i in range(m)], reducers,
-                         algorithm="naive-pairs")
+                         algorithm="naive-pairs",
+                         lower_bound=a2a_comm_lower_bound(w, q))

@@ -1,16 +1,43 @@
 """JAX execution engine for mapping schemas.
 
-The planner (repro.core) decides *where* inputs go; this package executes the
-plan on a device mesh: the map->reduce shuffle becomes a static gather whose
-communication volume is exactly the schema's communication cost, and the
-reduce phase becomes a vmapped/shard_mapped reducer function.
+The planner (``repro.core``) decides *where* inputs go; this package
+executes the plan on a device mesh: the map->reduce shuffle becomes a static
+gather whose communication volume is exactly the schema's communication
+cost, and the reduce phase becomes a vmapped/shard_mapped reducer function.
+The hardware adaptation (reducer slots, static gather plans, wave batching)
+is documented in DESIGN.md.
+
+Public API
+----------
+``build_plan(schema, ...)``
+    Flatten a :class:`repro.core.MappingSchema` into a :class:`ReducerPlan`
+    — static (R, L) index/mask arrays padded for the mesh and kernel tiles.
+    The plan carries the schema's provenance (``algorithm``,
+    ``lower_bound``, ``optimality_gap``) for downstream telemetry.
+``run_reducers(inputs, plan, reducer_fn, mesh=...)``
+    Execute a reducer function over every slot; the gather *is* the
+    shuffle.
+``pairwise_similarity(x, q=...)``
+    A2A application: all-pairs similarity through a planned schema.
+``some_pairs_similarity(x, pairs, q=...)``
+    Sparse variant (Ullman & Ullman's some-pairs problem): only the
+    required pairs must meet, only pair-incident inputs are shipped.
+``assemble_pair_matrix(blocks, plan, m)``
+    Scatter per-reducer blocks back into the global (m, m) matrix.
+``skew_join(...)``
+    X2Y application: skewed join via the Section-10 bipartite schema.
 """
 
 from .engine import ReducerPlan, build_plan, run_reducers
-from .allpairs import pairwise_similarity, assemble_pair_matrix
+from .allpairs import (
+    assemble_pair_matrix,
+    pairwise_similarity,
+    some_pairs_similarity,
+)
 from .skewjoin import skew_join
 
 __all__ = [
     "ReducerPlan", "build_plan", "run_reducers",
-    "pairwise_similarity", "assemble_pair_matrix", "skew_join",
+    "pairwise_similarity", "some_pairs_similarity", "assemble_pair_matrix",
+    "skew_join",
 ]

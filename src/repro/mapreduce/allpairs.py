@@ -4,23 +4,33 @@ Every input is a feature row (multi-hot friend vector, patient-history
 embedding, ...).  The planner guarantees each pair of rows meets at >= 1
 reducer; reducers compute the dense pairwise block with the MXU-friendly
 ``pairwise`` kernel; results are scattered back into the (m, m) matrix.
+
+``some_pairs_similarity`` is the sparse variant (Ullman & Ullman's
+some-pairs problem): only an explicit pair set must meet, the planner
+ships only pair-incident inputs, and the result is masked to the
+requested pairs.
 """
 
 from __future__ import annotations
 
 from functools import partial
-from typing import Optional
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import plan_a2a
+from repro.core import plan_a2a, plan_some_pairs
 from repro.core.schema import MappingSchema
 
 from .engine import ReducerPlan, build_plan, run_reducers
 
-__all__ = ["pairwise_similarity", "assemble_pair_matrix", "block_similarity"]
+__all__ = [
+    "pairwise_similarity",
+    "some_pairs_similarity",
+    "assemble_pair_matrix",
+    "block_similarity",
+]
 
 
 def block_similarity(block: jax.Array, mask: jax.Array, *,
@@ -70,6 +80,46 @@ def pairwise_similarity(
     fn = partial(block_similarity, metric=metric, use_kernel=use_kernel)
     blocks = run_reducers(x, plan, fn, mesh=mesh)    # (R, L, L)
     sims = assemble_pair_matrix(blocks, plan, m)
+    return sims, plan, schema
+
+
+def some_pairs_similarity(
+    x: jax.Array,                       # (m, d)
+    pairs: Sequence[tuple[int, int]],   # required pairs (i, j)
+    *,
+    q: float,
+    weights=None,                       # per-input sizes; default: uniform
+    schema: Optional[MappingSchema] = None,
+    metric: str = "dot",
+    mesh=None,
+    use_kernel: bool = False,
+    pad_slots_to: int = 1,
+):
+    """Similarity for an explicit pair set through a some-pairs schema.
+
+    Unlike :func:`pairwise_similarity`, only inputs incident to a required
+    pair are shipped to reducers (the planner's sparse strategies leave the
+    rest unplaced), and the returned matrix is masked to the required pairs
+    (symmetric).  Returns (sims (m, m), plan, schema).
+    """
+    m = x.shape[0]
+    if schema is None:
+        w = np.full(m, 1.0) if weights is None else np.asarray(weights, float)
+        schema = plan_some_pairs(w, q, pairs)
+    plan = build_plan(
+        schema,
+        pad_reducers_to=(mesh.devices.size if mesh is not None else 1),
+        pad_slots_to=pad_slots_to,
+    )
+    fn = partial(block_similarity, metric=metric, use_kernel=use_kernel)
+    blocks = run_reducers(x, plan, fn, mesh=mesh)    # (R, L, L)
+    sims = assemble_pair_matrix(blocks, plan, m)
+    want = np.zeros((m, m), dtype=bool)
+    p = np.asarray(list(pairs), dtype=np.int64).reshape(-1, 2)
+    if p.size:
+        want[p[:, 0], p[:, 1]] = True
+        want[p[:, 1], p[:, 0]] = True
+    sims = jnp.where(jnp.asarray(want), sims, 0.0)
     return sims, plan, schema
 
 

@@ -36,6 +36,11 @@ class ReducerPlan:
     idx   (R, L) int32 — input ids per reducer slot; padded entries point at
           input 0 and are masked out.
     mask  (R, L) bool  — slot validity.
+
+    The plan also carries the schema's provenance so downstream telemetry
+    (benchmarks, serving dashboards) can report which registry strategy
+    produced the traffic and how far it sits from the paper's
+    replication-rate lower bound.
     """
 
     idx: np.ndarray
@@ -43,6 +48,8 @@ class ReducerPlan:
     num_reducers: int          # before padding
     comm_cost: float           # schema communication cost (weighted bytes)
     max_inputs: int
+    algorithm: str = "unknown"             # winning strategy (provenance)
+    lower_bound: Optional[float] = None    # paper's comm lower bound
 
     @property
     def R(self) -> int:
@@ -51,6 +58,13 @@ class ReducerPlan:
     @property
     def L(self) -> int:
         return int(self.idx.shape[1])
+
+    @property
+    def optimality_gap(self) -> Optional[float]:
+        """comm_cost / lower_bound (>= 1.0), or None without a bound."""
+        if self.lower_bound is None or self.lower_bound <= 0.0:
+            return None
+        return self.comm_cost / self.lower_bound
 
 
 def build_plan(schema: MappingSchema, *, pad_reducers_to: int = 1,
@@ -69,7 +83,9 @@ def build_plan(schema: MappingSchema, *, pad_reducers_to: int = 1,
         idx[r, : len(ids)] = ids
         mask[r, : len(ids)] = True
     return ReducerPlan(idx=idx, mask=mask, num_reducers=R0,
-                       comm_cost=schema.communication_cost(), max_inputs=L0)
+                       comm_cost=schema.communication_cost(), max_inputs=L0,
+                       algorithm=schema.algorithm,
+                       lower_bound=schema.lower_bound)
 
 
 def run_reducers(

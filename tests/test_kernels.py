@@ -8,7 +8,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.kernels.pairwise.pairwise import pairwise_gram
 from repro.kernels.pairwise.ref import pairwise_gram_ref, pairwise_ref

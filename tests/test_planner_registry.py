@@ -1,0 +1,249 @@
+"""Strategy-registry planner: estimator exactness, cache, some-pairs.
+
+The contract that lets ``plan_a2a(method='auto')`` skip materialization is
+that every registered strategy's ``estimate`` equals the communication cost
+of the schema its ``build`` produces.  These tests enforce that invariant
+per strategy and end-to-end (estimate-based auto == materialize-everything
+portfolio), plus the PlanCache semantics and ``plan_some_pairs`` validity.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    InfeasibleError,
+    PLAN_CACHE,
+    estimate_a2a,
+    naive_pairs,
+    plan_a2a,
+    plan_a2a_materialized,
+    plan_some_pairs,
+    plan_unit,
+    some_pairs_comm_lower_bound,
+)
+from repro.core.schema import MappingSchema
+from repro.core.strategies import (
+    A2AProfile,
+    PlanCache,
+    a2a_portfolio,
+    unit_estimates,
+)
+
+
+@pytest.fixture(autouse=True)
+def _fresh_cache():
+    PLAN_CACHE.clear()
+    yield
+    PLAN_CACHE.clear()
+
+
+def unit_schema(reducers, bw, k) -> MappingSchema:
+    return MappingSchema(np.asarray(bw, float), float(k) * 10.0,
+                         [[i] for i in range(len(bw))], reducers,
+                         algorithm="unit")
+
+
+# ------------------------------------------------- estimator == built cost
+class TestUnitEstimates:
+    @pytest.mark.parametrize("n,k", [
+        (5, 2), (23, 2), (64, 2),              # alg_even k=2
+        (10, 4), (40, 6), (100, 10),           # alg_even larger k
+        (7, 3), (16, 3), (31, 3), (23, 5),     # alg_odd
+        (25, 5), (49, 7), (20, 5),             # au_square (+ filtered)
+        (30, 6), (11, 4), (29, 7),             # au_projective / alg3
+        (27, 3), (16, 2), (125, 5),            # alg4
+        (3, 8), (2, 2),                        # single
+    ])
+    def test_estimate_matches_built_cost(self, n, k):
+        rng = np.random.default_rng(n * 100 + k)
+        bw = rng.uniform(0.1, 1.0, n)
+        cands = unit_estimates(bw, k)
+        assert cands, f"no unit strategy for n={n}, k={k}"
+        for strat, est in cands:
+            reds = strat.build(n, k)
+            s = unit_schema(reds, bw, k)
+            s.validate("a2a")
+            assert np.isclose(est, s.communication_cost(), rtol=1e-9), (
+                f"{strat.name}: estimate {est} != built "
+                f"{s.communication_cost()} at n={n}, k={k}")
+
+    def test_every_registered_strategy_exercised(self):
+        seen = set()
+        for n, k in [(23, 2), (31, 3), (25, 5), (30, 6), (11, 4),
+                     (27, 3), (3, 8), (127, 12)]:
+            bw = np.ones(n)
+            for strat, _ in unit_estimates(bw, k):
+                seen.add(strat.name)
+        assert {"single", "alg_even", "alg_odd", "au_square",
+                "au_projective", "alg3", "alg4"} <= seen
+
+    def test_plan_unit_api_unchanged(self):
+        reds, name = plan_unit(25, 5)
+        assert name == "au_square"
+        s = unit_schema(reds, np.ones(25), 5)
+        s.validate("a2a")
+
+
+class TestA2AEstimates:
+    def test_strategy_estimates_exact(self):
+        rng = np.random.default_rng(7)
+        for _ in range(25):
+            m = int(rng.integers(3, 50))
+            w = rng.uniform(0.01, 0.5, m)
+            if w.sum() <= 1.0:
+                continue
+            prof = A2AProfile(w, 1.0)
+            for strat, est in a2a_portfolio(prof):
+                s = strat.build(prof)
+                assert np.isclose(est, s.communication_cost(), rtol=1e-9), (
+                    f"{strat.name}: {est} != {s.communication_cost()}")
+
+    def test_auto_matches_materialized_portfolio(self):
+        rng = np.random.default_rng(11)
+        for _ in range(20):
+            m = int(rng.integers(2, 60))
+            w = rng.uniform(0.01, 0.5, m)
+            fast = plan_a2a(w, 1.0)
+            fast.validate("a2a")
+            slow = plan_a2a_materialized(w, 1.0)
+            assert fast.communication_cost() <= \
+                slow.communication_cost() + 1e-9
+
+    def test_estimate_a2a_no_materialization_matches_plan(self):
+        rng = np.random.default_rng(13)
+        w = rng.uniform(0.02, 0.4, 40)
+        name, est = estimate_a2a(w, 1.0)
+        s = plan_a2a(w, 1.0)
+        assert np.isclose(est, s.communication_cost(), rtol=1e-9)
+        assert name in s.algorithm
+
+    def test_big_input_estimate(self):
+        w = np.array([0.6] + [0.05] * 20)
+        name, est = estimate_a2a(w, 1.0)
+        s = plan_a2a(w, 1.0)
+        assert name.startswith("big-input")
+        assert np.isclose(est, s.communication_cost(), rtol=1e-9)
+
+
+# ------------------------------------------------------------- lower bounds
+class TestLowerBoundWiring:
+    def test_every_plan_carries_lower_bound(self):
+        rng = np.random.default_rng(3)
+        w = rng.uniform(0.02, 0.4, 30)
+        for schema in (plan_a2a(w, 1.0),
+                       plan_a2a(w, 1.0, method="binpack-k2"),
+                       plan_a2a([0.6] + [0.05] * 10, 1.0),
+                       plan_a2a([0.1, 0.2], 1.0),
+                       naive_pairs(w, 1.0)):
+            assert schema.lower_bound is not None
+            gap = schema.optimality_gap()
+            assert gap is not None and gap >= 0.999, schema.algorithm
+
+    def test_gap_none_without_bound(self):
+        s = MappingSchema(np.ones(2), 2.0, [[0], [1]], [[0, 1]])
+        assert s.optimality_gap() is None
+
+
+# ------------------------------------------------------------------- cache
+class TestPlanCache:
+    def test_permutation_hits_cache(self):
+        rng = np.random.default_rng(5)
+        w = rng.uniform(0.02, 0.4, 25)
+        s1 = plan_a2a(w, 1.0)
+        misses = PLAN_CACHE.misses
+        perm = rng.permutation(len(w))
+        s2 = plan_a2a(w[perm], 1.0)
+        assert PLAN_CACHE.misses == misses     # pure hit
+        assert PLAN_CACHE.hits >= 1
+        s2.validate("a2a")
+        assert np.isclose(s1.communication_cost(), s2.communication_cost())
+
+    def test_remap_preserves_input_identity(self):
+        w = np.array([0.3, 0.1, 0.25, 0.2])
+        plan_a2a(w, 1.0)                       # prime the cache
+        perm = np.array([2, 0, 3, 1])
+        s = plan_a2a(w[perm], 1.0)
+        # input i of the permuted call must carry weight w[perm][i]
+        np.testing.assert_allclose(s.weights, w[perm])
+        s.validate("a2a")
+
+    def test_lru_eviction(self):
+        cache = PlanCache(maxsize=2)
+        cache.put(("a",), 1)
+        cache.put(("b",), 2)
+        cache.put(("c",), 3)
+        assert len(cache) == 2
+        assert cache.get(("a",)) is None
+        assert cache.get(("c",)) == 3
+
+    def test_use_cache_false_bypasses(self):
+        w = np.full(10, 0.3)
+        plan_a2a(w, 1.0, use_cache=False)
+        assert len(PLAN_CACHE) == 0
+
+    def test_registering_strategy_invalidates_cache(self):
+        from repro.core import A2A_REGISTRY, register_a2a_strategy
+        w = np.full(10, 0.3)
+        plan_a2a(w, 1.0)
+        assert len(PLAN_CACHE) > 0
+        register_a2a_strategy(lambda prof: [])     # no-op strategy factory
+        try:
+            assert len(PLAN_CACHE) == 0            # stale plans dropped
+        finally:
+            A2A_REGISTRY.pop()
+
+
+# -------------------------------------------------------------- some pairs
+class TestPlanSomePairs:
+    def _random_instance(self, seed, m=30, density=0.2):
+        rng = np.random.default_rng(seed)
+        w = rng.uniform(0.02, 0.3, m)
+        all_pairs = [(i, j) for i in range(m) for j in range(i + 1, m)]
+        take = max(1, int(density * len(all_pairs)))
+        idx = rng.choice(len(all_pairs), size=take, replace=False)
+        return w, [all_pairs[i] for i in idx]
+
+    @pytest.mark.parametrize("density", [0.02, 0.2, 0.8])
+    def test_valid_and_bounded(self, density):
+        w, pairs = self._random_instance(17, density=density)
+        s = plan_some_pairs(w, 1.0, pairs)
+        s.validate("some", required_pairs=pairs)
+        assert s.lower_bound is not None
+        assert s.communication_cost() >= \
+            some_pairs_comm_lower_bound(w, 1.0, pairs) * 0.999
+
+    def test_estimated_cost_exact(self):
+        for density in (0.05, 0.3):
+            w, pairs = self._random_instance(23, density=density)
+            s = plan_some_pairs(w, 1.0, pairs)
+            assert np.isclose(s.meta["estimated_cost"],
+                              s.communication_cost(), rtol=1e-9), s.algorithm
+
+    def test_sparse_cheaper_than_a2a(self):
+        w, pairs = self._random_instance(29, m=40, density=0.05)
+        sparse = plan_some_pairs(w, 1.0, pairs)
+        dense = plan_a2a(w, 1.0)
+        assert sparse.communication_cost() < dense.communication_cost()
+
+    def test_duplicate_and_reversed_pairs_ignored(self):
+        w = np.full(6, 0.2)
+        s1 = plan_some_pairs(w, 1.0, [(0, 1), (1, 0), (0, 1), (2, 3)])
+        assert s1.meta["required_pairs"] == 2
+        s1.validate("some", required_pairs=[(0, 1), (2, 3)])
+
+    def test_infeasible_pair_raises(self):
+        with pytest.raises(InfeasibleError):
+            plan_some_pairs([0.7, 0.6, 0.1], 1.0, [(0, 1)])
+
+    def test_empty_pairs(self):
+        s = plan_some_pairs([0.2, 0.3], 1.0, [])
+        assert s.num_reducers == 0
+        assert s.communication_cost() == 0.0
+
+    def test_big_incident_input_falls_back(self):
+        # one input > q/2 rules out the sparse-bin strategy but the pair
+        # and a2a strategies still apply
+        w = [0.6, 0.1, 0.1, 0.1]
+        pairs = [(0, 1), (2, 3)]
+        s = plan_some_pairs(w, 1.0, pairs)
+        s.validate("some", required_pairs=pairs)
