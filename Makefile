@@ -1,21 +1,36 @@
 # Repo CI entry points (documented in README.md "Verify").
-# The tier-1 command is `make test`; `make ci` adds the compileall lint pass.
+# The tier-1 command is `make test`; `make ci` adds the compileall lint pass
+# and runs the schema-conformance + executor-differential suites first
+# (fail fast on the paper's invariants before the long e2e sweeps).
 
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: test lint ci bench bench-quick
+.PHONY: test test-fast test-schemas lint ci bench bench-quick bench-skewed
 
 test:
 	$(PYTHON) -m pytest -q
 
+# tier-1 minus the `slow` marker (full arch/kernel/model-decode e2e sweeps)
+test-fast:
+	$(PYTHON) -m pytest -q -m "not slow"
+
+# the paper's correctness core: schema conformance + bucketed-executor
+# differential tests
+test-schemas:
+	$(PYTHON) -m pytest -q tests/test_schema_conformance.py \
+		tests/test_bucketed_executor.py
+
 lint:
 	$(PYTHON) -m compileall -q src
 
-ci: lint test
+ci: lint test-schemas test
 
 bench:
 	$(PYTHON) benchmarks/bench_planner.py
 
 bench-quick:
 	$(PYTHON) benchmarks/bench_planner.py --quick
+
+bench-skewed:
+	$(PYTHON) benchmarks/bench_engine.py --skewed

@@ -59,6 +59,8 @@ from .bounds import (
     x2y_reducers_lower_bound,
 )
 from .planner import (
+    bucket_summary,
+    compute_buckets,
     estimate_a2a,
     naive_pairs,
     plan_a2a,
@@ -83,6 +85,7 @@ __all__ = [
     "MappingSchema", "InfeasibleError",
     "plan_a2a", "plan_a2a_materialized", "plan_x2y", "plan_unit",
     "plan_some_pairs", "estimate_a2a", "naive_pairs",
+    "compute_buckets", "bucket_summary",
     "PLAN_CACHE", "PlanCache",
     "UNIT_REGISTRY", "A2A_REGISTRY",
     "register_unit_strategy", "register_a2a_strategy",

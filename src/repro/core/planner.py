@@ -65,6 +65,8 @@ __all__ = [
     "plan_some_pairs",
     "estimate_a2a",
     "naive_pairs",
+    "compute_buckets",
+    "bucket_summary",
 ]
 
 
@@ -441,6 +443,80 @@ def plan_x2y(wx: Sequence[float], wy: Sequence[float], q: float,
             best = s
     assert best is not None
     return best
+
+
+# ---------------------------------------------------------------------------
+# capacity buckets: group reducers by padded slot count (skew-aware shuffle)
+# ---------------------------------------------------------------------------
+def compute_buckets(slot_counts: Sequence[int], *, pad_slots_to: int = 1,
+                    max_buckets: int = 8) -> list[tuple[int, np.ndarray]]:
+    """Group reducers into a small number of capacity buckets.
+
+    ``slot_counts[r]`` is the number of input slots at reducer ``r``.  A
+    dense execution plan pads every reducer to ``max(slot_counts)`` — on a
+    skewed schema (one heavy reducer, many light ones) that wastes
+    memory and compute quadratically in the reducer function.  Instead,
+    reducers are grouped by *bucket width*: the smallest
+    ``pad_slots_to * 2^j`` (clamped to the dense width) that holds their
+    slot count.  Each bucket is then executed as its own vmapped batch
+    padded only to its own width.
+
+    If more than ``max_buckets`` distinct widths appear, the narrowest
+    buckets are merged upward (a reducer never lands in a bucket narrower
+    than its slot count), keeping per-execution dispatch overhead bounded.
+
+    Returns ``[(width, reducer_ids), ...]`` with widths ascending and
+    ``reducer_ids`` the sorted original reducer indices of the bucket.
+    Empty input -> empty list.
+    """
+    counts = np.asarray(list(slot_counts), dtype=np.int64)
+    if counts.size == 0:
+        return []
+    assert pad_slots_to >= 1 and max_buckets >= 1
+    dense_w = -(-max(int(counts.max()), 1) // pad_slots_to) * pad_slots_to
+    # width(n) = pad_slots_to * 2^ceil(log2(n / pad_slots_to)), <= dense_w
+    tiles = np.maximum(-(-counts // pad_slots_to), 1)
+    widths = pad_slots_to * (
+        2 ** np.ceil(np.log2(tiles)).astype(np.int64))
+    widths = np.minimum(widths, dense_w)
+    uniq = np.unique(widths)
+    while len(uniq) > max_buckets:
+        # merge the narrowest bucket into the next width up
+        widths[widths == uniq[0]] = uniq[1]
+        uniq = uniq[1:]
+    return [(int(w), np.flatnonzero(widths == w)) for w in uniq]
+
+
+def bucket_summary(schema: MappingSchema, *, pad_slots_to: int = 1,
+                   max_buckets: int = 8) -> dict:
+    """plan -> buckets telemetry: how much padding bucketing saves.
+
+    Returns a dict with the dense padded-slot count (every reducer padded
+    to the global max), the bucketed count (each reducer padded to its
+    bucket width), the savings ratio, and a per-bucket breakdown — the
+    numbers the serving dashboards and ``benchmarks/bench_engine.py``
+    report.  Pure schema arithmetic; nothing is executed.
+    """
+    expanded = schema.expand()
+    counts = [len(ids) for ids in expanded]
+    buckets = compute_buckets(counts, pad_slots_to=pad_slots_to,
+                              max_buckets=max_buckets)
+    dense_w = -(-max(counts, default=1) // pad_slots_to) * pad_slots_to
+    dense_slots = dense_w * len(expanded)
+    rows = [{"width": w, "reducers": int(len(ids)),
+             "padded_slots": int(w * len(ids)),
+             "valid_slots": int(sum(counts[i] for i in ids))}
+            for w, ids in buckets]
+    bucketed_slots = sum(r["padded_slots"] for r in rows)
+    return {
+        "algorithm": schema.algorithm,
+        "num_reducers": len(expanded),
+        "dense_width": int(dense_w),
+        "dense_padded_slots": int(dense_slots),
+        "bucketed_padded_slots": int(bucketed_slots),
+        "padding_savings": float(dense_slots / max(bucketed_slots, 1)),
+        "buckets": rows,
+    }
 
 
 # ---------------------------------------------------------------------------

@@ -22,7 +22,7 @@ from jax.experimental.pallas import tpu as pltpu
 __all__ = ["pairwise_gram"]
 
 
-def _gram_kernel(x_ref, y_ref, o_ref, acc_ref, *, n_k: int):
+def _gram_kernel(x_ref, y_ref, o_ref, acc_ref, *, n_k: int, m: int, n: int):
     @pl.when(pl.program_id(2) == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
@@ -33,9 +33,21 @@ def _gram_kernel(x_ref, y_ref, o_ref, acc_ref, *, n_k: int):
         preferred_element_type=jnp.float32,
     )
 
+    # masked tail-tile: the row/col grids are ceil(M/bm) x ceil(N/bn), so the
+    # last tiles can hang past the array — whatever the OOB lanes accumulated
+    # is zeroed at flush instead of padding M/N up front.  (program_id is
+    # read outside the `when` body: interpret mode can't substitute it
+    # inside a cond branch.)
+    bm, bn = acc_ref.shape
+    row = pl.program_id(0) * bm + jax.lax.broadcasted_iota(
+        jnp.int32, (bm, bn), 0)
+    col = pl.program_id(1) * bn + jax.lax.broadcasted_iota(
+        jnp.int32, (bm, bn), 1)
+    valid = (row < m) & (col < n)
+
     @pl.when(pl.program_id(2) == n_k - 1)
     def _flush():
-        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+        o_ref[...] = jnp.where(valid, acc_ref[...], 0).astype(o_ref.dtype)
 
 
 @functools.partial(
@@ -58,30 +70,31 @@ def pairwise_gram(
     bn = min(bn, max(8, N))
     bk = min(bk, max(8, K))
 
-    def pad(a, mult0, mult1):
-        p0 = -a.shape[0] % mult0
+    def pad(a, mult1):
+        # only K is materially padded (it feeds the accumulation, so OOB
+        # garbage there would corrupt results); M/N tails are handled by the
+        # kernel's masked flush — narrow bucket blocks stay narrow instead
+        # of rounding up to a full tile row/column.
         p1 = -a.shape[1] % mult1
-        if p0 or p1:
-            a = jnp.pad(a, ((0, p0), (0, p1)))
+        if p1:
+            a = jnp.pad(a, ((0, 0), (0, p1)))
         return a
 
-    xp = pad(x, bm, bk)
-    yp = pad(y, bn, bk)
-    Mp, Kp = xp.shape
-    Np = yp.shape[0]
+    xp = pad(x, bk)
+    yp = pad(y, bk)
+    Kp = xp.shape[1]
     n_k = Kp // bk
-    grid = (Mp // bm, Np // bn, n_k)
+    grid = (-(-M // bm), -(-N // bn), n_k)
 
-    out = pl.pallas_call(
-        functools.partial(_gram_kernel, n_k=n_k),
+    return pl.pallas_call(
+        functools.partial(_gram_kernel, n_k=n_k, m=M, n=N),
         grid=grid,
         in_specs=[
             pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
             pl.BlockSpec((bn, bk), lambda i, j, k: (j, k)),
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((Mp, Np), out_dtype),
+        out_shape=jax.ShapeDtypeStruct((M, N), out_dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
         interpret=interpret,
     )(xp, yp)
-    return out[:M, :N]

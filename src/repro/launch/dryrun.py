@@ -25,6 +25,7 @@ import traceback
 import jax
 import jax.numpy as jnp
 
+from repro.compat import set_mesh
 from repro.configs.base import SHAPES, get_config, list_archs
 from repro.launch.mesh import make_production_mesh, mesh_axis_sizes
 from repro.launch.roofline import analyze_compiled
@@ -63,7 +64,7 @@ def lower_cell(arch: str, shape: str, multi_pod: bool, flags=None,
     model = build_model(cfg, flags, rules)
     specs = input_specs(cfg, shape, flags)
 
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         if kind == "train":
             opt_cfg = AdamWConfig(
                 moment_dtype="bfloat16" if cfg.param_count() > 100e9

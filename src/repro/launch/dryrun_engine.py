@@ -21,27 +21,26 @@ import numpy as np
 
 from repro.core import naive_pairs, plan_a2a
 from repro.launch.mesh import make_production_mesh
-from repro.launch.roofline import HW
+from repro.launch.roofline import HW, combine_hlo_stats
 from repro.launch.hlo_analysis import analyze_hlo_text
 from repro.mapreduce.allpairs import block_similarity
-from repro.mapreduce.engine import build_plan, lower_reducers
+from repro.mapreduce.engine import (
+    build_plan,
+    lower_reducers,
+    lower_reducers_bucketed,
+)
 
 RESULTS = os.path.join(os.path.dirname(__file__), "..", "..", "..",
                        "benchmarks", "results", "dryrun")
 
 
-def analyze(plan, m, d, mesh, name):
-    lowered = lower_reducers(
-        (m, d), plan, functools.partial(block_similarity, metric="dot"),
-        mesh, dtype=jnp.bfloat16)
-    compiled = lowered.compile()
-    stats = analyze_hlo_text(compiled.as_text(),
-                             num_partitions=mesh.devices.size)
+def _stats_rec(plan, name, stats, padded_elements, extra=None):
     hw = HW()
     rec = {
         "name": name,
         "reducers": plan.num_reducers,
         "slots": int(plan.mask.sum()),
+        "padded_elements": int(padded_elements),
         "schema_comm_cost_rows": float(plan.comm_cost),
         "flops_per_device": stats.flops,
         "hbm_bytes_per_device": stats.hbm_bytes,
@@ -50,7 +49,37 @@ def analyze(plan, m, d, mesh, name):
         "t_memory": stats.hbm_bytes / hw.hbm_bw,
         "t_collective": stats.collective_bytes / hw.link_bw,
     }
+    if extra:
+        rec.update(extra)
     return rec
+
+
+def analyze(plan, m, d, mesh, name):
+    """Dense path: one program padded to the global max slot count."""
+    lowered = lower_reducers(
+        (m, d), plan, functools.partial(block_similarity, metric="dot"),
+        mesh, dtype=jnp.bfloat16)
+    compiled = lowered.compile()
+    stats = analyze_hlo_text(compiled.as_text(),
+                             num_partitions=mesh.devices.size)
+    return _stats_rec(plan, name, stats, plan.dense_padded_elements)
+
+
+def analyze_bucketed(plan, m, d, mesh, name):
+    """Bucketed path: one program per capacity bucket; terms are summed
+    (the bucket programs run back-to-back on the same mesh)."""
+    per_bucket = lower_reducers_bucketed(
+        (m, d), plan, functools.partial(block_similarity, metric="dot"),
+        mesh, dtype=jnp.bfloat16)
+    stats = combine_hlo_stats([
+        analyze_hlo_text(lowered.compile().as_text(),
+                         num_partitions=mesh.devices.size)
+        for _, lowered in per_bucket
+    ])
+    return _stats_rec(
+        plan, name, stats, plan.bucketed_padded_elements,
+        extra={"bucket_widths": plan.bucket_widths(),
+               "padding_savings": float(plan.padding_savings)})
 
 
 def main():
@@ -58,11 +87,18 @@ def main():
     ap.add_argument("--m", type=int, default=1024)
     ap.add_argument("--d", type=int, default=2048)
     ap.add_argument("--q", type=float, default=32.0)
+    ap.add_argument("--zipf", action="store_true",
+                    help="Zipf-skewed input sizes (bucketed-executor case)")
     args = ap.parse_args()
 
     mesh = make_production_mesh(multi_pod=False)
     n_dev = mesh.devices.size
-    w = np.ones(args.m)
+    if args.zipf:
+        rng = np.random.default_rng(0)
+        w = np.clip(rng.zipf(1.6, args.m) / 16.0, 0.05,
+                    args.q * 0.45)
+    else:
+        w = np.ones(args.m)
 
     schema = plan_a2a(w, args.q)
     plan_opt = build_plan(schema, pad_reducers_to=n_dev)
@@ -71,16 +107,19 @@ def main():
     rows = [
         analyze(plan_opt, args.m, args.d, mesh,
                 f"planner[{schema.algorithm}]"),
+        analyze_bucketed(plan_opt, args.m, args.d, mesh,
+                         f"planner-bucketed[{schema.algorithm}]"),
         analyze(plan_nv, args.m, args.d, mesh, "naive-all-pairs"),
     ]
-    base = rows[1]
+    base = rows[-1]
     for r in rows:
         r["shuffle_bytes_vs_naive"] = (
             r["hbm_bytes_per_device"] / max(base["hbm_bytes_per_device"], 1))
         r["comm_cost_vs_naive"] = (
             r["schema_comm_cost_rows"] / base["schema_comm_cost_rows"])
-        print(f"{r['name']:32s} reducers={r['reducers']:8d} "
+        print(f"{r['name']:40s} reducers={r['reducers']:8d} "
               f"gather_rows={r['slots']:9d} "
+              f"padded={r['padded_elements']:10d} "
               f"t_m={r['t_memory']:.4f}s t_x={r['t_collective']:.4f}s "
               f"bytes_vs_naive={r['shuffle_bytes_vs_naive']:.3f} "
               f"(schema comm ratio {r['comm_cost_vs_naive']:.3f})")

@@ -142,12 +142,19 @@ def _dot_flops(op: _Op, comp: _Computation) -> float:
     # result elements x contracted size x 2
     res = _shape_elems(op.type_str)
     m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.line)
-    operands = re.findall(r"\(([^)]*)\)", op.line)
-    # lhs operand name = first arg inside dot(...)
-    argm = re.search(op.opcode + r"\(%?([\w.\-]+)", op.line)
+    # lhs operand = first arg inside dot(...); depending on the XLA version
+    # the text format is `dot(%name, ...)` (type looked up from the def) or
+    # `dot(f32[32,16]{1,0} %name, ...)` (type inlined on the operand)
+    # layout braces may carry tiling annotations, e.g. {1,0:T(8,128)}
+    argm = re.search(
+        re.escape(op.opcode) +
+        r"\(\s*(?:([a-z][a-z0-9]*\[[0-9,]*\])(?:\{[^}]*\})?\s+)?"
+        r"%?([\w.\-]+)", op.line)
     csize = 1
     if m and argm:
-        lhs_type = comp.symbols.get(argm.group(1))
+        lhs_type = argm.group(1)
+        if lhs_type is None:
+            lhs_type = comp.symbols.get(argm.group(2))
         if lhs_type:
             sm = _SHAPE_RE.search(lhs_type)
             if sm:

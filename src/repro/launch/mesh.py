@@ -10,13 +10,9 @@ from __future__ import annotations
 
 import jax
 
+from repro.compat import make_mesh as _mk
+
 __all__ = ["make_production_mesh", "make_local_mesh", "mesh_axis_sizes"]
-
-
-def _mk(shape, axes):
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
 
 
 def make_production_mesh(*, multi_pod: bool = False):

@@ -22,7 +22,7 @@ import re
 from typing import Optional
 
 __all__ = ["HW", "RooflineReport", "analyze_compiled", "collective_bytes",
-           "model_flops"]
+           "combine_hlo_stats", "model_flops"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -115,6 +115,26 @@ def model_flops(cfg, shape_name: str) -> float:
     else:
         base = 2.0 * n_active * batch      # one token per request
     return base
+
+
+def combine_hlo_stats(stats_list):
+    """Sum per-device HLO stats over several compiled programs.
+
+    The bucketed shuffle executor runs one XLA program per capacity bucket
+    back-to-back on the same mesh, so its roofline terms are the sums of
+    the per-bucket terms.  Returns a single HloStats."""
+    from .hlo_analysis import HloStats
+
+    out = HloStats()
+    for s in stats_list:
+        out.flops += s.flops
+        out.hbm_bytes += s.hbm_bytes
+        out.collective_bytes += s.collective_bytes
+        out.collective_ops += s.collective_ops
+        for k, v in s.collective_by_kind.items():
+            out.collective_by_kind[k] = out.collective_by_kind.get(k, 0) + v
+        out.while_trip_counts.extend(s.while_trip_counts)
+    return out
 
 
 @dataclasses.dataclass

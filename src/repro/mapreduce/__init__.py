@@ -16,7 +16,13 @@ Public API
     ``lower_bound``, ``optimality_gap``) for downstream telemetry.
 ``run_reducers(inputs, plan, reducer_fn, mesh=...)``
     Execute a reducer function over every slot; the gather *is* the
-    shuffle.
+    shuffle.  Dense path: every reducer padded to the global max slot
+    count.
+``run_reducers_bucketed(inputs, plan, reducer_fn, mesh=...)``
+    Skew-aware path: one vmapped gather+reduce per capacity bucket, each
+    padded only to its own power-of-two width (DESIGN.md "bucketed
+    shuffle execution").  ``combine='dense'`` reproduces the dense output
+    layout; ``combine='buckets'`` keeps per-bucket outputs unpadded.
 ``pairwise_similarity(x, q=...)``
     A2A application: all-pairs similarity through a planned schema.
 ``some_pairs_similarity(x, pairs, q=...)``
@@ -28,16 +34,25 @@ Public API
     X2Y application: skewed join via the Section-10 bipartite schema.
 """
 
-from .engine import ReducerPlan, build_plan, run_reducers
+from .engine import (
+    ReducerBucket,
+    ReducerPlan,
+    build_plan,
+    run_reducers,
+    run_reducers_bucketed,
+)
 from .allpairs import (
     assemble_pair_matrix,
+    assemble_pair_matrix_bucketed,
     pairwise_similarity,
     some_pairs_similarity,
 )
 from .skewjoin import skew_join
 
 __all__ = [
-    "ReducerPlan", "build_plan", "run_reducers",
-    "pairwise_similarity", "some_pairs_similarity", "assemble_pair_matrix",
+    "ReducerBucket", "ReducerPlan", "build_plan",
+    "run_reducers", "run_reducers_bucketed",
+    "pairwise_similarity", "some_pairs_similarity",
+    "assemble_pair_matrix", "assemble_pair_matrix_bucketed",
     "skew_join",
 ]

@@ -13,6 +13,7 @@ requested pairs.
 
 from __future__ import annotations
 
+import functools
 from functools import partial
 from typing import Optional, Sequence
 
@@ -23,12 +24,18 @@ import numpy as np
 from repro.core import plan_a2a, plan_some_pairs
 from repro.core.schema import MappingSchema
 
-from .engine import ReducerPlan, build_plan, run_reducers
+from .engine import (
+    ReducerPlan,
+    build_plan,
+    run_reducers,
+    run_reducers_bucketed,
+)
 
 __all__ = [
     "pairwise_similarity",
     "some_pairs_similarity",
     "assemble_pair_matrix",
+    "assemble_pair_matrix_bucketed",
     "block_similarity",
 ]
 
@@ -54,6 +61,25 @@ def block_similarity(block: jax.Array, mask: jax.Array, *,
     return jnp.where(valid, sims, 0.0)
 
 
+@functools.lru_cache(maxsize=None)
+def _block_fn(metric: str, use_kernel: bool):
+    """Memoized reducer partial: the same (metric, use_kernel) must map to
+    the *same* function object so the engine's jit cache is hit across
+    calls instead of re-tracing every request."""
+    return partial(block_similarity, metric=metric, use_kernel=use_kernel)
+
+
+def _run_and_assemble(x, plan, fn, m, mesh, executor: str):
+    if executor == "bucketed":
+        per_bucket = run_reducers_bucketed(x, plan, fn, mesh=mesh,
+                                           combine="buckets")
+        return assemble_pair_matrix_bucketed(per_bucket, m)
+    if executor == "dense":
+        blocks = run_reducers(x, plan, fn, mesh=mesh)    # (R, L, L)
+        return assemble_pair_matrix(blocks, plan, m)
+    raise ValueError(f"unknown executor {executor!r}")
+
+
 def pairwise_similarity(
     x: jax.Array,                       # (m, d)
     *,
@@ -64,8 +90,15 @@ def pairwise_similarity(
     mesh=None,
     use_kernel: bool = False,
     pad_slots_to: int = 1,
+    executor: str = "bucketed",
 ):
     """All-pairs similarity executed through a mapping schema.
+
+    ``executor='bucketed'`` (default) runs the skew-aware capacity-bucket
+    executor — each reducer pads only to its bucket width, and per-bucket
+    blocks are scattered straight into the (m, m) matrix so the padding
+    saving survives end-to-end.  ``executor='dense'`` is the one-program
+    global-max-padded path (differential-test oracle).
 
     Returns (sims (m, m) with zero diagonal, plan, schema)."""
     m = x.shape[0]
@@ -77,9 +110,8 @@ def pairwise_similarity(
         pad_reducers_to=(mesh.devices.size if mesh is not None else 1),
         pad_slots_to=pad_slots_to,
     )
-    fn = partial(block_similarity, metric=metric, use_kernel=use_kernel)
-    blocks = run_reducers(x, plan, fn, mesh=mesh)    # (R, L, L)
-    sims = assemble_pair_matrix(blocks, plan, m)
+    fn = _block_fn(metric, use_kernel)
+    sims = _run_and_assemble(x, plan, fn, m, mesh, executor)
     return sims, plan, schema
 
 
@@ -94,6 +126,7 @@ def some_pairs_similarity(
     mesh=None,
     use_kernel: bool = False,
     pad_slots_to: int = 1,
+    executor: str = "bucketed",
 ):
     """Similarity for an explicit pair set through a some-pairs schema.
 
@@ -111,9 +144,8 @@ def some_pairs_similarity(
         pad_reducers_to=(mesh.devices.size if mesh is not None else 1),
         pad_slots_to=pad_slots_to,
     )
-    fn = partial(block_similarity, metric=metric, use_kernel=use_kernel)
-    blocks = run_reducers(x, plan, fn, mesh=mesh)    # (R, L, L)
-    sims = assemble_pair_matrix(blocks, plan, m)
+    fn = _block_fn(metric, use_kernel)
+    sims = _run_and_assemble(x, plan, fn, m, mesh, executor)
     want = np.zeros((m, m), dtype=bool)
     p = np.asarray(list(pairs), dtype=np.int64).reshape(-1, 2)
     if p.size:
@@ -123,21 +155,46 @@ def some_pairs_similarity(
     return sims, plan, schema
 
 
+def _scatter_blocks(out: jax.Array, blocks: jax.Array, idx: jax.Array,
+                    mask: jax.Array) -> jax.Array:
+    """max-scatter (R, L, L) reducer blocks into the running (m, m) matrix
+    (initialized to -inf).  A pair may meet at several reducers; values
+    agree, so `max` combine is deterministic."""
+    L = idx.shape[1]
+    rows = jnp.repeat(idx[:, :, None], L, axis=2)     # (R, L, L) row ids
+    cols = jnp.repeat(idx[:, None, :], L, axis=1)     # (R, L, L) col ids
+    valid = (mask[:, :, None] & mask[:, None, :])
+    flat_vals = jnp.where(valid, blocks, -jnp.inf).reshape(-1)
+    return out.at[rows.reshape(-1), cols.reshape(-1)].max(flat_vals)
+
+
+def _finish_pair_matrix(out: jax.Array, m: int) -> jax.Array:
+    out = jnp.where(jnp.isneginf(out), 0.0, out)
+    return out * (1.0 - jnp.eye(m, dtype=out.dtype))
+
+
 def assemble_pair_matrix(blocks: jax.Array, plan: ReducerPlan, m: int):
     """Scatter per-reducer (L, L) blocks into the global (m, m) matrix.
 
-    A pair may meet at several reducers; values agree, so `max` combine is
-    deterministic.  Diagonal is zeroed (no self-pairs in A2A)."""
-    idx = jnp.asarray(plan.idx)                       # (R, L)
-    R, L = idx.shape
-    rows = jnp.repeat(idx[:, :, None], L, axis=2)     # (R, L, L) row ids
-    cols = jnp.repeat(idx[:, None, :], L, axis=1)     # (R, L, L) col ids
-    mask = jnp.asarray(plan.mask)
-    valid = (mask[:, :, None] & mask[:, None, :])
-    flat_vals = jnp.where(valid, blocks, -jnp.inf).reshape(-1)
-    flat_rows = rows.reshape(-1)
-    flat_cols = cols.reshape(-1)
+    Diagonal is zeroed (no self-pairs in A2A)."""
     out = jnp.full((m, m), -jnp.inf, dtype=blocks.dtype)
-    out = out.at[flat_rows, flat_cols].max(flat_vals)
-    out = jnp.where(jnp.isneginf(out), 0.0, out)
-    return out * (1.0 - jnp.eye(m, dtype=blocks.dtype))
+    out = _scatter_blocks(out, blocks, jnp.asarray(plan.idx),
+                          jnp.asarray(plan.mask))
+    return _finish_pair_matrix(out, m)
+
+
+def assemble_pair_matrix_bucketed(per_bucket, m: int):
+    """Scatter per-bucket (Rb, Lb, Lb) blocks into the global (m, m) matrix.
+
+    ``per_bucket`` is ``run_reducers_bucketed(..., combine='buckets')``
+    output.  Each bucket scatters at its own width — no block is ever
+    padded to the dense L, so the bucketed executor's memory saving holds
+    through assembly.  Padding rows (all-masked) contribute nothing."""
+    if not per_bucket:
+        return jnp.zeros((m, m), dtype=jnp.float32)
+    dtype = per_bucket[0][1].dtype
+    out = jnp.full((m, m), -jnp.inf, dtype=dtype)
+    for b, blocks in per_bucket:
+        out = _scatter_blocks(out, blocks, jnp.asarray(b.idx),
+                              jnp.asarray(b.mask))
+    return _finish_pair_matrix(out, m)

@@ -19,6 +19,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.compat import pcast, shard_map
+
 __all__ = ["pipeline_apply", "bubble_fraction"]
 
 
@@ -48,8 +50,8 @@ def pipeline_apply(
         params_one = jax.tree.map(lambda a: a[0], params_local)
         sid = jax.lax.axis_index(stage_axis)
         # mark carries as stage-varying up front (scan requires stable vma)
-        buf = jax.lax.pcast(jnp.zeros_like(xs[0]), stage_axis, to="varying")
-        outs = jax.lax.pcast(jnp.zeros_like(xs), stage_axis, to="varying")
+        buf = pcast(jnp.zeros_like(xs[0]), stage_axis, to="varying")
+        outs = pcast(jnp.zeros_like(xs), stage_axis, to="varying")
 
         def tick(carry, t):
             buf, outs = carry
@@ -77,7 +79,7 @@ def pipeline_apply(
         return jax.lax.psum(outs, stage_axis)
 
     params_spec = jax.tree.map(lambda _: P(stage_axis), stage_params)
-    fn = jax.shard_map(
+    fn = shard_map(
         spmd, mesh=mesh,
         in_specs=(params_spec, P()),
         out_specs=P(),

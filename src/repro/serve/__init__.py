@@ -1,6 +1,8 @@
 """Serving substrate: batched decode engine with slot-based continuous
-batching over the model's KV caches."""
+batching over the model's KV caches, plus the paper-workload
+``PairwiseService`` (planned similarity queries on the bucketed shuffle
+executor)."""
 
-from .engine import BatchedServer, Request
+from .engine import BatchedServer, PairwiseService, Request
 
-__all__ = ["BatchedServer", "Request"]
+__all__ = ["BatchedServer", "PairwiseService", "Request"]

@@ -11,18 +11,25 @@ write indices + per-slot attention-start masks; that variant is documented
 as future work in DESIGN.md — wave batching is what the shared scalar
 `cache['len']` supports exactly, and it is what examples/serve_lm.py and
 the tests exercise.
+
+``PairwiseService`` is the paper-workload serving facade: all-pairs /
+some-pairs similarity queries planned through the registry planner (plans
+memoized by weight profile in ``PLAN_CACHE``) and executed on the
+skew-aware bucketed shuffle executor, with per-request plan provenance and
+bucket telemetry for dashboards.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["Request", "BatchedServer"]
+__all__ = ["Request", "BatchedServer", "PairwiseService"]
 
 
 @dataclasses.dataclass
@@ -107,3 +114,83 @@ class BatchedServer:
         for _ in range(max_ticks):
             if self.tick() == 0 and not self.queue:
                 return
+
+
+class PairwiseService:
+    """Serve all-pairs / some-pairs similarity through planned schemas.
+
+    Each query brings its own input table (and optionally per-input sizes);
+    the service plans a mapping schema via the registry planner — repeated
+    weight profiles hit ``repro.core.PLAN_CACHE`` and skip planning — and
+    executes it on the bucketed shuffle executor, so skewed profiles don't
+    pay the dense global-max padding.  Responses carry the plan provenance
+    (winning strategy, communication cost, optimality gap) and the bucket
+    telemetry the dashboards chart; the service accumulates the same
+    numbers across requests in ``self.stats``.
+    """
+
+    def __init__(self, q: float, *, metric: str = "dot", mesh=None,
+                 executor: str = "bucketed", max_buckets: int = 8,
+                 use_kernel: bool = False):
+        self.q = q
+        self.metric = metric
+        self.mesh = mesh
+        self.executor = executor
+        self.max_buckets = max_buckets
+        self.use_kernel = use_kernel
+        self.stats = {
+            "requests": 0,
+            "reducers": 0,
+            "dense_padded_elements": 0,
+            "bucketed_padded_elements": 0,
+            "wall_s": 0.0,
+        }
+
+    def _info(self, plan, dt: float) -> dict:
+        self.stats["requests"] += 1
+        self.stats["reducers"] += plan.num_reducers
+        self.stats["dense_padded_elements"] += plan.dense_padded_elements
+        self.stats["bucketed_padded_elements"] += \
+            plan.bucketed_padded_elements
+        self.stats["wall_s"] += dt
+        return {
+            "algorithm": plan.algorithm,
+            "comm_cost": plan.comm_cost,
+            "lower_bound": plan.lower_bound,
+            "optimality_gap": plan.optimality_gap,
+            "reducers": plan.num_reducers,
+            "bucket_widths": plan.bucket_widths(),
+            "dense_padded_elements": plan.dense_padded_elements,
+            "bucketed_padded_elements": plan.bucketed_padded_elements,
+            "padding_savings": plan.padding_savings,
+            "executor": self.executor,
+            "wall_s": dt,
+        }
+
+    def similarity(self, x, weights=None):
+        """All-pairs similarity for one query table.  Returns (sims, info)."""
+        from repro.mapreduce.allpairs import pairwise_similarity
+        t0 = time.perf_counter()
+        sims, plan, _schema = pairwise_similarity(
+            jnp.asarray(x), q=self.q, weights=weights, metric=self.metric,
+            mesh=self.mesh, executor=self.executor,
+            use_kernel=self.use_kernel)
+        sims = jax.block_until_ready(sims)
+        return sims, self._info(plan, time.perf_counter() - t0)
+
+    def some_pairs(self, x, pairs, weights=None):
+        """Similarity restricted to an explicit required-pair set."""
+        from repro.mapreduce.allpairs import some_pairs_similarity
+        t0 = time.perf_counter()
+        sims, plan, _schema = some_pairs_similarity(
+            jnp.asarray(x), pairs, q=self.q, weights=weights,
+            metric=self.metric, mesh=self.mesh, executor=self.executor,
+            use_kernel=self.use_kernel)
+        sims = jax.block_until_ready(sims)
+        return sims, self._info(plan, time.perf_counter() - t0)
+
+    @property
+    def padding_savings(self) -> float:
+        """Aggregate dense/bucketed padded-element ratio across requests."""
+        return (self.stats["dense_padded_elements"] /
+                max(self.stats["bucketed_padded_elements"], 1))

@@ -6,9 +6,13 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.compat import make_mesh
 from repro.configs.base import get_config, list_archs
 from repro.models import RuntimeFlags, build_model
 from repro.parallel.sharding import ShardingRules
+
+# excluded from `make test-fast` (full arch/kernel e2e sweeps)
+pytestmark = pytest.mark.slow
 
 ARCHS = list_archs()
 
@@ -18,8 +22,7 @@ FLAGS = RuntimeFlags(param_dtype="float32", compute_dtype="float32",
 
 def make_model(arch):
     cfg = get_config(arch).reduced()
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((1,), ("data",))
     rules = ShardingRules.create(mesh)
     return cfg, build_model(cfg, FLAGS, rules)
 

@@ -8,6 +8,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.compat import make_mesh
 from repro.data import PackedLMDataset
 from repro.train import AdamWConfig, CheckpointManager
 from repro.train.elastic import (
@@ -67,8 +68,7 @@ class TestCheckpoint:
         mgr = CheckpointManager(str(tmp_path), keep=1)
         state, _ = tiny_state()
         mgr.save(7, state)
-        mesh = jax.make_mesh((1,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_mesh((1,), ("data",))
         sh = jax.tree.map(
             lambda _: jax.sharding.NamedSharding(
                 mesh, jax.sharding.PartitionSpec()), state)

@@ -20,6 +20,9 @@ from repro.kernels.ssd.ssd import ssd_scan
 from repro.kernels.ssd.ref import ssd_scan_ref
 from repro.kernels.ssd.ops import ssd
 
+# excluded from `make test-fast` (full arch/kernel e2e sweeps)
+pytestmark = pytest.mark.slow
+
 
 def rnd(rng, shape, dtype):
     x = rng.normal(size=shape).astype(np.float32)

@@ -5,13 +5,16 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.compat import make_mesh
 from repro.models.moe import moe_apply, moe_init
 from repro.parallel.sharding import ShardingRules
 
+# excluded from `make test-fast` (full arch/kernel e2e sweeps)
+pytestmark = pytest.mark.slow
+
 
 def _rules():
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((1,), ("data",))
     return ShardingRules.create(mesh)
 
 

@@ -3,6 +3,7 @@
 Runs in a subprocess with a 4-host-device mesh (the main test process keeps
 1 device so smoke tests and benches see the default)."""
 
+import os
 import subprocess
 import sys
 import textwrap
@@ -13,8 +14,8 @@ SCRIPT = textwrap.dedent("""
     import jax, jax.numpy as jnp, numpy as np
     from repro.parallel.pipeline import pipeline_apply, bubble_fraction
 
-    mesh = jax.make_mesh((4,), ("stage",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.compat import make_mesh
+    mesh = make_mesh((4,), ("stage",))
     rng = np.random.default_rng(0)
     S, M, Bm, D = 4, 8, 2, 16
     w = jnp.asarray(rng.normal(size=(S, D, D)).astype(np.float32) / D**0.5)
@@ -40,6 +41,11 @@ def test_gpipe_matches_sequential():
     res = subprocess.run(
         [sys.executable, "-c", SCRIPT],
         capture_output=True, text=True, timeout=300,
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin:/usr/local/bin"},
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin:/usr/local/bin",
+             # force-host-device script must not probe TPU hardware; without
+             # this the plugin retries GCP metadata for minutes and the test
+             # times out instead of running
+             "JAX_PLATFORMS": os.environ.get("JAX_PLATFORMS", "cpu"),
+             "HOME": os.environ.get("HOME", "/tmp")},
     )
     assert "PIPELINE_OK" in res.stdout, res.stdout + res.stderr

@@ -1,0 +1,182 @@
+"""Schema conformance: every registry strategy, on any weight profile,
+must emit a *valid mapping schema* that respects the paper's bounds.
+
+Three properties are checked for every strategy x profile:
+
+  (a) coverage  — every required pair (A2A), cross pair (X2Y), or listed
+      pair (some-pairs) meets at >= 1 reducer;
+  (b) capacity  — no reducer's deduplicated load exceeds q;
+  (c) bound     — measured communication_cost() >= the instance's
+      replication-rate lower bound (a cost below the proven lower bound
+      means the schema under-ships and cannot be covering).
+
+Deterministic profile sweeps run everywhere; the @given variants fuzz the
+same properties when hypothesis is installed (tests/_hypothesis_compat
+turns them into per-test skips otherwise).
+"""
+
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core import (
+    InfeasibleError,
+    a2a_comm_lower_bound,
+    a2a_unit_comm_lower_bound,
+    plan_a2a,
+    plan_some_pairs,
+    plan_x2y,
+    some_pairs_comm_lower_bound,
+    x2y_comm_lower_bound,
+)
+from repro.core.schema import MappingSchema
+from repro.core.strategies import (
+    A2AProfile,
+    UNIT_REGISTRY,
+    a2a_portfolio,
+)
+
+TOL = 1e-9
+
+
+def profile(kind: str, m: int, seed: int, q: float = 1.0) -> np.ndarray:
+    """Deterministic weight profiles exercising the planner's case split."""
+    rng = np.random.default_rng(seed)
+    if kind == "uniform":
+        return rng.uniform(0.05, 0.33, m)
+    if kind == "zipf":
+        return np.clip(rng.zipf(1.7, m) / 24.0, 0.02, 0.45 * q)
+    if kind == "equal":
+        return np.full(m, 0.21 * q)
+    if kind == "one-giant":
+        w = rng.uniform(0.02, 0.12, m)
+        w[0] = 0.8 * q                       # big-input path (Section 9)
+        return w
+    if kind == "near-half":
+        return rng.uniform(0.30 * q, 0.49 * q, m)
+    raise ValueError(kind)
+
+
+PROFILES = [
+    (kind, m, seed)
+    for kind in ("uniform", "zipf", "equal", "one-giant", "near-half")
+    for m, seed in [(7, 0), (23, 1), (48, 2)]
+]
+
+
+def _check_a2a(schema: MappingSchema, w, q) -> None:
+    schema.validate("a2a")                       # coverage + capacity
+    lb = a2a_comm_lower_bound(w, q)
+    assert schema.communication_cost() >= lb - TOL, (
+        schema.algorithm, schema.communication_cost(), lb)
+
+
+# --------------------------------------------------------------- A2A registry
+class TestA2ARegistryConformance:
+    @pytest.mark.parametrize("kind,m,seed", PROFILES)
+    def test_every_portfolio_strategy_conforms(self, kind, m, seed):
+        """Not just the argmin winner: every applicable registered strategy
+        must build a valid schema (the portfolio may pick any of them on a
+        different profile)."""
+        q = 1.0
+        w = profile(kind, m, seed, q)
+        if kind == "one-giant":
+            pytest.skip("big-input profiles bypass the portfolio (Sec 9)")
+        prof = A2AProfile(np.sort(w)[::-1], q)
+        cands = a2a_portfolio(prof)
+        assert cands, "no applicable strategy"
+        for strat, est in cands:
+            schema = strat.build(prof)
+            _check_a2a(schema, prof.w, q)
+            assert schema.communication_cost() == pytest.approx(est), (
+                strat.name)
+
+    @pytest.mark.parametrize("kind,m,seed", PROFILES)
+    def test_planner_auto_conforms(self, kind, m, seed):
+        q = 1.0
+        w = profile(kind, m, seed, q)
+        schema = plan_a2a(w, q)
+        _check_a2a(schema, w, q)
+
+    @given(st.lists(st.floats(0.01, 0.45), min_size=2, max_size=40),
+           st.integers(0, 3))
+    @settings(max_examples=40, deadline=None)
+    def test_property_random_profiles(self, weights, _salt):
+        w = np.asarray(weights)
+        schema = plan_a2a(w, 1.0)
+        _check_a2a(schema, w, 1.0)
+
+
+# ------------------------------------------------------------- unit registry
+class TestUnitRegistryConformance:
+    @pytest.mark.parametrize("n", [2, 3, 5, 8, 13, 21, 40])
+    @pytest.mark.parametrize("k", [2, 3, 4, 5, 7, 8])
+    def test_every_unit_strategy_conforms(self, n, k):
+        w = np.ones(n)
+        for strat in UNIT_REGISTRY:
+            if strat.name == "single" and n > k:
+                continue
+            if not strat.applicable(n, k):
+                continue
+            reducers = strat.build(n, k)
+            schema = MappingSchema(
+                w, float(k), [[i] for i in range(n)], reducers,
+                algorithm=strat.name)
+            schema.validate("a2a")
+            lb = a2a_unit_comm_lower_bound(n, k)
+            assert schema.communication_cost() >= lb - TOL, (
+                strat.name, n, k, schema.communication_cost(), lb)
+
+    @given(st.integers(2, 40), st.integers(2, 8))
+    @settings(max_examples=40, deadline=None)
+    def test_property_unit_strategies(self, n, k):
+        self.test_every_unit_strategy_conforms(n, k)
+
+
+# ----------------------------------------------------------------------- X2Y
+class TestX2YConformance:
+    @pytest.mark.parametrize("mx,my,seed", [(5, 7, 0), (16, 9, 1),
+                                            (24, 24, 2), (1, 13, 3)])
+    @pytest.mark.parametrize("kind", ["uniform", "zipf"])
+    def test_cross_pairs_conform(self, mx, my, seed, kind):
+        q = 1.0
+        wx = profile(kind, mx, seed, q) / 2.0
+        wy = profile(kind, my, seed + 100, q) / 2.0
+        schema = plan_x2y(wx, wy, q)
+        schema.validate("x2y", x_ids=range(mx),
+                        y_ids=range(mx, mx + my))
+        lb = x2y_comm_lower_bound(wx, wy, q)
+        assert schema.communication_cost() >= lb - TOL
+
+    @given(st.lists(st.floats(0.01, 0.4), min_size=1, max_size=20),
+           st.lists(st.floats(0.01, 0.4), min_size=1, max_size=20))
+    @settings(max_examples=30, deadline=None)
+    def test_property_x2y(self, wx, wy):
+        wx, wy = np.asarray(wx), np.asarray(wy)
+        schema = plan_x2y(wx, wy, 1.0)
+        schema.validate("x2y", x_ids=range(len(wx)),
+                        y_ids=range(len(wx), len(wx) + len(wy)))
+        lb = x2y_comm_lower_bound(wx, wy, 1.0)
+        assert schema.communication_cost() >= lb - TOL
+
+
+# ---------------------------------------------------------------- some-pairs
+class TestSomePairsConformance:
+    @pytest.mark.parametrize("m,npairs,seed", [(10, 4, 0), (30, 40, 1),
+                                               (40, 200, 2), (12, 66, 3)])
+    def test_required_pairs_conform(self, m, npairs, seed):
+        q = 1.0
+        rng = np.random.default_rng(seed)
+        w = rng.uniform(0.02, 0.3, m)
+        pairs = {tuple(sorted(rng.choice(m, 2, replace=False)))
+                 for _ in range(npairs)}
+        pairs = [p for p in pairs if p[0] != p[1]]
+        schema = plan_some_pairs(w, q, pairs)
+        schema.validate("some", required_pairs=pairs)
+        lb = some_pairs_comm_lower_bound(w, q, pairs)
+        assert schema.communication_cost() >= lb - TOL
+
+    def test_infeasible_pair_raises(self):
+        w = np.array([0.7, 0.6, 0.1])
+        with pytest.raises(InfeasibleError):
+            plan_some_pairs(w, 1.0, [(0, 1)])

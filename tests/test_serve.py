@@ -4,12 +4,13 @@ decode, handles queues longer than the slot count, and respects limits."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs.base import ArchConfig
 from repro.launch.mesh import make_local_mesh
 from repro.launch.rules import rules_for
 from repro.models import RuntimeFlags, build_model
-from repro.serve import BatchedServer, Request
+from repro.serve import BatchedServer, PairwiseService, Request
 
 CFG = ArchConfig(name="tiny-serve", family="dense", num_layers=2,
                  d_model=32, num_heads=2, num_kv_heads=2, head_dim=16,
@@ -41,6 +42,7 @@ def sequential_decode(model, params, prompt, n_new, max_len):
     return out
 
 
+@pytest.mark.slow          # model-decode e2e, excluded from test-fast
 class TestBatchedServer:
     def test_matches_sequential(self):
         model, params = make_model()
@@ -80,6 +82,7 @@ class TestBatchedServer:
         assert len(r.out) <= 6
 
 
+@pytest.mark.slow          # model-decode e2e, excluded from test-fast
 class TestKVQuant:
     def test_int8_cache_decode_close_to_fp(self):
         """int8 KV cache: logits close to the fp path; cache 2x smaller."""
@@ -106,3 +109,40 @@ class TestKVQuant:
                 out.append(int(jnp.argmax(logits[0, -1])))
         # greedy tokens usually agree; require at least the first to match
         assert out[0] == fp[0], (out, fp)
+
+
+class TestPairwiseService:
+    """Paper-workload serving: planned similarity on the bucketed executor."""
+
+    def test_matches_bruteforce_and_reports_telemetry(self):
+        rng = np.random.default_rng(0)
+        m, d = 24, 8
+        x = rng.normal(size=(m, d)).astype(np.float32)
+        w = np.clip(rng.zipf(1.7, m) / 30.0, 0.02, 0.45)
+        svc = PairwiseService(q=1.0)
+        sims, info = svc.similarity(x, weights=w)
+        ref = x @ x.T * (1 - np.eye(m, dtype=np.float32))
+        np.testing.assert_allclose(np.asarray(sims), ref,
+                                   rtol=1e-4, atol=1e-4)
+        assert info["executor"] == "bucketed"
+        assert info["bucketed_padded_elements"] <= \
+            info["dense_padded_elements"]
+        assert info["optimality_gap"] is None or info["optimality_gap"] >= 1.0
+        assert svc.stats["requests"] == 1
+
+    def test_some_pairs_masked_to_request(self):
+        rng = np.random.default_rng(1)
+        m = 16
+        x = rng.normal(size=(m, 4)).astype(np.float32)
+        w = np.full(m, 0.2)
+        pairs = [(0, 3), (5, 9)]
+        svc = PairwiseService(q=1.0)
+        sims, info = svc.some_pairs(x, pairs, weights=w)
+        want = np.zeros((m, m), dtype=bool)
+        for i, j in pairs:
+            want[i, j] = want[j, i] = True
+        assert np.all(np.asarray(sims)[~want] == 0.0)
+        for i, j in pairs:
+            np.testing.assert_allclose(float(sims[i, j]),
+                                       float(x[i] @ x[j]), rtol=1e-4)
+        assert svc.padding_savings >= 1.0

@@ -5,6 +5,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs.base import ArchConfig
 from repro.launch.mesh import make_local_mesh
@@ -12,6 +13,9 @@ from repro.launch.rules import rules_for
 from repro.models import RuntimeFlags, build_model
 from repro.train import AdamWConfig, make_state_shardings, make_train_step
 from repro.train.optimizer import adamw_init
+
+# excluded from `make test-fast` (full arch/kernel e2e sweeps)
+pytestmark = pytest.mark.slow
 
 CFG = ArchConfig(name="tiny", family="dense", num_layers=2, d_model=32,
                  num_heads=2, num_kv_heads=2, head_dim=16, d_ff=64,
