@@ -6,7 +6,8 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: test test-fast test-schemas lint ci bench bench-quick bench-skewed
+.PHONY: test test-fast test-schemas lint ci bench bench-quick bench-skewed \
+	bench-fused
 
 test:
 	$(PYTHON) -m pytest -q
@@ -15,11 +16,11 @@ test:
 test-fast:
 	$(PYTHON) -m pytest -q -m "not slow"
 
-# the paper's correctness core: schema conformance + bucketed-executor
-# differential tests
+# the paper's correctness core: schema conformance + bucketed- and
+# fused-executor differential tests
 test-schemas:
 	$(PYTHON) -m pytest -q tests/test_schema_conformance.py \
-		tests/test_bucketed_executor.py
+		tests/test_bucketed_executor.py tests/test_fused_executor.py
 
 lint:
 	$(PYTHON) -m compileall -q src
@@ -34,3 +35,7 @@ bench-quick:
 
 bench-skewed:
 	$(PYTHON) benchmarks/bench_engine.py --skewed
+
+# dense vs bucketed vs fused executor; writes benchmarks/BENCH_engine.json
+bench-fused:
+	$(PYTHON) benchmarks/bench_engine.py --fused

@@ -20,6 +20,8 @@ execution, not tracing.
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import time
 
 import jax
@@ -28,6 +30,9 @@ import numpy as np
 
 from repro.core import naive_pairs, plan_a2a
 from repro.mapreduce import build_plan, pairwise_similarity
+
+BENCH_JSON = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                          "BENCH_engine.json")
 
 
 def run(m: int = 96, d: int = 64, q: float = 1.0, seed: int = 0):
@@ -114,15 +119,181 @@ def run_skewed(m: int = 512, d: int = 64, q: float = 1.0,
     return rep
 
 
+def _executor_hlo(x_shape, plan, executor: str) -> str:
+    """Compiled single-host HLO text of one executor's program (no mesh)."""
+    from repro.mapreduce.allpairs import _block_fn
+    from repro.mapreduce.engine import lower_reducers, lower_reducers_fused
+
+    if executor == "fused":
+        lowered = lower_reducers_fused(x_shape, plan, "dot", mesh=None)
+    else:
+        assert executor == "dense", executor
+        lowered = lower_reducers(x_shape, plan, _block_fn("dot", False),
+                                 mesh=None)
+    return lowered.compile().as_text()
+
+
+def _kernel_model(plan, d: int, itemsize: int = 4) -> dict:
+    from repro.kernels.pairwise.fused_gather_gram import fused_traffic_model
+    return {k: int(v)
+            for k, v in fused_traffic_model(plan.buckets, d,
+                                            itemsize).items()}
+
+
+def run_fused(m: int = 512, d: int = 64, q: float = 1.0,
+              zipf_a: float = 1.6, seed: int = 0, repeats: int = 3):
+    """Fused-executor acceptance run on the Zipf skewed workload.
+
+    Times all three executors on one plan, checks allclose, measures the
+    HBM bytes of each lowered program, and verifies from the compiled HLO
+    that the fused program never materializes the dense (R, L, d) gather
+    buffer that the dense executor does.  Bars: fused >= 1.5x wall-clock
+    over bucketed, no dense gather buffer in the fused HLO.
+    """
+    from repro.launch.hlo_analysis import analyze_hlo_text, has_buffer_shape
+
+    rng = np.random.default_rng(seed)
+    w = np.clip(rng.zipf(zipf_a, m).astype(np.float64) / 32.0,
+                0.01, 0.45 * q)
+    x = jnp.asarray(rng.normal(size=(m, d)).astype(np.float32))
+    schema = plan_a2a(w, q)
+    schema.validate("a2a")
+
+    sims_d, plan, dense_s = _time_executor(x, q, w, schema, "dense", repeats)
+    sims_b, _, buck_s = _time_executor(x, q, w, schema, "bucketed", repeats)
+    sims_f, _, fused_s = _time_executor(x, q, w, schema, "fused", repeats)
+
+    allclose = bool(
+        np.allclose(np.asarray(sims_b), np.asarray(sims_f),
+                    rtol=1e-4, atol=1e-4)
+        and np.allclose(np.asarray(sims_d), np.asarray(sims_f),
+                        rtol=1e-4, atol=1e-4))
+
+    gather_shape = (plan.R, plan.L, d)
+    hlo = {name: _executor_hlo((m, d), plan, name)
+           for name in ("dense", "fused")}
+    hbm = {name: analyze_hlo_text(text).hbm_bytes
+           for name, text in hlo.items()}
+    # tiled dataflow check: with bl below the bucket widths, multi-tile
+    # buckets must stream (Rb, bl, d) tiles — their full (Rb, Lb, d)
+    # gather must not appear anywhere in the lowered program
+    from repro.mapreduce.engine import lower_reducers_fused
+    tiled_bl = 8
+    tiled_hlo = lower_reducers_fused((m, d), plan, "dot", mesh=None,
+                                     bl=tiled_bl).compile().as_text()
+    tiled_gathers = {
+        f"{b.idx.shape[0]}x{b.idx.shape[1]}x{d}": has_buffer_shape(
+            tiled_hlo, (b.idx.shape[0], b.idx.shape[1], d))
+        for b in plan.buckets if b.idx.shape[1] > tiled_bl}
+    # bucketed: per-bucket programs, terms summed (runs back-to-back)
+    from repro.mapreduce.allpairs import _block_fn
+    from repro.mapreduce.engine import _gather_reduce
+    from functools import partial
+    buck_bytes = 0.0
+    run = jax.jit(partial(_gather_reduce, reducer_fn=_block_fn("dot", False)))
+    for b in plan.buckets:
+        lowered = run.lower(
+            jax.ShapeDtypeStruct((m, d), jnp.float32),
+            jax.ShapeDtypeStruct(b.idx.shape, jnp.int32),
+            jax.ShapeDtypeStruct(b.mask.shape, jnp.bool_))
+        buck_bytes += analyze_hlo_text(lowered.compile().as_text()).hbm_bytes
+    hbm["bucketed"] = buck_bytes
+
+    rep = {
+        "m": m, "d": d, "q": q, "zipf_a": zipf_a,
+        "algorithm": schema.algorithm,
+        "reducers": plan.num_reducers,
+        "dense_width": plan.L,
+        "bucket_widths": plan.bucket_widths(),
+        "padded_elements": {
+            "dense": plan.dense_padded_elements,
+            "bucketed": plan.bucketed_padded_elements,
+            "fused": plan.bucketed_padded_elements,   # same buckets, no HBM
+        },
+        "wall_ms": {
+            "dense": round(dense_s * 1e3, 1),
+            "bucketed": round(buck_s * 1e3, 1),
+            "fused": round(fused_s * 1e3, 1),
+        },
+        "hbm_bytes": {k: int(v) for k, v in hbm.items()},
+        # the TPU kernel's analytic dataflow (VMEM streaming is a kernel
+        # property the CPU-lowered streamed twin can't exhibit)
+        "hbm_bytes_fused_kernel_model": _kernel_model(plan, d),
+        "speedup_fused_vs_bucketed": round(buck_s / max(fused_s, 1e-12), 3),
+        "speedup_fused_vs_dense": round(dense_s / max(fused_s, 1e-12), 3),
+        "allclose": allclose,
+        "dense_gather_buffer": list(gather_shape),
+        "gather_buffer_in_dense_hlo": has_buffer_shape(hlo["dense"],
+                                                       gather_shape),
+        "gather_buffer_in_fused_hlo": has_buffer_shape(hlo["fused"],
+                                                       gather_shape),
+        # per-bucket full gathers in the bl=8 tiled lowering (must all be
+        # False for buckets wider than one tile)
+        "bucket_gather_in_tiled_fused_hlo": tiled_gathers,
+    }
+    return rep
+
+
+def emit_bench_json(fused_rep, skewed_rep=None, path: str = BENCH_JSON):
+    """Machine-readable perf trajectory (read by CI across PRs)."""
+    payload = {"engine_fused": fused_rep}
+    if skewed_rep is not None:
+        payload["engine_skewed"] = skewed_rep
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True)
+        f.write("\n")
+    return path
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--skewed", action="store_true",
                     help="Zipf input sizes: dense vs bucketed executor")
+    ap.add_argument("--fused", action="store_true",
+                    help="Zipf input sizes: fused vs bucketed vs dense; "
+                         "writes BENCH_engine.json")
     ap.add_argument("--m", type=int, default=None)
     ap.add_argument("--d", type=int, default=64)
     ap.add_argument("--zipf-a", type=float, default=1.6)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+
+    if args.fused:
+        rep = run_fused(m=args.m or 512, d=args.d, zipf_a=args.zipf_a,
+                        seed=args.seed)
+        print(f"fused A2A  m={rep['m']} d={rep['d']} "
+              f"zipf_a={rep['zipf_a']} [{rep['algorithm']}] "
+              f"reducers={rep['reducers']}")
+        for name in ("dense", "bucketed", "fused"):
+            print(f"  {name:8s} wall={rep['wall_ms'][name]:8.1f}ms "
+                  f"padded={rep['padded_elements'][name]:9d} "
+                  f"hbm_bytes={rep['hbm_bytes'][name]:.3e}")
+        print(f"  fused speedup: {rep['speedup_fused_vs_bucketed']:.2f}x "
+              f"vs bucketed, {rep['speedup_fused_vs_dense']:.2f}x vs dense  "
+              f"allclose: {rep['allclose']}")
+        print(f"  dense (R,L,d) gather buffer {rep['dense_gather_buffer']}: "
+              f"in dense HLO: {rep['gather_buffer_in_dense_hlo']}  "
+              f"in fused HLO: {rep['gather_buffer_in_fused_hlo']}")
+        print(f"  tiled (bl=8) fused HLO bucket gathers: "
+              f"{rep['bucket_gather_in_tiled_fused_hlo']}")
+        path = emit_bench_json(rep)
+        print(f"  wrote {path}")
+        if not rep["allclose"]:
+            raise SystemExit("FAIL: fused output diverges")
+        if rep["gather_buffer_in_fused_hlo"]:
+            raise SystemExit("FAIL: fused HLO materializes the (R, L, d) "
+                             "gather buffer")
+        if not rep["gather_buffer_in_dense_hlo"]:
+            raise SystemExit("FAIL: buffer check is vacuous — dense HLO "
+                             "does not show the (R, L, d) gather")
+        if any(rep["bucket_gather_in_tiled_fused_hlo"].values()):
+            raise SystemExit("FAIL: tiled fused HLO materializes a full "
+                             "per-bucket gather")
+        if rep["speedup_fused_vs_bucketed"] < 1.5:
+            raise SystemExit(
+                f"FAIL: fused speedup {rep['speedup_fused_vs_bucketed']:.2f}x"
+                f" below the 1.5x bar")
+        return rep
 
     if args.skewed:
         rep = run_skewed(m=args.m or 512, d=args.d, zipf_a=args.zipf_a,

@@ -3,6 +3,10 @@
   bench_a2a      — Table 1 (A2A bounds, optimal + approx algorithms)
   bench_x2y      — Table 1 X2Y rows (Thm 25/26)
   bench_engine   — schema comm vs naive replication, end-to-end engine
+  bench_engine --fused — dense/bucketed/fused executor shootout on the
+                   Zipf workload; emits benchmarks/BENCH_engine.json
+                   (wall-clock, padded elements, HBM bytes per executor)
+                   so the perf trajectory is machine-readable across PRs
   bench_packing  — FFD bins applied to the data pipeline
   bench_kernels  — Pallas kernels vs oracles
 
@@ -24,6 +28,7 @@ def main() -> None:
         ("bench_a2a", bench_a2a.main),
         ("bench_x2y", bench_x2y.main),
         ("bench_engine", bench_engine.main),
+        ("bench_engine_fused", lambda: [bench_engine.main(["--fused"])]),
         ("bench_packing", bench_packing.main),
         ("bench_kernels", bench_kernels.main),
     ]

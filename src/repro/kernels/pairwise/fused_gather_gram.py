@@ -1,0 +1,220 @@
+"""Fused gather+Gram Pallas TPU megakernel: the shuffle streams into the MXU.
+
+Both shipped executors pay the map->reduce shuffle twice: ``_gather_reduce``
+materializes the gathered ``(R, L, d)`` block in HBM (``jnp.take`` + mask),
+then the ``pairwise_gram`` kernel reads it back to compute each reducer's
+all-pairs block.  For the A2A workload that doubles HBM traffic on the very
+quantity — communication cost — the mapping schema was optimized to
+minimize.  This kernel consumes the plan's index matrix directly:
+
+  * the per-reducer ``idx`` / ``mask`` rows are **scalar-prefetched**
+    (``pltpu.PrefetchScalarGridSpec``) into SMEM, so row ids are available
+    before the kernel body runs;
+  * input-table rows are DMA'd straight from the replicated ``(m, d)``
+    table (left in ``ANY``/HBM) into two VMEM tiles — the gather *is* the
+    DMA, and the padded ``(R, L, d)`` tensor is never written to HBM;
+  * each reducer's ``(L, L)`` Gram block is accumulated tile-by-tile on the
+    MXU with fp32 accumulation; masked slots are zeroed at gather time, so
+    the flushed block is already masked (invalid pairs -> 0, matching
+    ``block_similarity``).
+
+Grid layout: ``(R, n_t, n_t)`` with ``n_t = ceil(L / bl)`` row tiles.  The
+``i`` tile is gathered once per row of tiles (at ``j == 0``) and reused;
+the ``j`` tile is re-gathered per step — the flash-attention tradeoff:
+``n_t·L·d`` extra reads instead of an ``L·d`` HBM round trip, a win
+whenever the slot count fits a few tiles (every capacity bucket of the
+skew-aware plans; see ``fused_traffic_model``).
+
+``fused_gather_gram_streamed`` is the jnp twin with the same tile dataflow
+(per-bucket tiles only, never the dense ``(R, L, d)`` buffer) — it is what
+the fused executor runs on non-TPU backends and what the dry-run lowers;
+``fused_gather_gram_ref`` is the naive materializing oracle for tests.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .pairwise import min_tile_sublanes
+
+__all__ = [
+    "fused_gather_gram",
+    "fused_gather_gram_ref",
+    "fused_gather_gram_streamed",
+    "fused_traffic_model",
+]
+
+
+def _round_up(n: int, mult: int) -> int:
+    return -(-max(n, 1) // mult) * mult
+
+
+def _fused_kernel(idx_ref, msk_ref, x_ref, o_ref, xi_ref, xj_ref, sem_ref,
+                  *, bl: int):
+    """One (reducer, i-tile, j-tile) grid step.
+
+    idx_ref/msk_ref — scalar-prefetched (R, Lp) int32 in SMEM;
+    x_ref — the full input table, ANY/HBM (rows DMA'd on demand);
+    xi/xj — (bl, d) VMEM gather tiles; o_ref — (1, bl, bl) output tile.
+    """
+    r = pl.program_id(0)
+    i = pl.program_id(1)
+    j = pl.program_id(2)
+
+    def gather(tile, dst_ref):
+        """DMA rows idx[r, tile*bl : (tile+1)*bl] of the table into VMEM,
+        zeroing masked slots so the Gram block needs no separate mask.
+
+        Row copies are double-buffered (row t+1 starts before waiting on
+        row t, alternating semaphores) so the gather is pipelined rather
+        than a chain of bl sequential round-trip latencies."""
+        def get_cp(t):
+            row = idx_ref[r, tile * bl + t]
+            return pltpu.make_async_copy(
+                x_ref.at[pl.ds(row, 1), :], dst_ref.at[pl.ds(t, 1), :],
+                sem_ref.at[t % 2])
+
+        get_cp(0).start()
+
+        def body(t, _):
+            @pl.when(t + 1 < bl)
+            def _start_next():
+                get_cp(t + 1).start()
+            get_cp(t).wait()
+
+            @pl.when(msk_ref[r, tile * bl + t] == 0)
+            def _zero():
+                dst_ref[pl.ds(t, 1), :] = jnp.zeros_like(
+                    dst_ref[pl.ds(t, 1), :])
+            return 0
+        jax.lax.fori_loop(0, bl, body, 0)
+
+    # the i tile survives the whole j sweep; re-gather only the j tile
+    @pl.when(j == 0)
+    def _():
+        gather(i, xi_ref)
+    gather(j, xj_ref)
+
+    o_ref[0, :, :] = jax.lax.dot_general(
+        xi_ref[...], xj_ref[...],
+        dimension_numbers=(((1,), (1,)), ((), ())),        # Xi @ Xj^T
+        preferred_element_type=jnp.float32,
+    ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bl", "interpret", "out_dtype"))
+def fused_gather_gram(
+    x: jax.Array,                  # (m, d) replicated input table
+    idx: jax.Array,                # (R, L) int32 plan rows
+    mask: jax.Array,               # (R, L) bool/int32 slot validity
+    *,
+    bl: int = 128,
+    interpret: bool = False,
+    out_dtype=jnp.float32,
+) -> jax.Array:                    # (R, L, L) masked per-reducer Gram
+    R, L = idx.shape
+    d = x.shape[1]
+    if R == 0:
+        return jnp.zeros((0, L, L), out_dtype)
+    bl = min(bl, _round_up(L, min_tile_sublanes(x.dtype)))
+    Lp = _round_up(L, bl)
+    n_t = Lp // bl
+    idx = jnp.pad(idx.astype(jnp.int32), ((0, 0), (0, Lp - L)))
+    mask = jnp.pad(mask.astype(jnp.int32), ((0, 0), (0, Lp - L)))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,                 # idx and mask rows
+        grid=(R, n_t, n_t),
+        in_specs=[pl.BlockSpec(memory_space=pltpu.ANY)],   # table in HBM
+        out_specs=pl.BlockSpec((1, bl, bl), lambda r, i, j, *_: (r, i, j)),
+        scratch_shapes=[
+            pltpu.VMEM((bl, d), x.dtype),      # xi gather tile
+            pltpu.VMEM((bl, d), x.dtype),      # xj gather tile
+            pltpu.SemaphoreType.DMA((2,)),     # double-buffered row copies
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_fused_kernel, bl=bl),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((R, Lp, Lp), out_dtype),
+        interpret=interpret,
+    )(idx, mask, x)
+    return out[:, :L, :L]
+
+
+def fused_gather_gram_ref(x, idx, mask):
+    """Materializing oracle: gather -> mask -> batched Gram (fp32)."""
+    g = jnp.take(x, idx, axis=0) * mask.astype(x.dtype)[..., None]
+    return jax.lax.dot_general(
+        g, g, dimension_numbers=(((2,), (2,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)
+
+
+def fused_gather_gram_streamed(x, idx, mask, *, bl: int = 128):
+    """jnp twin of the kernel's tile dataflow (non-TPU fused executor).
+
+    Gathers (R, bl, d) tiles only — a multi-tile width never materializes
+    its full (R, L, d) gather, and a bucketed plan never materializes the
+    dense one.  The j tile is re-gathered per (i, j) step exactly like the
+    kernel, so lowered HLO traffic mirrors the kernel's DMA schedule.
+    """
+    R, L = idx.shape
+    maskf = mask.astype(x.dtype)[..., None]
+    dims = (((2,), (2,)), ((0,), (0,)))      # batched Xi @ Xj^T
+
+    def tile(t, width):
+        g = jnp.take(x, jax.lax.dynamic_slice_in_dim(idx, t * bl, width, 1),
+                     axis=0)
+        return g * jax.lax.dynamic_slice_in_dim(maskf, t * bl, width, 1)
+
+    if L <= bl:
+        g = jnp.take(x, idx, axis=0) * maskf
+        return jax.lax.dot_general(g, g, dims,
+                                   preferred_element_type=jnp.float32)
+
+    n_t = L // bl
+    widths = [bl] * n_t + ([L - n_t * bl] if L % bl else [])
+    rows = []
+    for i, wi in enumerate(widths):
+        gi = tile(i, wi)
+        rows.append(jnp.concatenate(
+            [jax.lax.dot_general(gi, tile(j, wj), dims,
+                                 preferred_element_type=jnp.float32)
+             for j, wj in enumerate(widths)], axis=2))
+    return jnp.concatenate(rows, axis=1)
+
+
+def fused_traffic_model(buckets, d: int, itemsize: int,
+                        bl: int = 128) -> dict:
+    """Analytic HBM bytes of the kernel dataflow vs the unfused pipeline.
+
+    Per reducer of bucket width Lb with n = ceil(Lb/bl) row tiles:
+
+      fused    — xi gathered once per tile row (Lb rows), xj re-gathered per
+                 (i, j) tile (n·Lb rows), plus the (Lb, Lb) fp32 block write.
+      unfused  — the gather writes (Lb, d) then the Gram kernel reads it as
+                 both operands (3·Lb·d round trip counted once each way ->
+                 4·Lb·d with the gather's own table read), plus the block.
+
+    Returns totals plus ``saved_bytes`` (the materialized-gather round trip
+    the fused kernel removes, net of its tile re-reads).
+    """
+    fused = unfused = blocks = 0
+    for b in buckets:
+        Rb, Lb = int(b.idx.shape[0]), int(b.idx.shape[1])
+        n = -(-Lb // bl)
+        fused += Rb * (1 + n) * Lb * d * itemsize
+        unfused += Rb * 4 * Lb * d * itemsize
+        blocks += Rb * Lb * Lb * 4
+    return {
+        "fused_bytes": fused + blocks,
+        "unfused_bytes": unfused + blocks,
+        "saved_bytes": unfused - fused,
+        "block_bytes": blocks,
+    }

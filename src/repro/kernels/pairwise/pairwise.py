@@ -19,7 +19,27 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["pairwise_gram"]
+__all__ = ["pairwise_gram", "min_tile_sublanes"]
+
+# minimum TPU tile second-to-last ("sublane") extent by dtype width; the
+# last ("lane") dimension is always 128 (see the Pallas guide's tiling
+# constraints table)
+_MIN_SUBLANES = {4: 8, 2: 16, 1: 32}
+_LANE = 128
+
+
+def min_tile_sublanes(dtype) -> int:
+    """Minimum sublane tile extent for ``dtype`` (8 f32 / 16 bf16 / 32 i8)."""
+    return _MIN_SUBLANES.get(jnp.dtype(dtype).itemsize, 8)
+
+
+def _clamp_block(b: int, n: int, dtype, *, lane: bool = False) -> int:
+    """Shrink block size ``b`` toward extent ``n`` without breaking TPU tile
+    alignment: the clamped block is rounded *up* to the dtype's minimum tile
+    multiple (sublane, or 128 for the lane axis), so sub-tile bucket widths
+    never produce unaligned BlockSpecs."""
+    mult = _LANE if lane else min_tile_sublanes(dtype)
+    return min(b, -(-max(n, 1) // mult) * mult)
 
 
 def _gram_kernel(x_ref, y_ref, o_ref, acc_ref, *, n_k: int, m: int, n: int):
@@ -66,9 +86,9 @@ def pairwise_gram(
     M, K = x.shape
     N, Ky = y.shape
     assert K == Ky, (x.shape, y.shape)
-    bm = min(bm, max(8, M))
-    bn = min(bn, max(8, N))
-    bk = min(bk, max(8, K))
+    bm = _clamp_block(bm, M, x.dtype)
+    bn = _clamp_block(bn, N, y.dtype)
+    bk = _clamp_block(bk, K, x.dtype, lane=True)
 
     def pad(a, mult1):
         # only K is materially padded (it feeds the accumulation, so OOB

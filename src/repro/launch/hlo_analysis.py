@@ -23,7 +23,8 @@ import dataclasses
 import re
 from typing import Optional
 
-__all__ = ["analyze_hlo_text", "HloStats"]
+__all__ = ["analyze_hlo_text", "buffer_shapes", "has_buffer_shape",
+           "HloStats"]
 
 _DTYPE_BYTES = {
     "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1,
@@ -247,6 +248,34 @@ def _is_resident(type_str: str, min_dim: int = 1024) -> bool:
         return False
     dims = _dims(m.group(2))
     return len(dims) >= 2 and dims[-1] >= min_dim and dims[-2] >= min_dim
+
+
+def buffer_shapes(text: str) -> dict:
+    """Dim-tuple -> count over every op result buffer in the HLO text.
+
+    Fusion interiors are included: a materialized gather shows up as its
+    producing op's result shape wherever XLA placed it.  Used by the fused
+    executor's acceptance check — the dense ``(R, L, d)`` gather buffer
+    must appear in the dense program and be absent from the fused one.
+    """
+    out: dict = {}
+    seen: set = set()
+    for comp in _parse_computations(text).values():
+        if id(comp) in seen:          # "__entry__" aliases the entry comp
+            continue
+        seen.add(id(comp))
+        for op in comp.ops:
+            # tuple-typed results (multi-output fusions) carry several
+            # shapes — count every component buffer
+            for _, dim_str in _SHAPE_RE.findall(op.type_str):
+                dims = tuple(_dims(dim_str))
+                out[dims] = out.get(dims, 0) + 1
+    return out
+
+
+def has_buffer_shape(text: str, dims) -> bool:
+    """True if any op in the HLO produces a buffer of exactly ``dims``."""
+    return tuple(int(d) for d in dims) in buffer_shapes(text)
 
 
 def analyze_hlo_text(text: str, num_partitions: int = 1,

@@ -23,6 +23,12 @@ Public API
     padded only to its own power-of-two width (DESIGN.md "bucketed
     shuffle execution").  ``combine='dense'`` reproduces the dense output
     layout; ``combine='buckets'`` keeps per-bucket outputs unpadded.
+``run_reducers_fused(inputs, plan, reducer_fn, mesh=...)``
+    Fused path (DESIGN.md "fused shuffle execution"): Gram-block reducers
+    stream the shuffle straight into the MXU via the fused gather+Gram
+    Pallas kernel (jnp tile-twin off-TPU) — all buckets in one program,
+    the padded gather never written to HBM.  Non-Gram reducers fall back
+    to the bucketed path.
 ``pairwise_similarity(x, q=...)``
     A2A application: all-pairs similarity through a planned schema.
 ``some_pairs_similarity(x, pairs, q=...)``
@@ -38,8 +44,11 @@ from .engine import (
     ReducerBucket,
     ReducerPlan,
     build_plan,
+    fused_stats,
+    jit_cache_stats,
     run_reducers,
     run_reducers_bucketed,
+    run_reducers_fused,
 )
 from .allpairs import (
     assemble_pair_matrix,
@@ -51,7 +60,8 @@ from .skewjoin import skew_join
 
 __all__ = [
     "ReducerBucket", "ReducerPlan", "build_plan",
-    "run_reducers", "run_reducers_bucketed",
+    "run_reducers", "run_reducers_bucketed", "run_reducers_fused",
+    "fused_stats", "jit_cache_stats",
     "pairwise_similarity", "some_pairs_similarity",
     "assemble_pair_matrix", "assemble_pair_matrix_bucketed",
     "skew_join",

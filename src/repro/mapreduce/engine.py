@@ -13,7 +13,7 @@ The MapReduce shuffle of the paper is adapted to TPU/JAX as follows
     slots in parallel (the MXU does the per-reducer all-pairs work through
     the Pallas ``pairwise`` kernel).
 
-Two executors share the plan format:
+Three executors share the plan format:
 
 ``run_reducers``           — the dense path: one gather padded to the global
                              max slot count.  Simple, one XLA program, but a
@@ -27,11 +27,19 @@ Two executors share the plan format:
                              one vmapped gather+reduce per bucket, each
                              padded only to its own bucket width, outputs
                              reassembled in original reducer order.
+``run_reducers_fused``     — the fused path (DESIGN.md "fused shuffle
+                             execution"): for Gram-block reducers the
+                             shuffle streams straight into the MXU through
+                             the fused gather+Gram Pallas kernel — the
+                             padded gather never round-trips through HBM,
+                             and all buckets run in one program.  Non-Gram
+                             reducers fall back to the bucketed path.
 """
 
 from __future__ import annotations
 
 import dataclasses
+from collections import OrderedDict
 from functools import partial
 from typing import Callable, Optional
 
@@ -48,8 +56,13 @@ __all__ = [
     "build_plan",
     "run_reducers",
     "run_reducers_bucketed",
+    "run_reducers_fused",
     "lower_reducers",
     "lower_reducers_bucketed",
+    "lower_reducers_fused",
+    "jit_cache_stats",
+    "fused_stats",
+    "reset_fused_stats",
 ]
 
 
@@ -215,23 +228,47 @@ def _gather_reduce(x, idx, mask, reducer_fn):
 # bucketed run — reuse the XLA compile cache instead of re-tracing through
 # a fresh jax.jit wrapper each time.  Callers enable reuse by passing the
 # *same* reducer_fn object (see allpairs._block_fn).
-_JIT_CACHE: dict = {}
+#
+# The cache is a bounded LRU: a long-running PairwiseService loop that keeps
+# constructing *fresh* reducer closures (defeating the reuse contract) evicts
+# its oldest entries instead of growing without limit.  ``jit_cache_stats``
+# feeds the serving telemetry.
+_JIT_CACHE: OrderedDict = OrderedDict()
+_JIT_CACHE_MAX = 64
+_JIT_CACHE_STATS = {"hits": 0, "misses": 0, "evictions": 0}
+
+
+def _cache_get(key, factory):
+    fn = _JIT_CACHE.get(key)
+    if fn is None:
+        _JIT_CACHE_STATS["misses"] += 1
+        fn = factory()
+        _JIT_CACHE[key] = fn
+        while len(_JIT_CACHE) > _JIT_CACHE_MAX:
+            _JIT_CACHE.popitem(last=False)
+            _JIT_CACHE_STATS["evictions"] += 1
+    else:
+        _JIT_CACHE_STATS["hits"] += 1
+        _JIT_CACHE.move_to_end(key)
+    return fn
+
+
+def jit_cache_stats() -> dict:
+    """Engine jit-cache counters (size / hits / misses / evictions)."""
+    return {**_JIT_CACHE_STATS, "size": len(_JIT_CACHE),
+            "max_size": _JIT_CACHE_MAX}
 
 
 def _get_jitted(reducer_fn, mesh, shard_axes):
-    key = (reducer_fn, mesh, shard_axes)
-    fn = _JIT_CACHE.get(key)
-    if fn is None:
+    def factory():
         run = partial(_gather_reduce, reducer_fn=reducer_fn)
         if mesh is None:
-            fn = jax.jit(run)
-        else:
-            red_sharding, rep = _shardings(mesh, shard_axes)
-            fn = jax.jit(run,
-                         in_shardings=(rep, red_sharding, red_sharding),
-                         out_shardings=red_sharding)
-        _JIT_CACHE[key] = fn
-    return fn
+            return jax.jit(run)
+        red_sharding, rep = _shardings(mesh, shard_axes)
+        return jax.jit(run,
+                       in_shardings=(rep, red_sharding, red_sharding),
+                       out_shardings=red_sharding)
+    return _cache_get((reducer_fn, mesh, shard_axes), factory)
 
 
 def run_reducers(
@@ -338,6 +375,160 @@ def run_reducers_bucketed(
     return jax.tree.unflatten(treedef, acc)
 
 
+# ---------------------------------------------------------------------------
+# fused (gather+Gram megakernel) executor
+# ---------------------------------------------------------------------------
+# The fused path only serves *Gram-block* reducers — reducer functions
+# tagged with a ``fused_metric`` attribute ("dot" / "l2" / "cosine", see
+# allpairs._block_fn).  Anything else falls back to the bucketed executor;
+# the counters below are the serving-telemetry source of truth.
+FUSED_STATS = {"calls": 0, "kernel": 0, "streamed": 0, "fallbacks": 0}
+
+
+def fused_stats() -> dict:
+    """Snapshot of the fused-executor dispatch counters."""
+    return dict(FUSED_STATS)
+
+
+def reset_fused_stats() -> None:
+    for k in FUSED_STATS:
+        FUSED_STATS[k] = 0
+
+
+def _finish_fused_blocks(g, mask, metric: str):
+    """Metric post-processing of a masked per-reducer Gram stack.
+
+    Mirrors ``allpairs.block_similarity`` exactly: norms are the Gram
+    diagonal (masked rows were zeroed at gather time, so their norms are 0),
+    invalid pairs -> 0.
+    """
+    if metric != "dot":
+        n2 = jnp.diagonal(g, axis1=1, axis2=2)            # (Rb, Lb)
+        if metric == "l2":
+            g = n2[:, :, None] + n2[:, None, :] - 2.0 * g
+        elif metric == "cosine":
+            nrm = jnp.sqrt(n2 + 1e-9)
+            g = g / (nrm[:, :, None] * nrm[:, None, :])
+        else:
+            raise ValueError(metric)
+    valid = mask[:, :, None] & mask[:, None, :]
+    return jnp.where(valid, g, 0.0)
+
+
+def _make_fused_jitted(metric, combine, mesh, shard_axes, use_kernel,
+                       interpret, bl, postprocess):
+    from repro.kernels.pairwise.fused_gather_gram import (
+        fused_gather_gram,
+        fused_gather_gram_streamed,
+    )
+
+    def run(x, buckets, pp_arg, R, L):
+        per_bucket = []
+        for idx, msk, rows in buckets:
+            if use_kernel:
+                g = fused_gather_gram(x, idx, msk, bl=bl,
+                                      interpret=interpret)
+            else:
+                g = fused_gather_gram_streamed(x, idx, msk, bl=bl)
+            mb = msk.astype(bool)
+            per_bucket.append(((idx, mb, rows),
+                               _finish_fused_blocks(g, mb, metric)))
+        if postprocess is not None:
+            return postprocess(per_bucket, pp_arg)
+        if combine == "buckets":
+            return [g for _, g in per_bucket]
+        # dense combine: scatter bucket blocks (padded to the dense width)
+        # into original reducer order; padding rows land in the extra row R
+        acc = jnp.zeros((R + 1, L, L), jnp.float32)
+        for (idx, msk, rows), g in per_bucket:
+            Lb = g.shape[1]
+            gp = jnp.pad(g, ((0, 0), (0, L - Lb), (0, L - Lb)))
+            acc = acc.at[rows].set(gp)
+        return acc[:R]
+
+    if mesh is None:
+        return jax.jit(run, static_argnums=(3, 4))
+    red_sharding, rep = _shardings(mesh, shard_axes)
+    return jax.jit(run, in_shardings=(rep, red_sharding, rep),
+                   static_argnums=(3, 4))
+
+
+def run_reducers_fused(
+    inputs: jax.Array,                     # (m, d) one row per input
+    plan: ReducerPlan,
+    reducer_fn: Callable[[jax.Array, jax.Array], jax.Array],
+    *,
+    mesh: Optional[jax.sharding.Mesh] = None,
+    shard_axes: Optional[tuple[str, ...]] = None,
+    combine: str = "dense",
+    postprocess: Optional[Callable] = None,
+    postprocess_arg=None,
+    use_kernel: Optional[bool] = None,
+    interpret: bool = False,
+    bl: int = 128,
+):
+    """Fused shuffle execution: the gathered block stays out of HBM.
+
+    Per capacity bucket, the plan's ``idx``/``mask`` rows drive the fused
+    gather+Gram Pallas kernel (``use_kernel=True``; scalar-prefetched rows,
+    table rows DMA'd HBM->VMEM, fp32 MXU accumulation — gathered rows live
+    only in VMEM scratch) or its jnp twin with the same tile dataflow
+    (``use_kernel=False``, the non-TPU default) — the twin still gathers
+    ``(Rb, bl, d)`` tiles as XLA intermediates, but a multi-tile bucket
+    never materializes its full ``(Rb, Lb, d)`` block and no bucket ever
+    materializes the dense ``(R, L, d)`` one.  *All* buckets execute
+    inside ONE jitted program, so a request pays a single dispatch instead
+    of one per bucket.
+
+    Only Gram-block reducers are fusable: ``reducer_fn`` must carry a
+    ``fused_metric`` attribute (see ``allpairs._block_fn``).  Any other
+    reducer — and bucketless plans — falls back to
+    :func:`run_reducers_bucketed` with identical outputs (``FUSED_STATS``
+    counts the fallbacks for serving telemetry).
+
+    ``combine`` follows the bucketed executor ('dense' / 'buckets');
+    ``postprocess(per_bucket, postprocess_arg)`` — a *stable* function
+    object, traced into the same program — lets applications fuse their
+    assembly step too (allpairs passes its inverse-shuffle gather map).
+    ``use_kernel=None`` auto-selects: Pallas on TPU, streamed jnp elsewhere.
+    """
+    assert combine in ("dense", "buckets"), combine
+    FUSED_STATS["calls"] += 1
+    metric = getattr(reducer_fn, "fused_metric", None)
+    if metric is None or not plan.buckets:
+        FUSED_STATS["fallbacks"] += 1
+        out = run_reducers_bucketed(
+            inputs, plan, reducer_fn, mesh=mesh, shard_axes=shard_axes,
+            combine="buckets" if postprocess is not None else combine)
+        if postprocess is not None:
+            # honor the postprocess contract on the fallback path (eager)
+            per_bucket = [((jnp.asarray(b.idx), jnp.asarray(b.mask),
+                            jnp.asarray(_scatter_rows(b, plan.R))), blocks)
+                          for b, blocks in out]
+            return postprocess(per_bucket, postprocess_arg)
+        return out
+
+    if use_kernel is None:
+        use_kernel = jax.default_backend() == "tpu"
+    FUSED_STATS["kernel" if use_kernel else "streamed"] += 1
+    shard_axes = tuple(shard_axes) if shard_axes is not None else None
+    fn = _cache_get(
+        ("fused", metric, combine, postprocess, mesh, shard_axes,
+         bool(use_kernel), bool(interpret), bl),
+        lambda: _make_fused_jitted(metric, combine, mesh, shard_axes,
+                                   use_kernel, interpret, bl, postprocess))
+    buckets = tuple(
+        (jnp.asarray(b.idx), jnp.asarray(b.mask),
+         jnp.asarray(_scatter_rows(b, plan.R)))
+        for b in plan.buckets)
+    return fn(inputs, buckets, postprocess_arg, plan.R, plan.L)
+
+
+def _scatter_rows(bucket: ReducerBucket, R: int) -> np.ndarray:
+    """Bucket rows for drop-style scatter: padding rows (-1) -> row R."""
+    return np.where(bucket.rows >= 0, bucket.rows, R).astype(np.int32)
+
+
 def lower_reducers(
     input_shape: tuple[int, int],
     plan: ReducerPlan,
@@ -346,12 +537,17 @@ def lower_reducers(
     dtype=jnp.float32,
     shard_axes: Optional[tuple[str, ...]] = None,
 ):
-    """Lower (no execution) for dry-run / roofline analysis."""
+    """Lower (no execution) for dry-run / roofline analysis.
+
+    ``mesh=None`` lowers the unsharded single-program form (used by the
+    benchmark's HLO buffer checks)."""
     idx = jax.ShapeDtypeStruct(plan.idx.shape, jnp.int32)
     mask = jax.ShapeDtypeStruct(plan.mask.shape, jnp.bool_)
     x = jax.ShapeDtypeStruct(input_shape, dtype)
 
     _run = partial(_gather_reduce, reducer_fn=reducer_fn)
+    if mesh is None:
+        return jax.jit(_run).lower(x, idx, mask)
     red_sharding, rep = _shardings(mesh, shard_axes)
     fn = jax.jit(
         _run,
@@ -384,3 +580,33 @@ def lower_reducers_bucketed(
         mask = jax.ShapeDtypeStruct(b.mask.shape, jnp.bool_)
         out.append((b, fn.lower(x, idx, mask)))
     return out
+
+
+def lower_reducers_fused(
+    input_shape: tuple[int, int],
+    plan: ReducerPlan,
+    metric: str,
+    mesh: Optional[jax.sharding.Mesh] = None,
+    dtype=jnp.float32,
+    shard_axes: Optional[tuple[str, ...]] = None,
+    combine: str = "buckets",
+    use_kernel: bool = False,
+    bl: int = 128,
+):
+    """Lower the fused executor's single all-bucket program (no execution).
+
+    Defaults to the streamed (jnp) lowering so the dry-run works on any
+    backend; on this path the program is directly comparable with
+    ``lower_reducers_bucketed`` — same math, one program, no materialized
+    gather for multi-tile widths.  Returns one ``Lowered``.
+    """
+    shard_axes = tuple(shard_axes) if shard_axes is not None else None
+    fn = _make_fused_jitted(metric, combine, mesh, shard_axes, use_kernel,
+                            False, bl, None)
+    x = jax.ShapeDtypeStruct(input_shape, dtype)
+    buckets = tuple(
+        (jax.ShapeDtypeStruct(b.idx.shape, jnp.int32),
+         jax.ShapeDtypeStruct(b.mask.shape, jnp.bool_),
+         jax.ShapeDtypeStruct((b.R,), jnp.int32))
+        for b in plan.buckets)
+    return fn.lower(x, buckets, None, plan.R, plan.L)

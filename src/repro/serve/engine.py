@@ -15,8 +15,9 @@ the tests exercise.
 ``PairwiseService`` is the paper-workload serving facade: all-pairs /
 some-pairs similarity queries planned through the registry planner (plans
 memoized by weight profile in ``PLAN_CACHE``) and executed on the
-skew-aware bucketed shuffle executor, with per-request plan provenance and
-bucket telemetry for dashboards.
+skew-aware bucketed shuffle executor or the fused gather+Gram megakernel
+path (``executor='fused'``), with per-request plan provenance, plan-cache
+hit flags, and fused/jit-cache telemetry for dashboards.
 """
 
 from __future__ import annotations
@@ -131,28 +132,53 @@ class PairwiseService:
 
     def __init__(self, q: float, *, metric: str = "dot", mesh=None,
                  executor: str = "bucketed", max_buckets: int = 8,
-                 use_kernel: bool = False):
+                 use_kernel: bool = False, interpret: bool = False):
         self.q = q
         self.metric = metric
         self.mesh = mesh
         self.executor = executor
         self.max_buckets = max_buckets
         self.use_kernel = use_kernel
+        self.interpret = interpret
         self.stats = {
             "requests": 0,
             "reducers": 0,
             "dense_padded_elements": 0,
             "bucketed_padded_elements": 0,
+            "plan_cache_hits": 0,
+            "fused_kernel": 0,
+            "fused_streamed": 0,
+            "fused_fallbacks": 0,
             "wall_s": 0.0,
         }
 
-    def _info(self, plan, dt: float) -> dict:
+    def _snap(self):
+        """Counter snapshot taken around one request (plan cache + fused
+        executor dispatch), so ``_info`` can report per-request deltas."""
+        from repro.core import PLAN_CACHE
+        from repro.mapreduce import fused_stats
+        return {"plan_hits": PLAN_CACHE.hits, **{
+            f"fused_{k}": v for k, v in fused_stats().items()}}
+
+    def _info(self, plan, dt: float, snap: dict) -> dict:
+        after = self._snap()
+        delta = {k: after[k] - snap[k] for k in snap}
+        from repro.mapreduce import jit_cache_stats
         self.stats["requests"] += 1
         self.stats["reducers"] += plan.num_reducers
         self.stats["dense_padded_elements"] += plan.dense_padded_elements
         self.stats["bucketed_padded_elements"] += \
             plan.bucketed_padded_elements
+        self.stats["plan_cache_hits"] += delta["plan_hits"]
+        self.stats["fused_kernel"] += delta["fused_kernel"]
+        self.stats["fused_streamed"] += delta["fused_streamed"]
+        self.stats["fused_fallbacks"] += delta["fused_fallbacks"]
         self.stats["wall_s"] += dt
+        fused_path = None
+        if self.executor == "fused":
+            fused_path = ("fallback" if delta["fused_fallbacks"]
+                          else "kernel" if delta["fused_kernel"]
+                          else "streamed")
         return {
             "algorithm": plan.algorithm,
             "comm_cost": plan.comm_cost,
@@ -164,30 +190,35 @@ class PairwiseService:
             "bucketed_padded_elements": plan.bucketed_padded_elements,
             "padding_savings": plan.padding_savings,
             "executor": self.executor,
+            "plan_cache_hit": delta["plan_hits"] > 0,
+            "fused_path": fused_path,
+            "jit_cache": jit_cache_stats(),
             "wall_s": dt,
         }
 
     def similarity(self, x, weights=None):
         """All-pairs similarity for one query table.  Returns (sims, info)."""
         from repro.mapreduce.allpairs import pairwise_similarity
+        snap = self._snap()
         t0 = time.perf_counter()
         sims, plan, _schema = pairwise_similarity(
             jnp.asarray(x), q=self.q, weights=weights, metric=self.metric,
             mesh=self.mesh, executor=self.executor,
-            use_kernel=self.use_kernel)
+            use_kernel=self.use_kernel, interpret=self.interpret)
         sims = jax.block_until_ready(sims)
-        return sims, self._info(plan, time.perf_counter() - t0)
+        return sims, self._info(plan, time.perf_counter() - t0, snap)
 
     def some_pairs(self, x, pairs, weights=None):
         """Similarity restricted to an explicit required-pair set."""
         from repro.mapreduce.allpairs import some_pairs_similarity
+        snap = self._snap()
         t0 = time.perf_counter()
         sims, plan, _schema = some_pairs_similarity(
             jnp.asarray(x), pairs, q=self.q, weights=weights,
             metric=self.metric, mesh=self.mesh, executor=self.executor,
-            use_kernel=self.use_kernel)
+            use_kernel=self.use_kernel, interpret=self.interpret)
         sims = jax.block_until_ready(sims)
-        return sims, self._info(plan, time.perf_counter() - t0)
+        return sims, self._info(plan, time.perf_counter() - t0, snap)
 
     @property
     def padding_savings(self) -> float:
