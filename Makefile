@@ -7,7 +7,7 @@ PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
 .PHONY: test test-fast test-schemas lint ci bench bench-quick bench-skewed \
-	bench-fused
+	bench-fused bench-sharded
 
 test:
 	$(PYTHON) -m pytest -q
@@ -16,11 +16,12 @@ test:
 test-fast:
 	$(PYTHON) -m pytest -q -m "not slow"
 
-# the paper's correctness core: schema conformance + bucketed- and
-# fused-executor differential tests
+# the paper's correctness core: schema conformance + bucketed-, fused-
+# and sharded-executor differential tests
 test-schemas:
 	$(PYTHON) -m pytest -q tests/test_schema_conformance.py \
-		tests/test_bucketed_executor.py tests/test_fused_executor.py
+		tests/test_bucketed_executor.py tests/test_fused_executor.py \
+		tests/test_sharded_executor.py
 
 lint:
 	$(PYTHON) -m compileall -q src
@@ -39,3 +40,10 @@ bench-skewed:
 # dense vs bucketed vs fused executor; writes benchmarks/BENCH_engine.json
 bench-fused:
 	$(PYTHON) benchmarks/bench_engine.py --fused
+
+# sharded vs bucketed vs fused on a forced 8-device CPU mesh; merges the
+# engine_sharded section into benchmarks/BENCH_engine.json
+bench-sharded:
+	XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+		JAX_PLATFORMS=$${JAX_PLATFORMS:-cpu} \
+		$(PYTHON) benchmarks/bench_engine.py --sharded

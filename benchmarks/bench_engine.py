@@ -15,6 +15,15 @@ executors produce allclose similarity matrices AND the padded-element
 speedup is reported (machine-dependent, informational).  Warmup runs
 populate the engine's jit cache, so the timed iterations measure
 execution, not tracing.
+
+``--sharded`` runs the shard-balanced multi-device scenario on the same
+Zipf workload: the plan is LPT-partitioned over the local device mesh
+(``make bench-sharded`` forces an 8-device CPU mesh via ``XLA_FLAGS``)
+and executed per shard under ``shard_map``.  Bars: sharded output
+allclose to bucketed and fused, and LPT balance factor <= 1.25 on the
+8-shard reference partition.  Both ``--fused`` and ``--sharded`` merge
+their sections into ``benchmarks/BENCH_engine.json`` for cross-PR
+tracking.
 """
 
 from __future__ import annotations
@@ -120,16 +129,14 @@ def run_skewed(m: int = 512, d: int = 64, q: float = 1.0,
 
 
 def _executor_hlo(x_shape, plan, executor: str) -> str:
-    """Compiled single-host HLO text of one executor's program (no mesh)."""
+    """Compiled single-host HLO text of one executor's program (no mesh),
+    dispatched through the executor registry."""
     from repro.mapreduce.allpairs import _block_fn
-    from repro.mapreduce.engine import lower_reducers, lower_reducers_fused
+    from repro.mapreduce.executors import get_executor
 
-    if executor == "fused":
-        lowered = lower_reducers_fused(x_shape, plan, "dot", mesh=None)
-    else:
-        assert executor == "dense", executor
-        lowered = lower_reducers(x_shape, plan, _block_fn("dot", False),
-                                 mesh=None)
+    lowered = get_executor(executor).lower(
+        x_shape, plan, reducer_fn=_block_fn("dot", False), metric="dot",
+        mesh=None)
     return lowered.compile().as_text()
 
 
@@ -234,13 +241,90 @@ def run_fused(m: int = 512, d: int = 64, q: float = 1.0,
     return rep
 
 
-def emit_bench_json(fused_rep, skewed_rep=None, path: str = BENCH_JSON):
-    """Machine-readable perf trajectory (read by CI across PRs)."""
-    payload = {"engine_fused": fused_rep}
-    if skewed_rep is not None:
-        payload["engine_skewed"] = skewed_rep
+def run_sharded(m: int = 512, d: int = 64, q: float = 1.0,
+                zipf_a: float = 1.6, seed: int = 0, repeats: int = 3,
+                balance_shards: int = 8):
+    """Sharded-executor acceptance run on the Zipf skewed workload.
+
+    Times bucketed / fused / sharded on one plan (the sharded executor uses
+    all local devices — run under
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` for a real
+    multi-shard CPU mesh, which is what ``make bench-sharded`` does),
+    checks allclose against both baselines, and reports the LPT partition:
+    per-shard padded elements, shipped rows, and the balance factor over
+    ``balance_shards`` shards.  Bars: allclose, and balance factor <= 1.25
+    on the Zipf m=512 reference partition.
+    """
+    import jax as _jax
+    from repro.core import partition_plan
+
+    rng = np.random.default_rng(seed)
+    w = np.clip(rng.zipf(zipf_a, m).astype(np.float64) / 32.0,
+                0.01, 0.45 * q)
+    x = jnp.asarray(rng.normal(size=(m, d)).astype(np.float32))
+    schema = plan_a2a(w, q)
+    schema.validate("a2a")
+
+    sims_b, plan, buck_s = _time_executor(x, q, w, schema, "bucketed",
+                                          repeats)
+    sims_f, _, fused_s = _time_executor(x, q, w, schema, "fused", repeats)
+    sims_s, _, shard_s = _time_executor(x, q, w, schema, "sharded", repeats)
+
+    allclose = bool(
+        np.allclose(np.asarray(sims_b), np.asarray(sims_s),
+                    rtol=1e-4, atol=1e-4)
+        and np.allclose(np.asarray(sims_f), np.asarray(sims_s),
+                        rtol=1e-4, atol=1e-4))
+
+    # the acceptance partition: LPT balance over the reference shard count
+    # (independent of how many devices this host happens to expose)
+    part = partition_plan(plan, balance_shards)
+    rep_part = part.report()
+    # the partition actually executed on this host's devices
+    n_dev = len(_jax.devices())
+    exec_part = partition_plan(plan, n_dev).report()
+
+    rep = {
+        "m": m, "d": d, "q": q, "zipf_a": zipf_a,
+        "algorithm": schema.algorithm,
+        "reducers": plan.num_reducers,
+        "devices": n_dev,
+        "bucket_widths": plan.bucket_widths(),
+        "wall_ms": {
+            "bucketed": round(buck_s * 1e3, 1),
+            "fused": round(fused_s * 1e3, 1),
+            "sharded": round(shard_s * 1e3, 1),
+        },
+        "speedup_sharded_vs_bucketed": round(buck_s / max(shard_s, 1e-12),
+                                             3),
+        "speedup_sharded_vs_fused": round(fused_s / max(shard_s, 1e-12), 3),
+        "allclose": allclose,
+        "balance_shards": balance_shards,
+        "balance_factor": rep_part["balance_factor"],
+        "padded_elements_per_shard": rep_part["padded_elements_per_shard"],
+        "shipped_rows_per_shard": rep_part["shipped_rows"],
+        "executed_num_shards": n_dev,
+        "executed_balance_factor": exec_part["balance_factor"],
+    }
+    return rep
+
+
+def emit_bench_json(payload: dict, path: str = BENCH_JSON):
+    """Machine-readable perf trajectory (read by CI across PRs).
+
+    Merges ``payload`` into the existing file, so ``--fused`` and
+    ``--sharded`` runs accumulate sections instead of clobbering each
+    other's history."""
+    existing = {}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                existing = json.load(f)
+        except (json.JSONDecodeError, OSError):
+            existing = {}
+    existing.update(payload)
     with open(path, "w") as f:
-        json.dump(payload, f, indent=1, sort_keys=True)
+        json.dump(existing, f, indent=1, sort_keys=True)
         f.write("\n")
     return path
 
@@ -252,6 +336,10 @@ def main(argv=None):
     ap.add_argument("--fused", action="store_true",
                     help="Zipf input sizes: fused vs bucketed vs dense; "
                          "writes BENCH_engine.json")
+    ap.add_argument("--sharded", action="store_true",
+                    help="Zipf input sizes: sharded vs bucketed vs fused "
+                         "over the local device mesh; writes "
+                         "BENCH_engine.json")
     ap.add_argument("--m", type=int, default=None)
     ap.add_argument("--d", type=int, default=64)
     ap.add_argument("--zipf-a", type=float, default=1.6)
@@ -276,7 +364,7 @@ def main(argv=None):
               f"in fused HLO: {rep['gather_buffer_in_fused_hlo']}")
         print(f"  tiled (bl=8) fused HLO bucket gathers: "
               f"{rep['bucket_gather_in_tiled_fused_hlo']}")
-        path = emit_bench_json(rep)
+        path = emit_bench_json({"engine_fused": rep})
         print(f"  wrote {path}")
         if not rep["allclose"]:
             raise SystemExit("FAIL: fused output diverges")
@@ -293,6 +381,31 @@ def main(argv=None):
             raise SystemExit(
                 f"FAIL: fused speedup {rep['speedup_fused_vs_bucketed']:.2f}x"
                 f" below the 1.5x bar")
+        return rep
+
+    if args.sharded:
+        rep = run_sharded(m=args.m or 512, d=args.d, zipf_a=args.zipf_a,
+                          seed=args.seed)
+        print(f"sharded A2A  m={rep['m']} d={rep['d']} "
+              f"zipf_a={rep['zipf_a']} [{rep['algorithm']}] "
+              f"reducers={rep['reducers']} devices={rep['devices']}")
+        for name in ("bucketed", "fused", "sharded"):
+            print(f"  {name:8s} wall={rep['wall_ms'][name]:8.1f}ms")
+        print(f"  sharded speedup: {rep['speedup_sharded_vs_bucketed']:.2f}x"
+              f" vs bucketed, {rep['speedup_sharded_vs_fused']:.2f}x vs "
+              f"fused  allclose: {rep['allclose']}")
+        print(f"  LPT balance over {rep['balance_shards']} shards: "
+              f"{rep['balance_factor']:.3f}  padded/shard: "
+              f"{rep['padded_elements_per_shard']}  shipped/shard: "
+              f"{rep['shipped_rows_per_shard']}")
+        path = emit_bench_json({"engine_sharded": rep})
+        print(f"  wrote {path}")
+        if not rep["allclose"]:
+            raise SystemExit("FAIL: sharded output diverges")
+        if rep["balance_factor"] > 1.25:
+            raise SystemExit(
+                f"FAIL: LPT balance factor {rep['balance_factor']:.3f} "
+                f"above the 1.25 bar")
         return rep
 
     if args.skewed:

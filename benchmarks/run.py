@@ -7,6 +7,10 @@
                    Zipf workload; emits benchmarks/BENCH_engine.json
                    (wall-clock, padded elements, HBM bytes per executor)
                    so the perf trajectory is machine-readable across PRs
+  bench_engine --sharded — bucketed/fused/sharded shootout + LPT balance
+                   report (per-shard padded elements, balance factor);
+                   merges the engine_sharded section into
+                   benchmarks/BENCH_engine.json
   bench_packing  — FFD bins applied to the data pipeline
   bench_kernels  — Pallas kernels vs oracles
 
@@ -16,8 +20,30 @@ roofline table lives in benchmarks/roofline_report.py (reads dry-run JSON).
 
 from __future__ import annotations
 
+import os
+import subprocess
 import sys
 import time
+
+
+def _bench_engine_sharded():
+    """Run the sharded bench in a SUBPROCESS with a forced 8-device CPU
+    mesh: XLA_FLAGS cannot change the device count of this already-
+    initialized process, and a 1-device in-process run would overwrite the
+    committed multi-device engine_sharded section of BENCH_engine.json
+    with trivial numbers."""
+    script = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                          "bench_engine.py")
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               JAX_PLATFORMS=os.environ.get("JAX_PLATFORMS", "cpu"),
+               PYTHONPATH="src" + (
+                   os.pathsep + os.environ["PYTHONPATH"]
+                   if os.environ.get("PYTHONPATH") else ""))
+    res = subprocess.run([sys.executable, script, "--sharded"], env=env)
+    if res.returncode != 0:
+        raise SystemExit(f"bench_engine --sharded failed ({res.returncode})")
+    return [res]
 
 
 def main() -> None:
@@ -29,6 +55,7 @@ def main() -> None:
         ("bench_x2y", bench_x2y.main),
         ("bench_engine", bench_engine.main),
         ("bench_engine_fused", lambda: [bench_engine.main(["--fused"])]),
+        ("bench_engine_sharded", _bench_engine_sharded),
         ("bench_packing", bench_packing.main),
         ("bench_kernels", bench_kernels.main),
     ]

@@ -16,7 +16,6 @@ Run:  PYTHONPATH=src python examples/serve_pairwise.py
 
 import numpy as np
 
-from repro.mapreduce import fused_stats
 from repro.serve import PairwiseService
 
 M, D, Q = 96, 32, 1.0
@@ -66,7 +65,9 @@ def main():
           f"{agg['fused_fallbacks']}, "
           f"padding savings {svc.padding_savings:.2f}x, "
           f"wall {agg['wall_s'] * 1e3:.0f}ms")
-    print(f"engine fused counters: {fused_stats()}")
+    # the service holds its OWN executor instance — these counters are
+    # scoped to this service, not shared module globals
+    print(f"service executor counters: {svc.executor_stats()}")
 
 
 if __name__ == "__main__":

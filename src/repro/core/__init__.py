@@ -59,15 +59,18 @@ from .bounds import (
     x2y_reducers_lower_bound,
 )
 from .planner import (
+    PlanPartition,
     bucket_summary,
     compute_buckets,
     estimate_a2a,
     naive_pairs,
+    partition_plan,
     plan_a2a,
     plan_a2a_materialized,
     plan_some_pairs,
     plan_unit,
     plan_x2y,
+    reducer_work,
 )
 from .primes import is_prime, next_prime, prev_prime
 from .schema import InfeasibleError, MappingSchema
@@ -86,6 +89,7 @@ __all__ = [
     "plan_a2a", "plan_a2a_materialized", "plan_x2y", "plan_unit",
     "plan_some_pairs", "estimate_a2a", "naive_pairs",
     "compute_buckets", "bucket_summary",
+    "PlanPartition", "partition_plan", "reducer_work",
     "PLAN_CACHE", "PlanCache",
     "UNIT_REGISTRY", "A2A_REGISTRY",
     "register_unit_strategy", "register_a2a_strategy",

@@ -34,6 +34,8 @@ multiset share one cache entry.
 
 from __future__ import annotations
 
+import dataclasses
+import heapq
 import math
 from typing import Optional, Sequence
 
@@ -67,6 +69,9 @@ __all__ = [
     "naive_pairs",
     "compute_buckets",
     "bucket_summary",
+    "PlanPartition",
+    "partition_plan",
+    "reducer_work",
 ]
 
 
@@ -517,6 +522,174 @@ def bucket_summary(schema: MappingSchema, *, pad_slots_to: int = 1,
         "padding_savings": float(dense_slots / max(bucketed_slots, 1)),
         "buckets": rows,
     }
+
+
+# ---------------------------------------------------------------------------
+# shard partitioning: LPT balancing of reducers across a device mesh
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class PlanPartition:
+    """LPT partition of a ReducerPlan's reducers over ``num_shards`` shards.
+
+    shards        — per-shard *compact* sub-plans (same type as the input
+                    plan; each holds only its own reducers' idx/mask rows
+                    and re-grouped capacity buckets whose ``rows`` are
+                    local to the sub-plan).
+    shard_rows    — per-shard arrays of *global* plan-row ids (ascending);
+                    the union over shards is exactly the real reducers,
+                    each appearing once.
+    widths        — (R0,) per-reducer execution width (bucket width, or the
+                    dense L without buckets) — the padded gather cost.
+    loads         — (S,) per-shard work in gather+FLOP units
+                    (``sum(width + flop_weight * width^2)`` over the
+                    shard's reducers).
+    shipped_rows  — (S,) valid slots per shard: the shard's share of the
+                    schema's shipped input copies (the paper's comm cost in
+                    rows); sums to the plan's total valid slots.
+    comm_cost     — (S,) the plan's weighted communication cost prorated by
+                    shipped rows; sums to ``plan.comm_cost``.
+    balance_factor — max(loads) / mean(loads) (1.0 = perfectly balanced;
+                    inflated when num_shards > num_reducers since empty
+                    shards drag the mean down).
+    """
+
+    num_shards: int
+    shards: tuple
+    shard_rows: tuple
+    widths: np.ndarray
+    loads: np.ndarray
+    shipped_rows: np.ndarray
+    comm_cost: np.ndarray
+    balance_factor: float
+    flop_weight: float
+
+    def report(self) -> dict:
+        """Telemetry dict (benchmarks, dryrun, serving dashboards)."""
+        return {
+            "num_shards": self.num_shards,
+            "reducers_per_shard": [int(len(r)) for r in self.shard_rows],
+            "loads": [float(x) for x in self.loads],
+            "shipped_rows": [int(x) for x in self.shipped_rows],
+            "comm_cost": [float(x) for x in self.comm_cost],
+            "balance_factor": float(self.balance_factor),
+            "max_load": float(self.loads.max(initial=0.0)),
+            "padded_elements_per_shard": [
+                int(np.sum(self.widths[rows])) for rows in self.shard_rows],
+        }
+
+
+def reducer_work(plan, flop_weight: float = 1.0) -> np.ndarray:
+    """(R0,) per-reducer work estimate: gather slots + Gram FLOPs, both at
+    the reducer's *execution* width (its capacity-bucket width — what the
+    bucketed/fused pipelines actually pad to), so the balance the LPT
+    achieves is the balance the hardware sees."""
+    widths = _execution_widths(plan)
+    w = widths.astype(np.float64)
+    return w + flop_weight * w * w
+
+
+def _execution_widths(plan) -> np.ndarray:
+    """Per-real-reducer execution width: bucket width where the plan has
+    capacity buckets, the dense L otherwise."""
+    R0 = int(plan.num_reducers)
+    widths = np.full(R0, int(plan.L) if R0 else 0, dtype=np.int64)
+    for b in getattr(plan, "buckets", ()) or ():
+        rows = np.asarray(b.rows)
+        real = rows[(rows >= 0) & (rows < R0)].astype(np.int64)
+        widths[real] = int(b.width)
+    return widths
+
+
+def partition_plan(plan, num_shards: int, *,
+                   flop_weight: float = 1.0) -> PlanPartition:
+    """LPT/greedy balance of a ReducerPlan's reducers into per-shard
+    compact sub-plans.
+
+    Longest-processing-time-first: reducers sorted by descending work
+    (``reducer_work``: per-reducer gather + FLOP cost at its bucket width)
+    are assigned to the least-loaded shard.  Greedy guarantees
+    ``max_load <= mean + (1 - 1/S) * max_work``, so the balance factor is
+    bounded by ``1 + S * max_work / total_work`` — tight (→ 1.0) whenever
+    reducers are plentiful relative to shards, which is exactly the regime
+    the mesh runs in.
+
+    Every *real* reducer (row < ``plan.num_reducers``) lands in exactly one
+    shard with its idx/mask rows copied verbatim — coverage and reducer
+    capacity are preserved by construction, and the per-shard
+    ``shipped_rows``/``comm_cost`` shares sum to the plan's totals (the
+    schema's communication cost is a cluster quantity; sharding only
+    re-buckets it).  Works on any plan-shaped object exposing ``idx`` /
+    ``mask`` / ``num_reducers`` / ``buckets``; sub-plans are built with
+    ``type(plan)`` so this module stays free of engine imports.
+    """
+    assert num_shards >= 1, num_shards
+    R0 = int(plan.num_reducers)
+    widths = _execution_widths(plan)
+    work = reducer_work(plan, flop_weight)
+    mask = np.asarray(plan.mask)
+    slots = (mask[:R0].sum(axis=1).astype(np.int64) if R0
+             else np.zeros(0, np.int64))
+    total_slots = int(slots.sum())
+
+    # LPT: stable sort by descending work, min-heap of (load, shard)
+    order = np.argsort(-work, kind="stable")
+    loads = np.zeros(num_shards, dtype=np.float64)
+    assign: list[list[int]] = [[] for _ in range(num_shards)]
+    heap = [(0.0, s) for s in range(num_shards)]
+    heapq.heapify(heap)
+    for r in order:
+        load, s = heapq.heappop(heap)
+        assign[s].append(int(r))
+        load += float(work[r])
+        loads[s] = load
+        heapq.heappush(heap, (load, s))
+
+    shard_rows = tuple(np.asarray(sorted(a), dtype=np.int64) for a in assign)
+    shipped = np.array([int(slots[rows].sum()) for rows in shard_rows],
+                       dtype=np.int64)
+    comm = (shipped / max(total_slots, 1)) * float(plan.comm_cost)
+    shards = tuple(_sub_plan(plan, rows, widths) for rows in shard_rows)
+    total = float(work.sum())
+    bf = (float(loads.max()) / (total / num_shards)) if total > 0 else 1.0
+    return PlanPartition(
+        num_shards=num_shards, shards=shards, shard_rows=shard_rows,
+        widths=widths, loads=loads, shipped_rows=shipped, comm_cost=comm,
+        balance_factor=bf, flop_weight=flop_weight)
+
+
+def _sub_plan(plan, rows: np.ndarray, widths: np.ndarray):
+    """Compact sub-plan holding only ``rows`` (global plan-row ids).
+
+    idx/mask rows are copied verbatim; capacity buckets are re-grouped from
+    the parent's buckets with ``rows`` re-indexed to sub-plan-local ids, so
+    the sub-plan is a self-consistent plan of the same type."""
+    idx = np.asarray(plan.idx)
+    mask = np.asarray(plan.mask)
+    n = len(rows)
+    sub_idx = idx[rows] if n else np.zeros((0, idx.shape[1]), idx.dtype)
+    sub_mask = mask[rows] if n else np.zeros((0, mask.shape[1]), mask.dtype)
+    local = {int(g): i for i, g in enumerate(rows)}
+    buckets = []
+    for b in getattr(plan, "buckets", ()) or ():
+        b_rows = np.asarray(b.rows)
+        pos = np.flatnonzero(np.isin(b_rows, rows))      # bucket-local slots
+        if not len(pos):
+            continue
+        sel = b_rows[pos].astype(np.int64)               # global row ids
+        buckets.append(type(b)(
+            width=int(b.width),
+            rows=np.asarray([local[int(g)] for g in sel], dtype=np.int64),
+            idx=np.asarray(b.idx)[pos],
+            mask=np.asarray(b.mask)[pos],
+        ))
+    max_inputs = int(sub_mask.sum(axis=1).max(initial=0))
+    total_slots = max(int(mask[:plan.num_reducers].sum()), 1)
+    share = int(sub_mask.sum()) / total_slots
+    return type(plan)(
+        idx=sub_idx, mask=sub_mask, num_reducers=n,
+        comm_cost=float(plan.comm_cost) * share,
+        max_inputs=max_inputs, algorithm=plan.algorithm,
+        lower_bound=None, buckets=tuple(buckets))
 
 
 # ---------------------------------------------------------------------------

@@ -12,7 +12,6 @@ Usage: PYTHONPATH=src python -m repro.launch.dryrun_engine [--m 1024]
 """
 
 import argparse
-import functools
 import json
 
 import jax
@@ -24,13 +23,9 @@ from repro.launch.mesh import make_production_mesh
 from repro.launch.roofline import HW, combine_hlo_stats
 from repro.launch.hlo_analysis import analyze_hlo_text
 from repro.kernels.pairwise.fused_gather_gram import fused_traffic_model
-from repro.mapreduce.allpairs import block_similarity
-from repro.mapreduce.engine import (
-    build_plan,
-    lower_reducers,
-    lower_reducers_bucketed,
-    lower_reducers_fused,
-)
+from repro.mapreduce.allpairs import _block_fn
+from repro.mapreduce.engine import build_plan
+from repro.mapreduce.executors import get_executor
 
 RESULTS = os.path.join(os.path.dirname(__file__), "..", "..", "..",
                        "benchmarks", "results", "dryrun")
@@ -58,9 +53,9 @@ def _stats_rec(plan, name, stats, padded_elements, extra=None):
 
 def analyze(plan, m, d, mesh, name):
     """Dense path: one program padded to the global max slot count."""
-    lowered = lower_reducers(
-        (m, d), plan, functools.partial(block_similarity, metric="dot"),
-        mesh, dtype=jnp.bfloat16)
+    lowered = get_executor("dense").lower(
+        (m, d), plan, reducer_fn=_block_fn("dot", False), mesh=mesh,
+        dtype=jnp.bfloat16)
     compiled = lowered.compile()
     stats = analyze_hlo_text(compiled.as_text(),
                              num_partitions=mesh.devices.size)
@@ -70,9 +65,9 @@ def analyze(plan, m, d, mesh, name):
 def analyze_bucketed(plan, m, d, mesh, name):
     """Bucketed path: one program per capacity bucket; terms are summed
     (the bucket programs run back-to-back on the same mesh)."""
-    per_bucket = lower_reducers_bucketed(
-        (m, d), plan, functools.partial(block_similarity, metric="dot"),
-        mesh, dtype=jnp.bfloat16)
+    per_bucket = get_executor("bucketed").lower(
+        (m, d), plan, reducer_fn=_block_fn("dot", False), mesh=mesh,
+        dtype=jnp.bfloat16)
     stats = combine_hlo_stats([
         analyze_hlo_text(lowered.compile().as_text(),
                          num_partitions=mesh.devices.size)
@@ -93,8 +88,8 @@ def analyze_fused(plan, m, d, mesh, name, bucketed_rec=None):
     executor, next to the schema's communication cost and lower bound: the
     saved bytes are the materialized-gather round trip, i.e. the on-device
     copy of exactly the traffic the paper's objective minimizes."""
-    lowered = lower_reducers_fused((m, d), plan, "dot", mesh,
-                                   dtype=jnp.bfloat16)
+    lowered = get_executor("fused").lower((m, d), plan, metric="dot",
+                                          mesh=mesh, dtype=jnp.bfloat16)
     stats = analyze_hlo_text(lowered.compile().as_text(),
                              num_partitions=mesh.devices.size)
     itemsize = 2                                     # bf16 table rows
@@ -115,6 +110,45 @@ def analyze_fused(plan, m, d, mesh, name, bucketed_rec=None):
         extra["saved_hbm_bytes_per_device_vs_bucketed"] = saved
         extra["saved_hbm_vs_schema_comm"] = (
             saved * mesh.devices.size / max(extra["schema_comm_bytes"], 1))
+    return _stats_rec(plan, name, stats, plan.bucketed_padded_elements,
+                      extra=extra)
+
+
+def analyze_sharded(plan, m, d, mesh, name):
+    """Sharded path: ONE shard_map program, reducers LPT-balanced.
+
+    Lowers the sharded executor's program (per-shard fused tile pipeline +
+    the single cross-shard assembly gather) on the production mesh and
+    reports the *per-shard* HLO bytes next to the schema's per-shard share
+    of the communication lower bound: with S shards, a balanced partition
+    ships ~comm_cost/S rows per shard, so per-shard HLO bytes should track
+    ``lower_bound * d * itemsize / S`` times the plan's optimality gap —
+    the partition report quantifies how close LPT gets."""
+    ex = get_executor("sharded")
+    S = mesh.devices.size
+    part = ex.partition(plan, S)
+    lowered = ex.lower((m, d), plan, metric="dot", mesh=mesh,
+                       dtype=jnp.bfloat16)
+    stats = analyze_hlo_text(lowered.compile().as_text(),
+                             num_partitions=S)
+    itemsize = 2                                     # bf16 table rows
+    lb_rows = float(plan.lower_bound) if plan.lower_bound else None
+    rep = part.report()
+    extra = {
+        "num_shards": S,
+        "balance_factor": rep["balance_factor"],
+        "shipped_rows_per_shard_max": int(max(rep["shipped_rows"])),
+        "shipped_rows_per_shard_mean": float(np.mean(rep["shipped_rows"])),
+        "padded_elements_per_shard_max": int(
+            max(rep["padded_elements_per_shard"])),
+        # per-shard HLO bytes vs the schema lower bound's per-shard share
+        "per_shard_hbm_bytes": stats.hbm_bytes,
+        "schema_lb_bytes_per_shard": (
+            lb_rows * d * itemsize / S if lb_rows else None),
+        "per_shard_hbm_vs_lb": (
+            stats.hbm_bytes / (lb_rows * d * itemsize / S)
+            if lb_rows else None),
+    }
     return _stats_rec(plan, name, stats, plan.bucketed_padded_elements,
                       extra=extra)
 
@@ -150,6 +184,8 @@ def main():
         analyze_fused(plan_opt, args.m, args.d, mesh,
                       f"planner-fused[{schema.algorithm}]",
                       bucketed_rec=bucketed_rec),
+        analyze_sharded(plan_opt, args.m, args.d, mesh,
+                        f"planner-sharded[{schema.algorithm}]"),
         analyze(plan_nv, args.m, args.d, mesh, "naive-all-pairs"),
     ]
     base = rows[-1]
@@ -173,6 +209,14 @@ def main():
                   f"comm volume of {r['schema_comm_bytes']/1e6:.1f} MB; "
                   f"kernel model: {mdl['saved_bytes']/1e6:.1f} MB global "
                   f"gather round-trip removed)")
+        if "num_shards" in r:
+            lb = r["schema_lb_bytes_per_shard"]
+            print(f"{'':40s} sharded over {r['num_shards']} shards: "
+                  f"LPT balance {r['balance_factor']:.3f}, "
+                  f"per-shard HLO {r['per_shard_hbm_bytes']/1e6:.1f} MB vs "
+                  f"lower-bound share "
+                  f"{(lb or 0)/1e6:.1f} MB"
+                  + (f" ({r['per_shard_hbm_vs_lb']:.2f}x)" if lb else ""))
     os.makedirs(RESULTS, exist_ok=True)
     with open(os.path.join(RESULTS, "engine_a2a__pod_16x16.json"), "w") as f:
         json.dump(rows, f, indent=1)

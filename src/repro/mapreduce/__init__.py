@@ -29,6 +29,16 @@ Public API
     Pallas kernel (jnp tile-twin off-TPU) — all buckets in one program,
     the padded gather never written to HBM.  Non-Gram reducers fall back
     to the bucketed path.
+``run_reducers_sharded(inputs, plan, reducer_fn, mesh=...)``
+    Shard-balanced multi-device path (DESIGN.md "sharded execution"):
+    ``repro.core.planner.partition_plan`` LPT-balances reducers over the
+    mesh's reducer axis; each shard runs the fused tile pipeline under
+    ``shard_map``, with one cross-shard gather for assembly.
+``get_executor(name)`` / ``make_executor(name)`` / ``register_executor``
+    The executor registry (``repro.mapreduce.executors``): executors are
+    classes exposing ``run`` / ``run_pairs`` / ``lower`` / ``stats`` and
+    registered by name ("dense", "bucketed", "fused", "sharded") — the
+    single dispatch point for every application entry below.
 ``pairwise_similarity(x, q=...)``
     A2A application: all-pairs similarity through a planned schema.
 ``some_pairs_similarity(x, pairs, q=...)``
@@ -44,11 +54,20 @@ from .engine import (
     ReducerBucket,
     ReducerPlan,
     build_plan,
+    configure_jit_cache,
     fused_stats,
     jit_cache_stats,
     run_reducers,
     run_reducers_bucketed,
     run_reducers_fused,
+    run_reducers_sharded,
+)
+from .executors import (
+    Executor,
+    get_executor,
+    list_executors,
+    make_executor,
+    register_executor,
 )
 from .allpairs import (
     assemble_pair_matrix,
@@ -61,7 +80,10 @@ from .skewjoin import skew_join
 __all__ = [
     "ReducerBucket", "ReducerPlan", "build_plan",
     "run_reducers", "run_reducers_bucketed", "run_reducers_fused",
-    "fused_stats", "jit_cache_stats",
+    "run_reducers_sharded",
+    "Executor", "get_executor", "make_executor", "register_executor",
+    "list_executors",
+    "fused_stats", "jit_cache_stats", "configure_jit_cache",
     "pairwise_similarity", "some_pairs_similarity",
     "assemble_pair_matrix", "assemble_pair_matrix_bucketed",
     "skew_join",

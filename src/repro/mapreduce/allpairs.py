@@ -24,13 +24,8 @@ import numpy as np
 from repro.core import plan_a2a, plan_some_pairs
 from repro.core.schema import MappingSchema
 
-from .engine import (
-    ReducerPlan,
-    build_plan,
-    run_reducers,
-    run_reducers_bucketed,
-    run_reducers_fused,
-)
+from .engine import ReducerPlan, build_plan
+from .executors import get_executor
 
 __all__ = [
     "pairwise_similarity",
@@ -132,22 +127,14 @@ def _assemble_from_srcmap(per_bucket, srcmap):
     return jnp.take(jnp.concatenate(vals), srcmap, axis=0)
 
 
-def _run_and_assemble(x, plan, fn, m, mesh, executor: str,
+def _run_and_assemble(x, plan, fn, m, mesh, executor,
                       use_kernel: bool = False, interpret: bool = False):
-    if executor == "fused":
-        srcmap = jnp.asarray(_pair_source_map(plan, m))
-        return run_reducers_fused(
-            x, plan, fn, mesh=mesh,
-            postprocess=_assemble_from_srcmap, postprocess_arg=srcmap,
-            use_kernel=(True if use_kernel else None), interpret=interpret)
-    if executor == "bucketed":
-        per_bucket = run_reducers_bucketed(x, plan, fn, mesh=mesh,
-                                           combine="buckets")
-        return assemble_pair_matrix_bucketed(per_bucket, m)
-    if executor == "dense":
-        blocks = run_reducers(x, plan, fn, mesh=mesh)    # (R, L, L)
-        return assemble_pair_matrix(blocks, plan, m)
-    raise ValueError(f"unknown executor {executor!r}")
+    """Single dispatch point: ``executor`` is a registry name ("dense",
+    "bucketed", "fused", "sharded") or an :class:`Executor` instance (the
+    serving tier passes its own so telemetry stays instance-scoped)."""
+    return get_executor(executor).run_pairs(
+        x, plan, fn, m, mesh=mesh, use_kernel=use_kernel,
+        interpret=interpret)
 
 
 def pairwise_similarity(
@@ -179,7 +166,14 @@ def pairwise_similarity(
     set ``interpret=True`` to run that kernel on CPU.  Non-Gram reducers
     and bucketless plans silently fall back to the bucketed executor.
 
-    Returns (sims (m, m) with zero diagonal, plan, schema)."""
+    ``executor='sharded'`` LPT-balances the reducers across the local
+    device mesh and runs the fused pipeline per shard under ``shard_map``
+    (DESIGN.md "sharded execution") with one cross-shard assembly gather.
+
+    ``executor`` may also be an :class:`repro.mapreduce.executors.Executor`
+    instance (instance-scoped telemetry); dispatch goes through the
+    executor registry either way.  Returns (sims (m, m) with zero
+    diagonal, plan, schema)."""
     m = x.shape[0]
     if schema is None:
         w = np.full(m, 1.0) if weights is None else np.asarray(weights, float)

@@ -13,7 +13,12 @@ The MapReduce shuffle of the paper is adapted to TPU/JAX as follows
     slots in parallel (the MXU does the per-reducer all-pairs work through
     the Pallas ``pairwise`` kernel).
 
-Three executors share the plan format:
+Executors share the plan format and are registered by name in
+``repro.mapreduce.executors`` (the Executor protocol + registry; DESIGN.md
+"executor registry").  This module is the shared substrate: the plan
+builder, the bounded jit cache, and the dense/bucketed implementations the
+executor classes wrap.  The historical entry points below stay as thin
+shims over the registry so existing callers keep working:
 
 ``run_reducers``           — the dense path: one gather padded to the global
                              max slot count.  Simple, one XLA program, but a
@@ -27,18 +32,26 @@ Three executors share the plan format:
                              one vmapped gather+reduce per bucket, each
                              padded only to its own bucket width, outputs
                              reassembled in original reducer order.
-``run_reducers_fused``     — the fused path (DESIGN.md "fused shuffle
-                             execution"): for Gram-block reducers the
-                             shuffle streams straight into the MXU through
-                             the fused gather+Gram Pallas kernel — the
-                             padded gather never round-trips through HBM,
-                             and all buckets run in one program.  Non-Gram
-                             reducers fall back to the bucketed path.
+``run_reducers_fused``     — shim over ``get_executor("fused")`` (DESIGN.md
+                             "fused shuffle execution"): for Gram-block
+                             reducers the shuffle streams straight into the
+                             MXU through the fused gather+Gram Pallas
+                             kernel — the padded gather never round-trips
+                             through HBM, and all buckets run in one
+                             program.  Non-Gram reducers fall back to the
+                             bucketed path.
+``run_reducers_sharded``   — shim over ``get_executor("sharded")`` (DESIGN.md
+                             "sharded execution"): the plan is LPT-balanced
+                             into per-shard sub-plans
+                             (``repro.core.planner.partition_plan``) and the
+                             fused/bucketed pipeline runs per shard under
+                             ``shard_map`` over the mesh's reducer axis.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import os
 from collections import OrderedDict
 from functools import partial
 from typing import Callable, Optional
@@ -57,10 +70,12 @@ __all__ = [
     "run_reducers",
     "run_reducers_bucketed",
     "run_reducers_fused",
+    "run_reducers_sharded",
     "lower_reducers",
     "lower_reducers_bucketed",
     "lower_reducers_fused",
     "jit_cache_stats",
+    "configure_jit_cache",
     "fused_stats",
     "reset_fused_stats",
 ]
@@ -231,11 +246,48 @@ def _gather_reduce(x, idx, mask, reducer_fn):
 #
 # The cache is a bounded LRU: a long-running PairwiseService loop that keeps
 # constructing *fresh* reducer closures (defeating the reuse contract) evicts
-# its oldest entries instead of growing without limit.  ``jit_cache_stats``
-# feeds the serving telemetry.
+# its oldest entries instead of growing without limit.  The cap is
+# configurable via the ``REPRO_JIT_CACHE_SIZE`` environment variable (read
+# at import and by ``configure_jit_cache()``); ``jit_cache_stats`` feeds the
+# serving telemetry, including per-key hit counts.
+def _env_cache_size(default: int = 64) -> int:
+    """``REPRO_JIT_CACHE_SIZE`` as a cap >= 1; malformed or non-positive
+    values fall back to the default (a cap of 0 would evict every insert
+    immediately — unbounded retracing, the exact cost the cache exists to
+    prevent)."""
+    raw = os.environ.get("REPRO_JIT_CACHE_SIZE", "")
+    try:
+        size = int(raw)
+    except ValueError:
+        return default
+    return size if size >= 1 else default
+
+
 _JIT_CACHE: OrderedDict = OrderedDict()
-_JIT_CACHE_MAX = 64
+_JIT_CACHE_MAX = _env_cache_size()
 _JIT_CACHE_STATS = {"hits": 0, "misses": 0, "evictions": 0}
+_JIT_CACHE_HITS: dict = {}                    # key -> hit count (live entries)
+
+
+def configure_jit_cache(max_size: Optional[int] = None) -> int:
+    """Set the jit-cache LRU cap; with no argument, re-read
+    ``REPRO_JIT_CACHE_SIZE`` from the environment (default 64).  Evicts
+    oldest entries immediately if the cache exceeds the new cap.  Returns
+    the active cap."""
+    global _JIT_CACHE_MAX
+    if max_size is None:
+        max_size = _env_cache_size()
+    assert max_size >= 1, max_size
+    _JIT_CACHE_MAX = max_size
+    while len(_JIT_CACHE) > _JIT_CACHE_MAX:
+        _evict_oldest()
+    return _JIT_CACHE_MAX
+
+
+def _evict_oldest():
+    key, _ = _JIT_CACHE.popitem(last=False)
+    _JIT_CACHE_HITS.pop(key, None)
+    _JIT_CACHE_STATS["evictions"] += 1
 
 
 def _cache_get(key, factory):
@@ -244,19 +296,38 @@ def _cache_get(key, factory):
         _JIT_CACHE_STATS["misses"] += 1
         fn = factory()
         _JIT_CACHE[key] = fn
+        _JIT_CACHE_HITS[key] = 0
         while len(_JIT_CACHE) > _JIT_CACHE_MAX:
-            _JIT_CACHE.popitem(last=False)
-            _JIT_CACHE_STATS["evictions"] += 1
+            _evict_oldest()
     else:
         _JIT_CACHE_STATS["hits"] += 1
+        _JIT_CACHE_HITS[key] = _JIT_CACHE_HITS.get(key, 0) + 1
         _JIT_CACHE.move_to_end(key)
     return fn
 
 
+def _key_label(key) -> str:
+    """Short human-readable label for a jit-cache key (telemetry only)."""
+    if isinstance(key, tuple):
+        return "|".join(_key_label(k) for k in key)
+    name = getattr(key, "__name__", None)
+    if isinstance(name, str):
+        return name
+    if key is None or isinstance(key, (str, int, bool, float)):
+        return str(key)
+    return type(key).__name__
+
+
 def jit_cache_stats() -> dict:
-    """Engine jit-cache counters (size / hits / misses / evictions)."""
+    """Engine jit-cache counters (size / hits / misses / evictions), plus
+    per-key hit counts for the live entries (labels are best-effort
+    summaries of the cache key; colliding labels sum their hits)."""
+    per_key: dict = {}
+    for key, hits in _JIT_CACHE_HITS.items():
+        label = _key_label(key)
+        per_key[label] = per_key.get(label, 0) + hits
     return {**_JIT_CACHE_STATS, "size": len(_JIT_CACHE),
-            "max_size": _JIT_CACHE_MAX}
+            "max_size": _JIT_CACHE_MAX, "per_key": per_key}
 
 
 def _get_jitted(reducer_fn, mesh, shard_axes):
@@ -376,17 +447,19 @@ def run_reducers_bucketed(
 
 
 # ---------------------------------------------------------------------------
-# fused (gather+Gram megakernel) executor
+# fused + sharded executors: thin shims over the executor registry
 # ---------------------------------------------------------------------------
-# The fused path only serves *Gram-block* reducers — reducer functions
-# tagged with a ``fused_metric`` attribute ("dot" / "l2" / "cosine", see
-# allpairs._block_fn).  Anything else falls back to the bucketed executor;
-# the counters below are the serving-telemetry source of truth.
+# The implementations live in ``repro.mapreduce.executors`` as registry
+# objects with instance-scoped ``stats()``/``reset()``.  ``FUSED_STATS``
+# below is the *default* fused executor's counter dict (shared object, kept
+# for backward compatibility): it only sees dispatches that go through the
+# default registry instance — concurrent callers holding their own
+# ``FusedExecutor`` (e.g. ``serve.PairwiseService``) do not pollute it.
 FUSED_STATS = {"calls": 0, "kernel": 0, "streamed": 0, "fallbacks": 0}
 
 
 def fused_stats() -> dict:
-    """Snapshot of the fused-executor dispatch counters."""
+    """Snapshot of the default fused executor's dispatch counters."""
     return dict(FUSED_STATS)
 
 
@@ -395,138 +468,28 @@ def reset_fused_stats() -> None:
         FUSED_STATS[k] = 0
 
 
-def _finish_fused_blocks(g, mask, metric: str):
-    """Metric post-processing of a masked per-reducer Gram stack.
-
-    Mirrors ``allpairs.block_similarity`` exactly: norms are the Gram
-    diagonal (masked rows were zeroed at gather time, so their norms are 0),
-    invalid pairs -> 0.
-    """
-    if metric != "dot":
-        n2 = jnp.diagonal(g, axis1=1, axis2=2)            # (Rb, Lb)
-        if metric == "l2":
-            g = n2[:, :, None] + n2[:, None, :] - 2.0 * g
-        elif metric == "cosine":
-            nrm = jnp.sqrt(n2 + 1e-9)
-            g = g / (nrm[:, :, None] * nrm[:, None, :])
-        else:
-            raise ValueError(metric)
-    valid = mask[:, :, None] & mask[:, None, :]
-    return jnp.where(valid, g, 0.0)
-
-
-def _make_fused_jitted(metric, combine, mesh, shard_axes, use_kernel,
-                       interpret, bl, postprocess):
-    from repro.kernels.pairwise.fused_gather_gram import (
-        fused_gather_gram,
-        fused_gather_gram_streamed,
-    )
-
-    def run(x, buckets, pp_arg, R, L):
-        per_bucket = []
-        for idx, msk, rows in buckets:
-            if use_kernel:
-                g = fused_gather_gram(x, idx, msk, bl=bl,
-                                      interpret=interpret)
-            else:
-                g = fused_gather_gram_streamed(x, idx, msk, bl=bl)
-            mb = msk.astype(bool)
-            per_bucket.append(((idx, mb, rows),
-                               _finish_fused_blocks(g, mb, metric)))
-        if postprocess is not None:
-            return postprocess(per_bucket, pp_arg)
-        if combine == "buckets":
-            return [g for _, g in per_bucket]
-        # dense combine: scatter bucket blocks (padded to the dense width)
-        # into original reducer order; padding rows land in the extra row R
-        acc = jnp.zeros((R + 1, L, L), jnp.float32)
-        for (idx, msk, rows), g in per_bucket:
-            Lb = g.shape[1]
-            gp = jnp.pad(g, ((0, 0), (0, L - Lb), (0, L - Lb)))
-            acc = acc.at[rows].set(gp)
-        return acc[:R]
-
-    if mesh is None:
-        return jax.jit(run, static_argnums=(3, 4))
-    red_sharding, rep = _shardings(mesh, shard_axes)
-    return jax.jit(run, in_shardings=(rep, red_sharding, rep),
-                   static_argnums=(3, 4))
-
-
-def run_reducers_fused(
-    inputs: jax.Array,                     # (m, d) one row per input
-    plan: ReducerPlan,
-    reducer_fn: Callable[[jax.Array, jax.Array], jax.Array],
-    *,
-    mesh: Optional[jax.sharding.Mesh] = None,
-    shard_axes: Optional[tuple[str, ...]] = None,
-    combine: str = "dense",
-    postprocess: Optional[Callable] = None,
-    postprocess_arg=None,
-    use_kernel: Optional[bool] = None,
-    interpret: bool = False,
-    bl: int = 128,
-):
+def run_reducers_fused(inputs, plan, reducer_fn, **kwargs):
     """Fused shuffle execution: the gathered block stays out of HBM.
 
-    Per capacity bucket, the plan's ``idx``/``mask`` rows drive the fused
-    gather+Gram Pallas kernel (``use_kernel=True``; scalar-prefetched rows,
-    table rows DMA'd HBM->VMEM, fp32 MXU accumulation — gathered rows live
-    only in VMEM scratch) or its jnp twin with the same tile dataflow
-    (``use_kernel=False``, the non-TPU default) — the twin still gathers
-    ``(Rb, bl, d)`` tiles as XLA intermediates, but a multi-tile bucket
-    never materializes its full ``(Rb, Lb, d)`` block and no bucket ever
-    materializes the dense ``(R, L, d)`` one.  *All* buckets execute
-    inside ONE jitted program, so a request pays a single dispatch instead
-    of one per bucket.
-
-    Only Gram-block reducers are fusable: ``reducer_fn`` must carry a
-    ``fused_metric`` attribute (see ``allpairs._block_fn``).  Any other
-    reducer — and bucketless plans — falls back to
-    :func:`run_reducers_bucketed` with identical outputs (``FUSED_STATS``
-    counts the fallbacks for serving telemetry).
-
-    ``combine`` follows the bucketed executor ('dense' / 'buckets');
-    ``postprocess(per_bucket, postprocess_arg)`` — a *stable* function
-    object, traced into the same program — lets applications fuse their
-    assembly step too (allpairs passes its inverse-shuffle gather map).
-    ``use_kernel=None`` auto-selects: Pallas on TPU, streamed jnp elsewhere.
+    Shim over ``get_executor("fused").run`` — see
+    :class:`repro.mapreduce.executors.FusedExecutor` for the full contract
+    (per-bucket fused gather+Gram kernel / jnp tile-twin, one jitted program
+    for all buckets, bucketed fallback for non-Gram reducers).
     """
-    assert combine in ("dense", "buckets"), combine
-    FUSED_STATS["calls"] += 1
-    metric = getattr(reducer_fn, "fused_metric", None)
-    if metric is None or not plan.buckets:
-        FUSED_STATS["fallbacks"] += 1
-        out = run_reducers_bucketed(
-            inputs, plan, reducer_fn, mesh=mesh, shard_axes=shard_axes,
-            combine="buckets" if postprocess is not None else combine)
-        if postprocess is not None:
-            # honor the postprocess contract on the fallback path (eager)
-            per_bucket = [((jnp.asarray(b.idx), jnp.asarray(b.mask),
-                            jnp.asarray(_scatter_rows(b, plan.R))), blocks)
-                          for b, blocks in out]
-            return postprocess(per_bucket, postprocess_arg)
-        return out
-
-    if use_kernel is None:
-        use_kernel = jax.default_backend() == "tpu"
-    FUSED_STATS["kernel" if use_kernel else "streamed"] += 1
-    shard_axes = tuple(shard_axes) if shard_axes is not None else None
-    fn = _cache_get(
-        ("fused", metric, combine, postprocess, mesh, shard_axes,
-         bool(use_kernel), bool(interpret), bl),
-        lambda: _make_fused_jitted(metric, combine, mesh, shard_axes,
-                                   use_kernel, interpret, bl, postprocess))
-    buckets = tuple(
-        (jnp.asarray(b.idx), jnp.asarray(b.mask),
-         jnp.asarray(_scatter_rows(b, plan.R)))
-        for b in plan.buckets)
-    return fn(inputs, buckets, postprocess_arg, plan.R, plan.L)
+    from .executors import get_executor
+    return get_executor("fused").run(inputs, plan, reducer_fn, **kwargs)
 
 
-def _scatter_rows(bucket: ReducerBucket, R: int) -> np.ndarray:
-    """Bucket rows for drop-style scatter: padding rows (-1) -> row R."""
-    return np.where(bucket.rows >= 0, bucket.rows, R).astype(np.int32)
+def run_reducers_sharded(inputs, plan, reducer_fn, **kwargs):
+    """Shard-balanced multi-device execution (DESIGN.md "sharded execution").
+
+    Shim over ``get_executor("sharded").run`` — see
+    :class:`repro.mapreduce.executors.ShardedExecutor`: the plan is
+    LPT-partitioned into per-shard sub-plans and the fused/bucketed pipeline
+    runs per shard under ``shard_map`` over the mesh's reducer axis.
+    """
+    from .executors import get_executor
+    return get_executor("sharded").run(inputs, plan, reducer_fn, **kwargs)
 
 
 def lower_reducers(
@@ -595,18 +558,10 @@ def lower_reducers_fused(
 ):
     """Lower the fused executor's single all-bucket program (no execution).
 
-    Defaults to the streamed (jnp) lowering so the dry-run works on any
-    backend; on this path the program is directly comparable with
-    ``lower_reducers_bucketed`` — same math, one program, no materialized
-    gather for multi-tile widths.  Returns one ``Lowered``.
-    """
-    shard_axes = tuple(shard_axes) if shard_axes is not None else None
-    fn = _make_fused_jitted(metric, combine, mesh, shard_axes, use_kernel,
-                            False, bl, None)
-    x = jax.ShapeDtypeStruct(input_shape, dtype)
-    buckets = tuple(
-        (jax.ShapeDtypeStruct(b.idx.shape, jnp.int32),
-         jax.ShapeDtypeStruct(b.mask.shape, jnp.bool_),
-         jax.ShapeDtypeStruct((b.R,), jnp.int32))
-        for b in plan.buckets)
-    return fn.lower(x, buckets, None, plan.R, plan.L)
+    Shim over ``get_executor("fused").lower``; defaults to the streamed
+    (jnp) lowering so the dry-run works on any backend.  Returns one
+    ``Lowered``."""
+    from .executors import get_executor
+    return get_executor("fused").lower(
+        input_shape, plan, metric=metric, mesh=mesh, dtype=dtype,
+        shard_axes=shard_axes, combine=combine, use_kernel=use_kernel, bl=bl)

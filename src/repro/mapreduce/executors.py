@@ -1,0 +1,683 @@
+"""Executor protocol + registry: one pluggable execution subsystem.
+
+The planner decides *where* inputs go; an :class:`Executor` decides *how*
+the resulting :class:`~repro.mapreduce.engine.ReducerPlan` runs on the
+hardware.  Every executor is a class exposing
+
+  ``run(inputs, plan, reducer_fn, ...)``   — execute the plan;
+  ``run_pairs(x, plan, reducer_fn, m, ...)`` — execute + assemble the
+        (m, m) pair matrix (the all-pairs / some-pairs applications);
+  ``lower(input_shape, plan, ...)``        — AOT-lower for dry-run /
+        roofline analysis;
+  ``stats()`` / ``reset()``                — instance-scoped dispatch
+        telemetry (no module globals to pollute across callers);
+
+registered by name ("dense", "bucketed", "fused", "sharded") so
+applications dispatch through ``get_executor(name)`` instead of per-module
+``if executor == ...`` ladders.  ``make_executor(name)`` returns a *fresh*
+instance with its own counters — what ``serve.PairwiseService`` holds so
+concurrent services never share telemetry.
+
+The registry executors:
+
+``dense``     — one gather padded to the global max slot count
+                (differential-test oracle).
+``bucketed``  — skew-aware: one vmapped gather+reduce per capacity bucket
+                (DESIGN.md "bucketed shuffle execution").
+``fused``     — gather+Gram megakernel: the shuffle streams straight into
+                the MXU, all buckets in one program (DESIGN.md "fused
+                shuffle execution"); non-Gram reducers fall back to
+                bucketed.
+``sharded``   — shard-balanced multi-device execution (DESIGN.md "sharded
+                execution"): ``repro.core.planner.partition_plan`` LPT-
+                balances reducers over the mesh's reducer axis, each shard
+                runs the fused/bucketed tile pipeline under ``shard_map``,
+                and one cross-shard gather assembles the (m, m) matrix.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.compat import make_mesh, shard_map
+from repro.core.planner import PlanPartition, partition_plan
+
+from . import engine as _engine
+from .engine import (
+    ReducerBucket,
+    ReducerPlan,
+    _cache_get,
+    _shardings,
+    run_reducers,
+    run_reducers_bucketed,
+)
+
+__all__ = [
+    "Executor",
+    "DenseExecutor",
+    "BucketedExecutor",
+    "FusedExecutor",
+    "ShardedExecutor",
+    "register_executor",
+    "get_executor",
+    "make_executor",
+    "list_executors",
+]
+
+
+# ---------------------------------------------------------------------------
+# protocol + registry
+# ---------------------------------------------------------------------------
+class Executor:
+    """Base executor: run / run_pairs / lower / stats / reset.
+
+    Subclasses set ``name`` and implement the four methods; ``_stats`` is a
+    plain dict owned by the instance (pass one in to share counters — the
+    default registry instances do this to keep the legacy module-level
+    counters live)."""
+
+    name: str = "?"
+
+    def __init__(self, stats: Optional[dict] = None):
+        self._stats = stats if stats is not None else self._fresh_stats()
+
+    def _fresh_stats(self) -> dict:
+        return {"calls": 0}
+
+    # -- protocol ----------------------------------------------------------
+    def run(self, inputs, plan: ReducerPlan, reducer_fn: Callable, *,
+            mesh=None, shard_axes=None, **kwargs):
+        raise NotImplementedError
+
+    def run_pairs(self, x, plan: ReducerPlan, reducer_fn: Callable, m: int,
+                  *, mesh=None, use_kernel: bool = False,
+                  interpret: bool = False):
+        """Execute the plan and assemble the (m, m) pair matrix."""
+        raise NotImplementedError
+
+    def lower(self, input_shape, plan: ReducerPlan, *, reducer_fn=None,
+              metric=None, mesh=None, dtype=jnp.float32, shard_axes=None,
+              **kwargs):
+        raise NotImplementedError
+
+    def stats(self) -> dict:
+        """Snapshot of this instance's dispatch counters."""
+        return dict(self._stats)
+
+    def reset(self) -> None:
+        """Zero this instance's counters (in place: shared dicts stay
+        shared)."""
+        for k in self._stats:
+            self._stats[k] = 0 if not isinstance(self._stats[k], float) \
+                else 0.0
+
+    def _count(self, key: str, by: int = 1) -> None:
+        self._stats[key] = self._stats.get(key, 0) + by
+
+
+_REGISTRY: dict[str, Executor] = {}
+_CLASSES: dict[str, type] = {}
+
+
+def register_executor(executor: Executor) -> Executor:
+    """Register ``executor`` as the default instance for its ``name``
+    (latest registration wins — extension point for custom executors)."""
+    _REGISTRY[executor.name] = executor
+    _CLASSES[executor.name] = type(executor)
+    return executor
+
+
+def get_executor(name) -> Executor:
+    """Default registry instance by name; Executor instances pass through
+    (so application entry points accept either).  Unknown names raise
+    ``ValueError`` — the registry is the single dispatch point."""
+    if isinstance(name, Executor):
+        return name
+    ex = _REGISTRY.get(name)
+    if ex is None:
+        raise ValueError(
+            f"unknown executor {name!r} (registered: {list_executors()})")
+    return ex
+
+
+def make_executor(name: str, **kwargs) -> Executor:
+    """Fresh instance (own stats) of the executor registered under
+    ``name``."""
+    get_executor(name)                       # raise on unknown names
+    return _CLASSES[name](**kwargs)
+
+
+def list_executors() -> list[str]:
+    return sorted(_REGISTRY)
+
+
+# ---------------------------------------------------------------------------
+# dense + bucketed: wrappers over the engine substrate
+# ---------------------------------------------------------------------------
+class DenseExecutor(Executor):
+    """One gather padded to the global max slot count (the oracle path)."""
+
+    name = "dense"
+
+    def run(self, inputs, plan, reducer_fn, *, mesh=None, shard_axes=None,
+            **kwargs):
+        self._count("calls")
+        return run_reducers(inputs, plan, reducer_fn, mesh=mesh,
+                            shard_axes=shard_axes, **kwargs)
+
+    def run_pairs(self, x, plan, reducer_fn, m, *, mesh=None,
+                  use_kernel=False, interpret=False):
+        from .allpairs import assemble_pair_matrix
+        self._count("calls")
+        blocks = run_reducers(x, plan, reducer_fn, mesh=mesh)  # (R, L, L)
+        return assemble_pair_matrix(blocks, plan, m)
+
+    def lower(self, input_shape, plan, *, reducer_fn=None, metric=None,
+              mesh=None, dtype=jnp.float32, shard_axes=None, **kwargs):
+        from .engine import lower_reducers
+        return lower_reducers(input_shape, plan, reducer_fn, mesh,
+                              dtype=dtype, shard_axes=shard_axes)
+
+
+class BucketedExecutor(Executor):
+    """Skew-aware: one vmapped gather+reduce per capacity bucket."""
+
+    name = "bucketed"
+
+    def run(self, inputs, plan, reducer_fn, *, mesh=None, shard_axes=None,
+            combine: str = "dense", **kwargs):
+        self._count("calls")
+        return run_reducers_bucketed(inputs, plan, reducer_fn, mesh=mesh,
+                                     shard_axes=shard_axes, combine=combine,
+                                     **kwargs)
+
+    def run_pairs(self, x, plan, reducer_fn, m, *, mesh=None,
+                  use_kernel=False, interpret=False):
+        from .allpairs import assemble_pair_matrix_bucketed
+        self._count("calls")
+        per_bucket = run_reducers_bucketed(x, plan, reducer_fn, mesh=mesh,
+                                           combine="buckets")
+        return assemble_pair_matrix_bucketed(per_bucket, m)
+
+    def lower(self, input_shape, plan, *, reducer_fn=None, metric=None,
+              mesh=None, dtype=jnp.float32, shard_axes=None, **kwargs):
+        """Protocol deviation (documented): the bucketed path is one XLA
+        program PER capacity bucket, so this returns
+        ``[(bucket, Lowered), ...]`` — not a single ``Lowered`` like the
+        other executors.  Roofline consumers sum the per-bucket terms
+        (``dryrun_engine.analyze_bucketed`` via ``combine_hlo_stats``)."""
+        from .engine import lower_reducers_bucketed
+        return lower_reducers_bucketed(input_shape, plan, reducer_fn, mesh,
+                                       dtype=dtype, shard_axes=shard_axes)
+
+
+# ---------------------------------------------------------------------------
+# fused (gather+Gram megakernel) executor
+# ---------------------------------------------------------------------------
+def _finish_fused_blocks(g, mask, metric: str):
+    """Metric post-processing of a masked per-reducer Gram stack.
+
+    Mirrors ``allpairs.block_similarity`` exactly: norms are the Gram
+    diagonal (masked rows were zeroed at gather time, so their norms are 0),
+    invalid pairs -> 0.
+    """
+    if metric != "dot":
+        n2 = jnp.diagonal(g, axis1=1, axis2=2)            # (Rb, Lb)
+        if metric == "l2":
+            g = n2[:, :, None] + n2[:, None, :] - 2.0 * g
+        elif metric == "cosine":
+            nrm = jnp.sqrt(n2 + 1e-9)
+            g = g / (nrm[:, :, None] * nrm[:, None, :])
+        else:
+            raise ValueError(metric)
+    valid = mask[:, :, None] & mask[:, None, :]
+    return jnp.where(valid, g, 0.0)
+
+
+def _scatter_rows(bucket: ReducerBucket, R: int) -> np.ndarray:
+    """Bucket rows for drop-style scatter: padding rows (-1) -> row R."""
+    return np.where(bucket.rows >= 0, bucket.rows, R).astype(np.int32)
+
+
+def _make_fused_jitted(metric, combine, mesh, shard_axes, use_kernel,
+                       interpret, bl, postprocess):
+    from repro.kernels.pairwise.fused_gather_gram import (
+        fused_gather_gram,
+        fused_gather_gram_streamed,
+    )
+
+    def run(x, buckets, pp_arg, R, L):
+        per_bucket = []
+        for idx, msk, rows in buckets:
+            if use_kernel:
+                g = fused_gather_gram(x, idx, msk, bl=bl,
+                                      interpret=interpret)
+            else:
+                g = fused_gather_gram_streamed(x, idx, msk, bl=bl)
+            mb = msk.astype(bool)
+            per_bucket.append(((idx, mb, rows),
+                               _finish_fused_blocks(g, mb, metric)))
+        if postprocess is not None:
+            return postprocess(per_bucket, pp_arg)
+        if combine == "buckets":
+            return [g for _, g in per_bucket]
+        # dense combine: scatter bucket blocks (padded to the dense width)
+        # into original reducer order; padding rows land in the extra row R
+        acc = jnp.zeros((R + 1, L, L), jnp.float32)
+        for (idx, msk, rows), g in per_bucket:
+            Lb = g.shape[1]
+            gp = jnp.pad(g, ((0, 0), (0, L - Lb), (0, L - Lb)))
+            acc = acc.at[rows].set(gp)
+        return acc[:R]
+
+    if mesh is None:
+        return jax.jit(run, static_argnums=(3, 4))
+    red_sharding, rep = _shardings(mesh, shard_axes)
+    return jax.jit(run, in_shardings=(rep, red_sharding, rep),
+                   static_argnums=(3, 4))
+
+
+class FusedExecutor(Executor):
+    """Fused shuffle execution: the gathered block stays out of HBM.
+
+    Per capacity bucket, the plan's ``idx``/``mask`` rows drive the fused
+    gather+Gram Pallas kernel (``use_kernel=True``; scalar-prefetched rows,
+    table rows DMA'd HBM->VMEM, fp32 MXU accumulation — gathered rows live
+    only in VMEM scratch) or its jnp twin with the same tile dataflow
+    (``use_kernel=False``, the non-TPU default) — the twin still gathers
+    ``(Rb, bl, d)`` tiles as XLA intermediates, but a multi-tile bucket
+    never materializes its full ``(Rb, Lb, d)`` block and no bucket ever
+    materializes the dense ``(R, L, d)`` one.  *All* buckets execute
+    inside ONE jitted program, so a request pays a single dispatch instead
+    of one per bucket.
+
+    Only Gram-block reducers are fusable: ``reducer_fn`` must carry a
+    ``fused_metric`` attribute (see ``allpairs._block_fn``).  Any other
+    reducer — and bucketless plans — falls back to the bucketed executor
+    with identical outputs; fallbacks are counted in this instance's
+    ``stats()``.
+    """
+
+    name = "fused"
+
+    def _fresh_stats(self) -> dict:
+        return {"calls": 0, "kernel": 0, "streamed": 0, "fallbacks": 0}
+
+    def run(self, inputs, plan, reducer_fn, *, mesh=None, shard_axes=None,
+            combine: str = "dense", postprocess: Optional[Callable] = None,
+            postprocess_arg=None, use_kernel: Optional[bool] = None,
+            interpret: bool = False, bl: int = 128):
+        """``combine`` follows the bucketed executor ('dense' / 'buckets');
+        ``postprocess(per_bucket, postprocess_arg)`` — a *stable* function
+        object, traced into the same program — lets applications fuse their
+        assembly step too (allpairs passes its inverse-shuffle gather map).
+        ``use_kernel=None`` auto-selects: Pallas on TPU, streamed jnp
+        elsewhere."""
+        assert combine in ("dense", "buckets"), combine
+        self._count("calls")
+        metric = getattr(reducer_fn, "fused_metric", None)
+        if metric is None or not plan.buckets:
+            self._count("fallbacks")
+            out = run_reducers_bucketed(
+                inputs, plan, reducer_fn, mesh=mesh, shard_axes=shard_axes,
+                combine="buckets" if postprocess is not None else combine)
+            if postprocess is not None:
+                # honor the postprocess contract on the fallback path (eager)
+                per_bucket = [((jnp.asarray(b.idx), jnp.asarray(b.mask),
+                                jnp.asarray(_scatter_rows(b, plan.R))),
+                               blocks)
+                              for b, blocks in out]
+                return postprocess(per_bucket, postprocess_arg)
+            return out
+
+        if use_kernel is None:
+            use_kernel = jax.default_backend() == "tpu"
+        self._count("kernel" if use_kernel else "streamed")
+        shard_axes = tuple(shard_axes) if shard_axes is not None else None
+        fn = _cache_get(
+            ("fused", metric, combine, postprocess, mesh, shard_axes,
+             bool(use_kernel), bool(interpret), bl),
+            lambda: _make_fused_jitted(metric, combine, mesh, shard_axes,
+                                       use_kernel, interpret, bl,
+                                       postprocess))
+        buckets = tuple(
+            (jnp.asarray(b.idx), jnp.asarray(b.mask),
+             jnp.asarray(_scatter_rows(b, plan.R)))
+            for b in plan.buckets)
+        return fn(inputs, buckets, postprocess_arg, plan.R, plan.L)
+
+    def run_pairs(self, x, plan, reducer_fn, m, *, mesh=None,
+                  use_kernel=False, interpret=False):
+        from .allpairs import _assemble_from_srcmap, _pair_source_map
+        srcmap = jnp.asarray(_pair_source_map(plan, m))
+        return self.run(
+            x, plan, reducer_fn, mesh=mesh,
+            postprocess=_assemble_from_srcmap, postprocess_arg=srcmap,
+            use_kernel=(True if use_kernel else None), interpret=interpret)
+
+    def lower(self, input_shape, plan, *, reducer_fn=None, metric=None,
+              mesh=None, dtype=jnp.float32, shard_axes=None,
+              combine: str = "buckets", use_kernel: bool = False,
+              bl: int = 128, **kwargs):
+        """Lower the single all-bucket program (no execution).  Defaults to
+        the streamed (jnp) lowering so the dry-run works on any backend; on
+        this path the program is directly comparable with the bucketed
+        lowering — same math, one program, no materialized gather for
+        multi-tile widths.  Returns one ``Lowered``."""
+        if metric is None:
+            metric = getattr(reducer_fn, "fused_metric", None)
+        assert metric is not None, "fused lowering needs a Gram metric"
+        shard_axes = tuple(shard_axes) if shard_axes is not None else None
+        fn = _make_fused_jitted(metric, combine, mesh, shard_axes,
+                                use_kernel, False, bl, None)
+        x = jax.ShapeDtypeStruct(input_shape, dtype)
+        buckets = tuple(
+            (jax.ShapeDtypeStruct(b.idx.shape, jnp.int32),
+             jax.ShapeDtypeStruct(b.mask.shape, jnp.bool_),
+             jax.ShapeDtypeStruct((b.R,), jnp.int32))
+            for b in plan.buckets)
+        return fn.lower(x, buckets, None, plan.R, plan.L)
+
+
+# ---------------------------------------------------------------------------
+# sharded (LPT-balanced multi-device) executor
+# ---------------------------------------------------------------------------
+def _shard_mesh(mesh, shard_axes):
+    """(mesh, axes, num_shards): the mesh + axis names the sharded executor
+    partitions over.  ``mesh=None`` builds a 1-D mesh over all local
+    devices (the CPU test path under
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N``)."""
+    if mesh is None:
+        mesh = make_mesh((len(jax.devices()),), ("shard",))
+        axes = ("shard",)
+    else:
+        axes = tuple(shard_axes) if shard_axes else tuple(mesh.axis_names)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    num_shards = int(np.prod([sizes[a] for a in axes]))
+    return mesh, axes, num_shards
+
+
+def _stacked_groups(plan: ReducerPlan, part: PlanPartition):
+    """Stack the partition into uniform per-width device arrays.
+
+    For every execution width ``w`` appearing in the partition, build
+    ``idx (S, Rw, w)`` / ``mask (S, Rw, w)`` / ``rows (S, Rw)`` where
+    ``Rw = max_s |shard s's width-w reducers|`` — each shard's rows padded
+    (masked, rows -> plan.R) to the common count so ``shard_map`` can split
+    the leading axis across the mesh.  LPT balances total work, so the
+    cross-shard padding this stacking adds is small exactly when the
+    balance factor is small.  Returns ``[(idx, mask, rows), ...]`` with
+    widths ascending (numpy; the executor converts once per plan).
+    """
+    S = part.num_shards
+    R0 = plan.num_reducers
+    widths = part.widths
+    # per-global-row source arrays at the row's execution width
+    if plan.buckets:
+        src_idx = {}
+        src_mask = {}
+        for b in plan.buckets:
+            rows = np.asarray(b.rows)
+            for i, g in enumerate(rows):
+                if 0 <= g < R0:
+                    src_idx[int(g)] = np.asarray(b.idx)[i]
+                    src_mask[int(g)] = np.asarray(b.mask)[i]
+    else:
+        src_idx = {r: np.asarray(plan.idx)[r] for r in range(R0)}
+        src_mask = {r: np.asarray(plan.mask)[r] for r in range(R0)}
+
+    groups = []
+    for w in sorted(set(int(x) for x in widths)) if R0 else []:
+        per_shard = [rows[widths[rows] == w] for rows in part.shard_rows]
+        Rw = max((len(p) for p in per_shard), default=0)
+        if Rw == 0:
+            continue
+        idx = np.zeros((S, Rw, w), np.int32)
+        mask = np.zeros((S, Rw, w), bool)
+        rows_out = np.full((S, Rw), plan.R, np.int32)   # padding -> row R
+        for s, p in enumerate(per_shard):
+            for k, g in enumerate(p):
+                idx[s, k, :] = src_idx[int(g)][:w]
+                mask[s, k, :] = src_mask[int(g)][:w]
+                rows_out[s, k] = int(g)
+        groups.append((idx, mask, rows_out))
+    return groups
+
+
+def _sharded_srcmap(groups, m: int) -> np.ndarray:
+    """Inverse-shuffle map for the cross-shard assembly gather: (m, m)
+    int32 positions into ``[0.0, group_0.ravel(), group_1.ravel(), ...]``
+    of the stacked per-width Gram outputs (each ``(S, Rw, w, w)``).
+    Uncovered cells and the diagonal point at slot 0 (-> 0.0)."""
+    srcmap = np.zeros((m, m), np.int32)
+    base = 1
+    for idx, mask, _rows in groups:
+        S, Rw, w = idx.shape
+        flat_idx = idx.reshape(S * Rw, w)
+        flat_mask = mask.reshape(S * Rw, w)
+        rows = np.broadcast_to(flat_idx[:, :, None], (S * Rw, w, w))
+        cols = np.broadcast_to(flat_idx[:, None, :], (S * Rw, w, w))
+        valid = flat_mask[:, :, None] & flat_mask[:, None, :]
+        pos = np.arange(base, base + S * Rw * w * w,
+                        dtype=np.int64).reshape(S * Rw, w, w)
+        srcmap[rows[valid], cols[valid]] = pos[valid]
+        base += S * Rw * w * w
+    np.fill_diagonal(srcmap, 0)
+    return srcmap
+
+
+def _make_sharded_jitted(metric, combine, mesh, axes, use_kernel,
+                         interpret, bl):
+    from repro.kernels.pairwise.fused_gather_gram import (
+        fused_gather_gram,
+        fused_gather_gram_streamed,
+    )
+
+    P = jax.sharding.PartitionSpec
+
+    def per_shard_fn(x, idx, msk):
+        # local shapes: x (m, d) replicated, idx/msk (1, Rw, w)
+        if use_kernel:
+            g = fused_gather_gram(x, idx[0], msk[0], bl=bl,
+                                  interpret=interpret)
+        else:
+            g = fused_gather_gram_streamed(x, idx[0], msk[0], bl=bl)
+        mb = msk[0].astype(bool)
+        return _finish_fused_blocks(g, mb, metric)[None]   # (1, Rw, w, w)
+
+    def run(x, groups, srcmap, R, L):
+        outs = []
+        for idx, msk, rows in groups:
+            g = shard_map(per_shard_fn, mesh=mesh,
+                          in_specs=(P(), P(axes), P(axes)),
+                          out_specs=P(axes))(x, idx, msk)
+            outs.append((rows, g))
+        if combine == "pairs":
+            # ONE cross-shard assembly gather: concatenate the sharded
+            # Gram stacks and gather the replicated (m, m) matrix through
+            # the host-precomputed source map (XLA inserts the all-gather
+            # here — the only cross-shard communication in the program)
+            vals = [jnp.zeros((1,), jnp.float32)]
+            vals += [g.reshape(-1) for _, g in outs]
+            return jnp.take(jnp.concatenate(vals), srcmap, axis=0)
+        # dense combine: scatter shard blocks (padded to the dense width)
+        # back into original reducer order; padding rows drop into row R
+        acc = jnp.zeros((R + 1, L, L), jnp.float32)
+        for rows, g in outs:
+            w = g.shape[-1]
+            gp = jnp.pad(g, ((0, 0), (0, 0), (0, L - w), (0, L - w)))
+            acc = acc.at[rows.reshape(-1)].set(gp.reshape(-1, L, L))
+        return acc[:R]
+
+    return jax.jit(run, static_argnums=(3, 4))
+
+
+class ShardedExecutor(Executor):
+    """Shard-balanced multi-device execution of a reducer plan.
+
+    ``repro.core.planner.partition_plan`` LPT-balances the plan's reducers
+    (weighted by per-reducer gather+FLOP work at their capacity-bucket
+    width) into one compact sub-plan per shard of the mesh's reducer axis.
+    The sub-plans are stacked into uniform per-width arrays and executed
+    under ``shard_map``: every device runs the fused gather+Gram tile
+    pipeline (streamed jnp twin off-TPU) over exactly its LPT-assigned
+    reducers — instead of XLA's blind even row-split of a skew-ordered
+    plan — and the only cross-shard communication is the single assembly
+    gather of the (m, m) pair matrix at the end (``run_pairs``) or the
+    dense scatter (``run``).
+
+    ``mesh=None`` builds a 1-D mesh over all local devices — on CPU, run
+    tests/benches under ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
+    to get an 8-shard mesh.  Like the fused executor, only Gram-block
+    reducers (``fused_metric`` tag) take the sharded path; anything else
+    falls back to the bucketed executor (counted in ``stats()``).
+    """
+
+    name = "sharded"
+
+    def _fresh_stats(self) -> dict:
+        return {"calls": 0, "sharded": 0, "fallbacks": 0, "num_shards": 0,
+                "balance_factor": 0.0}
+
+    # -- partition plumbing (host-side static artifacts, cached on plan) --
+    def partition(self, plan: ReducerPlan,
+                  num_shards: int) -> PlanPartition:
+        """The plan's LPT partition for ``num_shards`` (cached on the plan
+        like the index matrix: a static artifact reused across waves)."""
+        cache = plan.__dict__.get("_shard_partition_cache")
+        if cache is None:
+            cache = {}
+            object.__setattr__(plan, "_shard_partition_cache", cache)
+        part = cache.get(num_shards)
+        if part is None:
+            part = partition_plan(plan, num_shards)
+            cache[num_shards] = part
+        return part
+
+    def _groups_for(self, plan, part):
+        cache = plan.__dict__.get("_shard_groups_cache")
+        if cache is None:
+            cache = {}
+            object.__setattr__(plan, "_shard_groups_cache", cache)
+        groups = cache.get(part.num_shards)
+        if groups is None:
+            groups = _stacked_groups(plan, part)
+            cache[part.num_shards] = groups
+        return groups
+
+    def _srcmap_for(self, plan, groups, num_shards: int, m: int):
+        cache = plan.__dict__.get("_shard_srcmap_cache")
+        if cache is None:
+            cache = {}
+            object.__setattr__(plan, "_shard_srcmap_cache", cache)
+        srcmap = cache.get((num_shards, m))
+        if srcmap is None:
+            srcmap = _sharded_srcmap(groups, m)
+            cache[(num_shards, m)] = srcmap
+        return srcmap
+
+    def _note(self, part: PlanPartition) -> None:
+        self._stats["num_shards"] = part.num_shards
+        self._stats["balance_factor"] = float(part.balance_factor)
+
+    def _dispatch(self, x, plan, metric, combine, srcmap_m, mesh,
+                  shard_axes, use_kernel, interpret, bl):
+        mesh, axes, S = _shard_mesh(mesh, shard_axes)
+        part = self.partition(plan, S)
+        groups = self._groups_for(plan, part)
+        self._count("sharded")
+        self._note(part)
+        if combine == "pairs":
+            srcmap = jnp.asarray(
+                self._srcmap_for(plan, groups, S, srcmap_m))
+        else:
+            srcmap = jnp.zeros((1,), jnp.int32)      # unused placeholder
+        if use_kernel is None:
+            use_kernel = jax.default_backend() == "tpu"
+        fn = _cache_get(
+            ("sharded", metric, combine, mesh, axes, bool(use_kernel),
+             bool(interpret), bl),
+            lambda: _make_sharded_jitted(metric, combine, mesh, axes,
+                                         use_kernel, interpret, bl))
+        jgroups = tuple((jnp.asarray(i), jnp.asarray(k), jnp.asarray(r))
+                        for i, k, r in groups)
+        return fn(x, jgroups, srcmap, plan.R, plan.L)
+
+    # -- protocol ----------------------------------------------------------
+    def run(self, inputs, plan, reducer_fn, *, mesh=None, shard_axes=None,
+            combine: str = "dense", use_kernel: Optional[bool] = None,
+            interpret: bool = False, bl: int = 128, **kwargs):
+        """Dense-combine semantics match ``run_reducers`` for Gram-block
+        reducers; non-Gram reducers fall back to the bucketed executor
+        (identical outputs — sharding is a pure execution-plan change)."""
+        assert combine == "dense", combine
+        self._count("calls")
+        metric = getattr(reducer_fn, "fused_metric", None)
+        if metric is None or plan.num_reducers == 0:
+            self._count("fallbacks")
+            return run_reducers_bucketed(inputs, plan, reducer_fn,
+                                         mesh=mesh, combine=combine)
+        return self._dispatch(inputs, plan, metric, "dense", None, mesh,
+                              shard_axes, use_kernel, interpret, bl)
+
+    def run_pairs(self, x, plan, reducer_fn, m, *, mesh=None,
+                  use_kernel=False, interpret=False):
+        from .allpairs import assemble_pair_matrix_bucketed
+        self._count("calls")
+        metric = getattr(reducer_fn, "fused_metric", None)
+        if metric is None or plan.num_reducers == 0:
+            self._count("fallbacks")
+            per_bucket = run_reducers_bucketed(x, plan, reducer_fn,
+                                               mesh=mesh, combine="buckets")
+            return assemble_pair_matrix_bucketed(per_bucket, m)
+        return self._dispatch(x, plan, metric, "pairs", m, mesh, None,
+                              (True if use_kernel else None), interpret,
+                              128)
+
+    def lower(self, input_shape, plan, *, reducer_fn=None, metric=None,
+              mesh=None, dtype=jnp.float32, shard_axes=None,
+              combine: str = "pairs", m: Optional[int] = None,
+              use_kernel: bool = False, bl: int = 128, **kwargs):
+        """Lower the sharded program (no execution) for dry-run/roofline.
+
+        ``combine='pairs'`` (default) lowers the full pipeline including
+        the cross-shard assembly gather of the ``(m, m)`` matrix
+        (``m`` defaults to ``input_shape[0]``); ``combine='dense'`` lowers
+        the dense-combine scatter form.  Returns one ``Lowered``.
+        """
+        if metric is None:
+            metric = getattr(reducer_fn, "fused_metric", None)
+        assert metric is not None, "sharded lowering needs a Gram metric"
+        mesh, axes, S = _shard_mesh(mesh, shard_axes)
+        part = self.partition(plan, S)
+        groups = self._groups_for(plan, part)
+        if combine == "pairs":
+            mm = m if m is not None else input_shape[0]
+            srcmap = jax.ShapeDtypeStruct((mm, mm), jnp.int32)
+        else:
+            srcmap = jax.ShapeDtypeStruct((1,), jnp.int32)
+        fn = _make_sharded_jitted(metric, combine, mesh, axes,
+                                  use_kernel, False, bl)
+        x = jax.ShapeDtypeStruct(input_shape, dtype)
+        sgroups = tuple(
+            (jax.ShapeDtypeStruct(i.shape, jnp.int32),
+             jax.ShapeDtypeStruct(k.shape, jnp.bool_),
+             jax.ShapeDtypeStruct(r.shape, jnp.int32))
+            for i, k, r in groups)
+        return fn.lower(x, sgroups, srcmap, plan.R, plan.L)
+
+
+# ---------------------------------------------------------------------------
+# default registry instances
+# ---------------------------------------------------------------------------
+# The default fused executor adopts the legacy module-level counter dict
+# (shared object), so ``engine.FUSED_STATS`` / ``engine.fused_stats()``
+# stay live for existing callers; every *new* instance gets its own dict.
+register_executor(DenseExecutor())
+register_executor(BucketedExecutor())
+register_executor(FusedExecutor(stats=_engine.FUSED_STATS))
+register_executor(ShardedExecutor())

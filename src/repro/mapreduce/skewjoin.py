@@ -36,15 +36,15 @@ def skew_join(
     by scattering per-reducer cross products — each (x, y) pair is produced
     by >= 1 reducer (coverage guarantee), duplicates agree.
 
-    ``executor='fused'`` is accepted for API parity with the similarity
-    apps, but the join's cross-product-concat reducer is not a Gram block,
-    so it runs the standard path regardless — only *similarity*-shaped X2Y
-    workloads (the some-pairs route in
-    ``allpairs.some_pairs_similarity``) reach the fused engine, whose
-    ``FUSED_STATS`` counters therefore track real engine dispatches only.
+    ``executor`` is validated against the executor registry for API parity
+    with the similarity apps, but the join's cross-product-concat reducer
+    is not a Gram block, so every executor runs the standard path here —
+    only *similarity*-shaped X2Y workloads (the some-pairs route in
+    ``allpairs.some_pairs_similarity``) reach the fused/sharded engines,
+    whose dispatch counters therefore track real engine dispatches only.
     """
-    if executor not in ("dense", "fused"):
-        raise ValueError(f"unknown executor {executor!r}")
+    from .executors import get_executor
+    get_executor(executor)           # registry validation (ValueError)
     mx, my = x_vals.shape[0], y_vals.shape[0]
     if schema is None:
         wx_ = np.full(mx, 1.0) if wx is None else np.asarray(wx, float)

@@ -123,20 +123,28 @@ class PairwiseService:
     Each query brings its own input table (and optionally per-input sizes);
     the service plans a mapping schema via the registry planner — repeated
     weight profiles hit ``repro.core.PLAN_CACHE`` and skip planning — and
-    executes it on the bucketed shuffle executor, so skewed profiles don't
-    pay the dense global-max padding.  Responses carry the plan provenance
-    (winning strategy, communication cost, optimality gap) and the bucket
-    telemetry the dashboards chart; the service accumulates the same
-    numbers across requests in ``self.stats``.
+    executes it on any executor-registry entry ("dense" / "bucketed" /
+    "fused" / "sharded"); the default bucketed path keeps skewed profiles
+    from paying the dense global-max padding.  The service holds a
+    *private* executor instance (``make_executor``), so its dispatch
+    telemetry is isolated from concurrent callers.  Responses carry the
+    plan provenance (winning strategy, communication cost, optimality gap)
+    and the bucket/shard telemetry the dashboards chart; the service
+    accumulates the same numbers across requests in ``self.stats``.
     """
 
     def __init__(self, q: float, *, metric: str = "dot", mesh=None,
                  executor: str = "bucketed", max_buckets: int = 8,
                  use_kernel: bool = False, interpret: bool = False):
+        from repro.mapreduce import make_executor
         self.q = q
         self.metric = metric
         self.mesh = mesh
-        self.executor = executor
+        self.executor = executor                 # registry name (telemetry)
+        # a PRIVATE executor instance: dispatch counters are scoped to this
+        # service, so concurrent services (or other callers of the default
+        # registry objects) can't pollute each other's telemetry
+        self._executor = make_executor(executor)
         self.max_buckets = max_buckets
         self.use_kernel = use_kernel
         self.interpret = interpret
@@ -152,13 +160,20 @@ class PairwiseService:
             "wall_s": 0.0,
         }
 
+    def executor_stats(self) -> dict:
+        """This service's private executor dispatch counters."""
+        return self._executor.stats()
+
     def _snap(self):
-        """Counter snapshot taken around one request (plan cache + fused
-        executor dispatch), so ``_info`` can report per-request deltas."""
+        """Counter snapshot taken around one request (plan cache + this
+        service's executor dispatch), so ``_info`` can report per-request
+        deltas."""
         from repro.core import PLAN_CACHE
-        from repro.mapreduce import fused_stats
-        return {"plan_hits": PLAN_CACHE.hits, **{
-            f"fused_{k}": v for k, v in fused_stats().items()}}
+        ex = self._executor.stats()
+        return {"plan_hits": PLAN_CACHE.hits,
+                "fused_kernel": ex.get("kernel", 0),
+                "fused_streamed": ex.get("streamed", 0),
+                "fused_fallbacks": ex.get("fallbacks", 0)}
 
     def _info(self, plan, dt: float, snap: dict) -> dict:
         after = self._snap()
@@ -179,7 +194,7 @@ class PairwiseService:
             fused_path = ("fallback" if delta["fused_fallbacks"]
                           else "kernel" if delta["fused_kernel"]
                           else "streamed")
-        return {
+        info = {
             "algorithm": plan.algorithm,
             "comm_cost": plan.comm_cost,
             "lower_bound": plan.lower_bound,
@@ -195,6 +210,14 @@ class PairwiseService:
             "jit_cache": jit_cache_stats(),
             "wall_s": dt,
         }
+        ex_stats = self._executor.stats()
+        if "num_shards" in ex_stats:             # sharded-executor telemetry
+            info["sharded"] = {
+                "num_shards": ex_stats["num_shards"],
+                "balance_factor": ex_stats["balance_factor"],
+                "fallbacks": ex_stats["fallbacks"],
+            }
+        return info
 
     def similarity(self, x, weights=None):
         """All-pairs similarity for one query table.  Returns (sims, info)."""
@@ -203,7 +226,7 @@ class PairwiseService:
         t0 = time.perf_counter()
         sims, plan, _schema = pairwise_similarity(
             jnp.asarray(x), q=self.q, weights=weights, metric=self.metric,
-            mesh=self.mesh, executor=self.executor,
+            mesh=self.mesh, executor=self._executor,
             use_kernel=self.use_kernel, interpret=self.interpret)
         sims = jax.block_until_ready(sims)
         return sims, self._info(plan, time.perf_counter() - t0, snap)
@@ -215,7 +238,7 @@ class PairwiseService:
         t0 = time.perf_counter()
         sims, plan, _schema = some_pairs_similarity(
             jnp.asarray(x), pairs, q=self.q, weights=weights,
-            metric=self.metric, mesh=self.mesh, executor=self.executor,
+            metric=self.metric, mesh=self.mesh, executor=self._executor,
             use_kernel=self.use_kernel, interpret=self.interpret)
         sims = jax.block_until_ready(sims)
         return sims, self._info(plan, time.perf_counter() - t0, snap)

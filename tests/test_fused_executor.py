@@ -250,7 +250,8 @@ class TestJitCacheLRU:
 
     def test_stats_shape_and_hits(self):
         stats = engine_mod.jit_cache_stats()
-        for key in ("size", "max_size", "hits", "misses", "evictions"):
+        for key in ("size", "max_size", "hits", "misses", "evictions",
+                    "per_key"):
             assert key in stats
         w = np.full(5, 0.3)
         plan = build_plan(plan_a2a(w, 1.0))
@@ -260,6 +261,61 @@ class TestJitCacheLRU:
         h0 = engine_mod.jit_cache_stats()["hits"]
         run_reducers(x, plan, fn)
         assert engine_mod.jit_cache_stats()["hits"] == h0 + 1
+
+    def test_per_key_hit_counts(self, monkeypatch):
+        """Per-key counters: repeat lookups of one key accumulate under its
+        label; fresh keys start at zero."""
+        from collections import OrderedDict
+        monkeypatch.setattr(engine_mod, "_JIT_CACHE", OrderedDict())
+        monkeypatch.setattr(engine_mod, "_JIT_CACHE_HITS", {})
+        for _ in range(4):
+            engine_mod._cache_get(("stable_key",), lambda: object())
+        engine_mod._cache_get(("fresh_key",), lambda: object())
+        per_key = engine_mod.jit_cache_stats()["per_key"]
+        assert per_key["stable_key"] == 3
+        assert per_key["fresh_key"] == 0
+
+    def test_eviction_order_is_lru(self, monkeypatch):
+        """A freshly-touched entry must survive eviction; the
+        least-recently-used one goes first."""
+        from collections import OrderedDict
+        monkeypatch.setattr(engine_mod, "_JIT_CACHE", OrderedDict())
+        monkeypatch.setattr(engine_mod, "_JIT_CACHE_HITS", {})
+        monkeypatch.setattr(engine_mod, "_JIT_CACHE_MAX", 2)
+        engine_mod._cache_get("A", lambda: "a")
+        engine_mod._cache_get("B", lambda: "b")
+        engine_mod._cache_get("A", lambda: "a")       # touch A: B is LRU now
+        engine_mod._cache_get("C", lambda: "c")       # evicts B, not A
+        assert "A" in engine_mod._JIT_CACHE
+        assert "B" not in engine_mod._JIT_CACHE
+        assert "C" in engine_mod._JIT_CACHE
+        # evicted keys drop out of the per-key counters too
+        assert "B" not in engine_mod.jit_cache_stats()["per_key"]
+
+    def test_env_configurable_cap(self, monkeypatch):
+        """REPRO_JIT_CACHE_SIZE drives the LRU cap via
+        configure_jit_cache(); shrinking below the live size evicts
+        immediately in LRU order."""
+        from collections import OrderedDict
+        monkeypatch.setattr(engine_mod, "_JIT_CACHE", OrderedDict())
+        monkeypatch.setattr(engine_mod, "_JIT_CACHE_HITS", {})
+        monkeypatch.setattr(engine_mod, "_JIT_CACHE_MAX",
+                            engine_mod._JIT_CACHE_MAX)
+        monkeypatch.setenv("REPRO_JIT_CACHE_SIZE", "3")
+        assert engine_mod.configure_jit_cache() == 3
+        assert engine_mod.jit_cache_stats()["max_size"] == 3
+        for k in "ABC":
+            engine_mod._cache_get(k, lambda: k)
+        monkeypatch.setenv("REPRO_JIT_CACHE_SIZE", "1")
+        assert engine_mod.configure_jit_cache() == 1
+        assert list(engine_mod._JIT_CACHE) == ["C"]   # oldest evicted first
+        monkeypatch.delenv("REPRO_JIT_CACHE_SIZE")
+        assert engine_mod.configure_jit_cache() == 64  # default restored
+        # malformed / non-positive values fall back to the default instead
+        # of crashing the import or setting a cap-0 evict-everything cache
+        for bad in ("abc", "0", "-3", ""):
+            monkeypatch.setenv("REPRO_JIT_CACHE_SIZE", bad)
+            assert engine_mod.configure_jit_cache() == 64, bad
 
 
 # ------------------------------------------------- pairwise_gram block clamp

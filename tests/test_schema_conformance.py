@@ -160,6 +160,48 @@ class TestX2YConformance:
         assert schema.communication_cost() >= lb - TOL
 
 
+# ----------------------------------------------------------- partition_plan
+class TestPartitionConformance:
+    """Sharding a plan must not change what the schema promises: every
+    reducer still exists exactly once with its exact input set (coverage +
+    capacity), and the per-shard communication shares sum back to the
+    schema's measured cost, which stays >= the instance's lower bound."""
+
+    @pytest.mark.parametrize("kind,m,seed", PROFILES)
+    @pytest.mark.parametrize("num_shards", [3, 8])
+    def test_partition_preserves_schema_invariants(self, kind, m, seed,
+                                                   num_shards):
+        from repro.core import partition_plan
+        from repro.core.planner import reducer_work
+        from repro.mapreduce import build_plan
+
+        q = 1.0
+        w = profile(kind, m, seed, q)
+        schema = plan_a2a(w, q)
+        _check_a2a(schema, w, q)                 # the un-sharded baseline
+        plan = build_plan(schema)
+        part = partition_plan(plan, num_shards)
+
+        # coverage: every real reducer in exactly one shard, rows verbatim
+        all_rows = np.sort(np.concatenate(list(part.shard_rows)))
+        np.testing.assert_array_equal(all_rows,
+                                      np.arange(plan.num_reducers))
+        for rows, sub in zip(part.shard_rows, part.shards):
+            np.testing.assert_array_equal(sub.idx, plan.idx[rows])
+            np.testing.assert_array_equal(sub.mask, plan.mask[rows])
+
+        # comm conservation + lower bound: shares sum to the measured cost
+        assert float(part.comm_cost.sum()) == pytest.approx(plan.comm_cost)
+        lb = a2a_comm_lower_bound(w, q)
+        assert float(part.comm_cost.sum()) >= lb - TOL
+
+        # balance: within the greedy guarantee
+        work = reducer_work(plan)
+        if work.sum() > 0:
+            bound = 1.0 + num_shards * float(work.max()) / float(work.sum())
+            assert 1.0 <= part.balance_factor <= bound + TOL
+
+
 # ---------------------------------------------------------------- some-pairs
 class TestSomePairsConformance:
     @pytest.mark.parametrize("m,npairs,seed", [(10, 4, 0), (30, 40, 1),
