@@ -6,8 +6,8 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: test test-fast test-schemas lint ci bench bench-quick bench-skewed \
-	bench-fused bench-sharded
+.PHONY: test test-fast test-schemas test-stream lint ci bench bench-quick \
+	bench-skewed bench-fused bench-sharded bench-stream
 
 test:
 	$(PYTHON) -m pytest -q
@@ -23,10 +23,15 @@ test-schemas:
 		tests/test_bucketed_executor.py tests/test_fused_executor.py \
 		tests/test_sharded_executor.py
 
+# streaming maintenance: edit-sequence conformance + streamed-vs-cold
+# differential + serving edit API
+test-stream:
+	$(PYTHON) -m pytest -q tests/test_stream.py
+
 lint:
 	$(PYTHON) -m compileall -q src
 
-ci: lint test-schemas test
+ci: lint test-schemas test-stream test
 
 bench:
 	$(PYTHON) benchmarks/bench_planner.py
@@ -47,3 +52,10 @@ bench-sharded:
 	XLA_FLAGS=--xla_force_host_platform_device_count=8 \
 		JAX_PLATFORMS=$${JAX_PLATFORMS:-cpu} \
 		$(PYTHON) benchmarks/bench_engine.py --sharded
+
+# streaming edits vs full re-planning on Zipf m=512 (update latency,
+# recompute fraction, delta-vs-replan comm bytes); writes the repo-root
+# BENCH_stream.json and enforces the <25% single-edit recompute bar
+bench-stream:
+	JAX_PLATFORMS=$${JAX_PLATFORMS:-cpu} \
+		$(PYTHON) benchmarks/bench_stream.py

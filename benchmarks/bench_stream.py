@@ -1,0 +1,214 @@
+"""Benchmark: streaming mapping-schema maintenance vs full re-planning.
+
+The static planner pays a full re-plan and a full re-shuffle for *any*
+change to the input list; the streaming subsystem (``repro.stream``) pays
+only for the reducers one edit dirties.  This bench measures that claim on
+the Zipf m=512 skewed workload across edit rates:
+
+  * update latency   — wall time of one streamed edit (planner repair +
+    dirty-reducer recompute + matrix patch) vs a cold full re-plan +
+    rebuild of the same table;
+  * recompute fraction — dirty reducers over total reducers per edit
+    (acceptance bar: single-input edits < 25% on Zipf m=512);
+  * delta vs re-plan comm bytes — weighted rows the delta ships vs what a
+    full re-shuffle ships, next to the replication-rate lower bound;
+  * correctness — after every edit batch the streamed matrix must be
+    allclose to a cold full re-plan on the dense executor, and the
+    maintained schema must pass validate('a2a') conformance.
+
+Writes the machine-readable trajectory to the repo root
+(``BENCH_stream.json``); ``benchmarks/run.py`` runs it as the
+``bench_stream`` section.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+BENCH_JSON = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                          "..", "BENCH_stream.json")
+
+
+def _make_table(m: int, d: int, q: float, zipf_a: float, seed: int):
+    rng = np.random.default_rng(seed)
+    w = np.clip(rng.zipf(zipf_a, m).astype(np.float64) / 32.0,
+                0.01, 0.45 * q)
+    x = rng.normal(size=(m, d)).astype(np.float32)
+    return rng, w, x
+
+
+def _cold_reference(table, planner, q, repeats: int = 1):
+    """Cold full re-plan + dense rebuild of the live table: the oracle the
+    streamed matrix must match, and the latency a static planner pays per
+    edit.  Plans with ``use_cache=False`` so the timing includes the
+    planning work an unseen profile costs."""
+    from repro.core import plan_a2a
+    from repro.mapreduce import pairwise_similarity
+
+    act = planner.active_ids()
+    xa = jnp.asarray(table[act])
+    wa = planner.active_weights()
+    times, sims = [], None
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        schema = plan_a2a(wa, q, use_cache=False)
+        sims, _, _ = pairwise_similarity(xa, q=q, weights=wa, schema=schema,
+                                         executor="dense")
+        sims = jax.block_until_ready(sims)
+        times.append(time.perf_counter() - t0)
+    return np.asarray(sims), act, float(np.median(times))
+
+
+def run_stream(m: int = 512, d: int = 64, q: float = 1.0,
+               zipf_a: float = 1.6, seed: int = 0,
+               edit_rates=(1, 16, 64)) -> dict:
+    from repro.serve import PairwiseService
+
+    rng, w, x = _make_table(m, d, q, zipf_a, seed)
+    svc = PairwiseService(q, executor="streaming")
+
+    t0 = time.perf_counter()
+    sims, info0 = svc.load_table(x, w)
+    cold_s = time.perf_counter() - t0
+
+    planner = svc._planner
+    rates = []
+    itemsize = np.dtype(np.float32).itemsize
+    for n_edits in edit_rates:
+        lat, fracs, dirty, replans = [], [], 0, 0
+        delta_rows, replan_rows = 0.0, 0.0
+        insert_fracs = []
+        for _ in range(int(n_edits)):
+            op = rng.choice(["insert", "delete", "reweight"],
+                            p=[0.6, 0.25, 0.15])
+            act = planner.active_ids()
+            if op == "insert" or len(act) < 3:
+                sims, info = svc.add_input(
+                    rng.normal(size=(1, d)).astype(np.float32),
+                    float(np.clip(rng.zipf(zipf_a) / 32.0,
+                                  0.01, 0.45 * q)))
+                insert_fracs.append(info["recompute_fraction"])
+            elif op == "delete":
+                sims, info = svc.remove_input(int(rng.choice(act)))
+            else:
+                sims, info = svc.update_weight(
+                    int(rng.choice(act)),
+                    float(np.clip(rng.zipf(zipf_a) / 32.0, 0.01, 0.45 * q)))
+            lat.append(info["wall_s"])
+            fracs.append(info["recompute_fraction"])
+            dirty += info["dirty_reducers"]
+            replans += int(info["full_replan"])
+            delta_rows += info["delta_comm_rows"]
+            replan_rows += info["comm_cost"]
+
+        # correctness at the batch boundary: allclose to a cold full
+        # re-plan on the dense executor + schema conformance
+        ref, act, replan_s = _cold_reference(svc._table, planner, q)
+        got = np.asarray(sims)[np.ix_(act, act)]
+        allclose = bool(np.allclose(got, ref, rtol=1e-4, atol=1e-4))
+        snap = planner.snapshot()
+        snap.validate("a2a")
+        conform = bool(
+            snap.communication_cost() >= planner.lower_bound - 1e-9)
+
+        rates.append({
+            "edits": int(n_edits),
+            "update_ms_median": round(float(np.median(lat)) * 1e3, 2),
+            "update_ms_mean": round(float(np.mean(lat)) * 1e3, 2),
+            "full_replan_ms": round(replan_s * 1e3, 2),
+            "speedup_vs_replan": round(
+                replan_s / max(float(np.median(lat)), 1e-12), 2),
+            "recompute_fraction_mean": round(float(np.mean(fracs)), 4),
+            "recompute_fraction_max": round(float(np.max(fracs)), 4),
+            "insert_recompute_fraction_mean": round(
+                float(np.mean(insert_fracs)), 4) if insert_fracs else None,
+            "dirty_reducers": int(dirty),
+            "replans": int(replans),
+            "delta_comm_bytes": int(delta_rows * d * itemsize),
+            "replan_comm_bytes": int(replan_rows * d * itemsize),
+            "delta_vs_replan_bytes": round(
+                delta_rows / max(replan_rows, 1e-12), 4),
+            "allclose": allclose,
+            "conformance": conform,
+        })
+
+    lb_bytes = planner.lower_bound * d * itemsize
+    return {
+        "m": m, "d": d, "q": q, "zipf_a": zipf_a, "seed": seed,
+        "algorithm": info0["algorithm"],
+        "reducers_initial": info0["reducers"],
+        "cold_build_ms": round(cold_s * 1e3, 1),
+        "optimality_gap_final": round(planner.optimality_gap, 4),
+        "lower_bound_bytes_final": int(lb_bytes),
+        "edit_rates": rates,
+        "planner_stats": dict(planner.stats),
+        "executor_stats": svc.executor_stats(),
+    }
+
+
+def emit_bench_json(payload: dict, path: str = BENCH_JSON) -> str:
+    """Merge ``payload`` into the repo-root BENCH_stream.json (sections
+    accumulate across runs, like benchmarks/BENCH_engine.json)."""
+    existing = {}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                existing = json.load(f)
+        except (json.JSONDecodeError, OSError):
+            existing = {}
+    existing.update(payload)
+    with open(path, "w") as f:
+        json.dump(existing, f, indent=1, sort_keys=True)
+        f.write("\n")
+    return os.path.abspath(path)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--m", type=int, default=512)
+    ap.add_argument("--d", type=int, default=64)
+    ap.add_argument("--zipf-a", type=float, default=1.6)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--edits", type=int, nargs="*", default=[1, 16, 64])
+    args = ap.parse_args(argv)
+
+    rep = run_stream(m=args.m, d=args.d, zipf_a=args.zipf_a, seed=args.seed,
+                     edit_rates=tuple(args.edits))
+    print(f"stream A2A  m={rep['m']} d={rep['d']} zipf_a={rep['zipf_a']} "
+          f"[{rep['algorithm']}] reducers={rep['reducers_initial']} "
+          f"cold={rep['cold_build_ms']:.0f}ms")
+    for r in rep["edit_rates"]:
+        print(f"  edits={r['edits']:3d} update={r['update_ms_median']:7.1f}ms"
+              f" (replan {r['full_replan_ms']:7.1f}ms, "
+              f"{r['speedup_vs_replan']:.1f}x) "
+              f"recompute={r['recompute_fraction_mean']:.3f} "
+              f"delta/replan bytes={r['delta_vs_replan_bytes']:.3f} "
+              f"replans={r['replans']} allclose={r['allclose']} "
+              f"conform={r['conformance']}")
+    path = emit_bench_json({"stream_edits": rep})
+    print(f"  wrote {path}")
+
+    for r in rep["edit_rates"]:
+        if not r["allclose"]:
+            raise SystemExit("FAIL: streamed matrix diverges from the cold "
+                             "full re-plan")
+        if not r["conformance"]:
+            raise SystemExit("FAIL: maintained schema under-ships the "
+                             "lower bound")
+        frac = r["insert_recompute_fraction_mean"]
+        if frac is not None and frac >= 0.25:
+            raise SystemExit(
+                f"FAIL: single-input edits recompute {frac:.3f} of "
+                f"reducers (bar: < 0.25)")
+    return rep
+
+
+if __name__ == "__main__":
+    main()

@@ -11,6 +11,10 @@
                    report (per-shard padded elements, balance factor);
                    merges the engine_sharded section into
                    benchmarks/BENCH_engine.json
+  bench_stream   — streaming-maintenance edits vs full re-planning
+                   (update latency, recompute fraction, delta-vs-replan
+                   comm bytes across edit rates on Zipf m=512); writes the
+                   repo-root BENCH_stream.json
   bench_packing  — FFD bins applied to the data pipeline
   bench_kernels  — Pallas kernels vs oracles
 
@@ -48,7 +52,7 @@ def _bench_engine_sharded():
 
 def main() -> None:
     from benchmarks import bench_a2a, bench_engine, bench_kernels, \
-        bench_packing, bench_x2y
+        bench_packing, bench_stream, bench_x2y
 
     sections = [
         ("bench_a2a", bench_a2a.main),
@@ -56,6 +60,7 @@ def main() -> None:
         ("bench_engine", bench_engine.main),
         ("bench_engine_fused", lambda: [bench_engine.main(["--fused"])]),
         ("bench_engine_sharded", _bench_engine_sharded),
+        ("bench_stream", lambda: [bench_stream.main([])]),
         ("bench_packing", bench_packing.main),
         ("bench_kernels", bench_kernels.main),
     ]

@@ -77,6 +77,8 @@ class PlanCache:
         self._store: OrderedDict = OrderedDict()
         self.hits = 0
         self.misses = 0
+        self.evictions = 0
+        self.invalidations = 0
 
     @staticmethod
     def key(sorted_w: np.ndarray, q: float, method: str) -> tuple:
@@ -95,10 +97,32 @@ class PlanCache:
         self._store.move_to_end(key)
         while len(self._store) > self.maxsize:
             self._store.popitem(last=False)
+            self.evictions += 1
+
+    def invalidate(self, key: tuple) -> bool:
+        """Drop one entry (the streaming gap-drift re-plan path: a serving
+        stream that re-plans has permanently moved off its previous weight
+        profile, so that profile's entry is dead weight in the LRU and would
+        otherwise push live request-serving profiles out).  Returns whether
+        the key was present.  Not counted as an eviction — ``evictions``
+        tracks capacity pressure only."""
+        if self._store.pop(key, None) is None:
+            return False
+        self.invalidations += 1
+        return True
+
+    def stats(self) -> dict:
+        """Counter snapshot: hits / misses / capacity evictions / explicit
+        invalidations, plus current size and cap."""
+        return {"hits": self.hits, "misses": self.misses,
+                "evictions": self.evictions,
+                "invalidations": self.invalidations,
+                "size": len(self._store), "maxsize": self.maxsize}
 
     def clear(self) -> None:
         self._store.clear()
         self.hits = self.misses = 0
+        self.evictions = self.invalidations = 0
 
     def __len__(self) -> int:
         return len(self._store)

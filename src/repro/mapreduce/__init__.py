@@ -37,8 +37,9 @@ Public API
 ``get_executor(name)`` / ``make_executor(name)`` / ``register_executor``
     The executor registry (``repro.mapreduce.executors``): executors are
     classes exposing ``run`` / ``run_pairs`` / ``lower`` / ``stats`` and
-    registered by name ("dense", "bucketed", "fused", "sharded") — the
-    single dispatch point for every application entry below.
+    registered by name ("dense", "bucketed", "fused", "sharded",
+    "streaming") — the single dispatch point for every application entry
+    below.
 ``pairwise_similarity(x, q=...)``
     A2A application: all-pairs similarity through a planned schema.
 ``some_pairs_similarity(x, pairs, q=...)``

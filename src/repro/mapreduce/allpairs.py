@@ -130,8 +130,9 @@ def _assemble_from_srcmap(per_bucket, srcmap):
 def _run_and_assemble(x, plan, fn, m, mesh, executor,
                       use_kernel: bool = False, interpret: bool = False):
     """Single dispatch point: ``executor`` is a registry name ("dense",
-    "bucketed", "fused", "sharded") or an :class:`Executor` instance (the
-    serving tier passes its own so telemetry stays instance-scoped)."""
+    "bucketed", "fused", "sharded", "streaming") or an
+    :class:`Executor` instance (the serving tier passes its own so
+    telemetry stays instance-scoped)."""
     return get_executor(executor).run_pairs(
         x, plan, fn, m, mesh=mesh, use_kernel=use_kernel,
         interpret=interpret)

@@ -531,12 +531,17 @@ def lower_reducers_bucketed(
     """Lower every bucket program (no execution) for dry-run / roofline.
 
     Returns ``[(bucket, lowered), ...]``; per-device roofline terms add up
-    across buckets (the programs run back-to-back on the same mesh)."""
+    across buckets (the programs run back-to-back on the same mesh).
+    ``mesh=None`` lowers the unsharded single-program form of each bucket
+    (the streaming dry-run's delta-vs-replan byte comparison)."""
     x = jax.ShapeDtypeStruct(input_shape, dtype)
     _run = partial(_gather_reduce, reducer_fn=reducer_fn)
-    red_sharding, rep = _shardings(mesh, shard_axes)
-    fn = jax.jit(_run, in_shardings=(rep, red_sharding, red_sharding),
-                 out_shardings=red_sharding)
+    if mesh is None:
+        fn = jax.jit(_run)
+    else:
+        red_sharding, rep = _shardings(mesh, shard_axes)
+        fn = jax.jit(_run, in_shardings=(rep, red_sharding, red_sharding),
+                     out_shardings=red_sharding)
     out = []
     for b in plan.buckets:
         idx = jax.ShapeDtypeStruct(b.idx.shape, jnp.int32)

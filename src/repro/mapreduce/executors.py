@@ -12,11 +12,11 @@ hardware.  Every executor is a class exposing
   ``stats()`` / ``reset()``                — instance-scoped dispatch
         telemetry (no module globals to pollute across callers);
 
-registered by name ("dense", "bucketed", "fused", "sharded") so
-applications dispatch through ``get_executor(name)`` instead of per-module
-``if executor == ...`` ladders.  ``make_executor(name)`` returns a *fresh*
-instance with its own counters — what ``serve.PairwiseService`` holds so
-concurrent services never share telemetry.
+registered by name ("dense", "bucketed", "fused", "sharded", "streaming")
+so applications dispatch through ``get_executor(name)`` instead of
+per-module ``if executor == ...`` ladders.  ``make_executor(name)`` returns
+a *fresh* instance with its own counters — what ``serve.PairwiseService``
+holds so concurrent services never share telemetry.
 
 The registry executors:
 
@@ -33,6 +33,10 @@ The registry executors:
                 balances reducers over the mesh's reducer axis, each shard
                 runs the fused/bucketed tile pipeline under ``shard_map``,
                 and one cross-shard gather assembles the (m, m) matrix.
+``streaming`` — delta execution of maintained plans (DESIGN.md "streaming
+                maintenance"; ``repro.stream``, registered lazily): only
+                the reducers an edit dirtied are recomputed, and the
+                cached (m, m) matrix is patched instead of rebuilt.
 """
 
 from __future__ import annotations
@@ -138,6 +142,11 @@ def get_executor(name) -> Executor:
     if isinstance(name, Executor):
         return name
     ex = _REGISTRY.get(name)
+    if ex is None and name == "streaming":
+        # the streaming subsystem registers its executor on import; loaded
+        # lazily so the engine never pays for it unless it is used
+        import repro.stream  # noqa: F401
+        ex = _REGISTRY.get(name)
     if ex is None:
         raise ValueError(
             f"unknown executor {name!r} (registered: {list_executors()})")

@@ -1,7 +1,8 @@
 """Serving substrate: batched decode engine with slot-based continuous
 batching over the model's KV caches, plus the paper-workload
-``PairwiseService`` (planned similarity queries on the bucketed shuffle
-executor)."""
+``PairwiseService`` (planned similarity queries on any registry executor,
+including live-table streaming edits via ``add_input`` / ``remove_input``
+/ ``update_weight`` on the streaming executor)."""
 
 from .engine import BatchedServer, PairwiseService, Request
 

@@ -18,6 +18,14 @@ memoized by weight profile in ``PLAN_CACHE``) and executed on the
 skew-aware bucketed shuffle executor or the fused gather+Gram megakernel
 path (``executor='fused'``), with per-request plan provenance, plan-cache
 hit flags, and fused/jit-cache telemetry for dashboards.
+
+With ``executor='streaming'`` the service additionally serves a *live*
+table: ``load_table`` plans once through ``repro.stream.
+IncrementalPlanner`` and caches the pair matrix; ``add_input`` /
+``remove_input`` / ``update_weight`` repair the maintained schema locally
+and patch the matrix through the streaming executor, reporting
+recompute-fraction, dirty-reducer, and gap-drift telemetry per edit
+(DESIGN.md "streaming maintenance").
 """
 
 from __future__ import annotations
@@ -124,8 +132,9 @@ class PairwiseService:
     the service plans a mapping schema via the registry planner — repeated
     weight profiles hit ``repro.core.PLAN_CACHE`` and skip planning — and
     executes it on any executor-registry entry ("dense" / "bucketed" /
-    "fused" / "sharded"); the default bucketed path keeps skewed profiles
-    from paying the dense global-max padding.  The service holds a
+    "fused" / "sharded" / "streaming"); the default bucketed path keeps
+    skewed profiles from paying the dense global-max padding.  The
+    service holds a
     *private* executor instance (``make_executor``), so its dispatch
     telemetry is isolated from concurrent callers.  Responses carry the
     plan provenance (winning strategy, communication cost, optimality gap)
@@ -157,12 +166,29 @@ class PairwiseService:
             "fused_kernel": 0,
             "fused_streamed": 0,
             "fused_fallbacks": 0,
+            "edits": 0,
+            "dirty_reducers": 0,
+            "edit_reducers_total": 0,
+            "stream_replans": 0,
             "wall_s": 0.0,
         }
+        self._planner = None                     # streaming: live planner
+        self._table: Optional[np.ndarray] = None  # streaming: live rows
 
     def executor_stats(self) -> dict:
         """This service's private executor dispatch counters."""
         return self._executor.stats()
+
+    def reset_stats(self) -> None:
+        """Zero the accumulated telemetry *coherently*: the per-request
+        counters in ``self.stats`` and the private executor instance's
+        dispatch counters reset together, so ratios like
+        ``padding_savings`` or fused-path shares never mix epochs.  (The
+        global ``PLAN_CACHE`` is shared with other callers and is already
+        read as per-request deltas, so it is left untouched.)"""
+        for k in self.stats:
+            self.stats[k] = 0.0 if isinstance(self.stats[k], float) else 0
+        self._executor.reset()
 
     def _snap(self):
         """Counter snapshot taken around one request (plan cache + this
@@ -248,3 +274,124 @@ class PairwiseService:
         """Aggregate dense/bucketed padded-element ratio across requests."""
         return (self.stats["dense_padded_elements"] /
                 max(self.stats["bucketed_padded_elements"], 1))
+
+    # ------------------------------------------------------------- streaming
+    def _reducer_fn(self):
+        from repro.mapreduce.allpairs import _block_fn
+        return _block_fn(self.metric, self.use_kernel)
+
+    def _require_streaming(self):
+        from repro.stream import StreamingExecutor
+        assert isinstance(self._executor, StreamingExecutor), (
+            f"live-table edits need executor='streaming' "
+            f"(this service runs {self.executor!r})")
+        return self._executor
+
+    def load_table(self, x, weights=None, *, replan_drift: float = 1.5):
+        """Adopt ``x`` as the live table (streaming executor only).
+
+        Plans the initial schema through ``repro.stream.
+        IncrementalPlanner``, cold-builds the pair matrix on the fused/
+        bucketed substrate, and returns ``(sims, info)``.  Subsequent
+        ``add_input`` / ``remove_input`` / ``update_weight`` calls edit
+        this table in place."""
+        from repro.stream import IncrementalPlanner
+        ex = self._require_streaming()
+        self._table = np.asarray(x, dtype=np.float32)
+        m = self._table.shape[0]
+        w = np.full(m, 1.0) if weights is None \
+            else np.asarray(weights, dtype=np.float64)
+        t0 = time.perf_counter()
+        self._planner = IncrementalPlanner(
+            self.q, w, replan_drift=replan_drift,
+            max_buckets=self.max_buckets,
+            # mesh execution shards the bucket row axis: pad reducer rows
+            # to the device count, exactly like allpairs._plan_for
+            pad_reducers_to=(self.mesh.devices.size
+                             if self.mesh is not None else 1))
+        plan = self._planner.plan()
+        sims = ex.run_pairs(jnp.asarray(self._table), plan,
+                            self._reducer_fn(), m, mesh=self.mesh,
+                            use_kernel=self.use_kernel,
+                            interpret=self.interpret)
+        sims = jax.block_until_ready(sims)
+        dt = time.perf_counter() - t0
+        self.stats["requests"] += 1
+        self.stats["reducers"] += plan.num_reducers
+        self.stats["wall_s"] += dt
+        info = {
+            "executor": self.executor,
+            "algorithm": self._planner.algorithm,
+            "reducers": plan.num_reducers,
+            "comm_cost": self._planner.comm_cost,
+            "lower_bound": self._planner.lower_bound,
+            "optimality_gap": self._planner.optimality_gap,
+            "wall_s": dt,
+        }
+        return sims, info
+
+    def _edit(self, op: str, *args):
+        ex = self._require_streaming()
+        assert self._planner is not None, "call load_table() first"
+        t0 = time.perf_counter()
+        delta = getattr(self._planner, op)(*args)
+        sims = ex.apply_delta(
+            jnp.asarray(self._table), delta, self._reducer_fn(),
+            self._table.shape[0], plan_provider=self._planner.plan,
+            mesh=self.mesh, use_kernel=self.use_kernel,
+            interpret=self.interpret)
+        sims = jax.block_until_ready(sims)
+        dt = time.perf_counter() - t0
+        self.stats["edits"] += 1
+        self.stats["dirty_reducers"] += int(len(delta.dirty_rows))
+        self.stats["edit_reducers_total"] += int(delta.num_reducers)
+        self.stats["stream_replans"] += int(delta.full_replan)
+        self.stats["wall_s"] += dt
+        info = {
+            "executor": self.executor,
+            "kind": delta.kind,
+            "input_id": int(delta.input_id),
+            "dirty_reducers": int(len(delta.dirty_rows)),
+            "num_reducers": int(delta.num_reducers),
+            "recompute_fraction": float(delta.recompute_fraction),
+            "full_replan": bool(delta.full_replan),
+            "comm_cost": float(delta.comm_cost),
+            "delta_comm_rows": float(delta.delta_comm_rows()),
+            "lower_bound": float(delta.lower_bound),
+            "optimality_gap": delta.optimality_gap,
+            "gap_drift": float(delta.gap_drift),
+            "algorithm": self._planner.algorithm,
+            "wall_s": dt,
+        }
+        return sims, info
+
+    def add_input(self, row, weight: float = 1.0):
+        """Append one feature row to the live table.  Returns
+        ``(sims, info)``: the patched matrix (new input's row/column
+        filled) and the edit's delta telemetry."""
+        from repro.core.schema import InfeasibleError
+        row = np.asarray(row, dtype=np.float32).reshape(1, -1)
+        assert self._table is not None, "call load_table() first"
+        assert row.shape[1] == self._table.shape[1], (
+            row.shape, self._table.shape)
+        self._table = np.concatenate([self._table, row])
+        try:
+            return self._edit("insert", float(weight))
+        except InfeasibleError:
+            # the planner rolled its insert back too — pop the row so the
+            # table and the maintained schema stay in lockstep (any other
+            # exception leaves the committed input in both)
+            self._table = self._table[:-1]
+            raise
+
+    def remove_input(self, i: int):
+        """Tombstone input ``i``: its row/column of the served matrix is
+        zeroed; no reducer recomputes (surviving pair values are
+        unchanged)."""
+        return self._edit("delete", int(i))
+
+    def update_weight(self, i: int, weight: float):
+        """Change input ``i``'s planning size.  Feature rows are untouched
+        so the matrix never changes — only the maintained schema (bin
+        moves, possibly a gap-drift re-plan) and its telemetry do."""
+        return self._edit("reweight", int(i), float(weight))

@@ -1,0 +1,37 @@
+"""Streaming subsystem: incremental mapping-schema maintenance.
+
+The planners in ``repro.core`` are pure functions of a weight profile; the
+executors in ``repro.mapreduce`` run the resulting static plan.  This
+package makes plans *mutable serving state* (DESIGN.md 1f):
+
+``IncrementalPlanner``
+    ``insert`` / ``delete`` / ``reweight`` maintain a live mapping schema
+    by localized bin repair (residual packing into existing slack, new
+    reducers only when capacity q forces them), with a tracked
+    optimality-gap drift threshold that triggers an amortized full re-plan
+    through ``repro.core.PLAN_CACHE``.
+``PlanDelta``
+    The per-edit artifact: dirty reducers, the compact re-shuffle
+    sub-plan, the touched matrix rows, and the coverage-restoration proof
+    (``verify``).
+``StreamingExecutor``
+    The fifth registry executor (``executor="streaming"``): keeps the
+    assembled (m, m) pair matrix cached, recomputes only dirty reducers
+    through the fused/bucketed substrate, and patches the matrix with a
+    delta scatter instead of rebuilding it.
+
+Importing this package registers the executor; ``repro.mapreduce.
+get_executor("streaming")`` imports it lazily, so the rest of the engine
+never pays for the subsystem unless it is used.
+"""
+
+from repro.mapreduce.executors import register_executor
+
+from .delta import PlanDelta, compact_plan
+from .executor import StreamingExecutor
+from .incremental import IncrementalPlanner
+
+register_executor(StreamingExecutor())
+
+__all__ = ["IncrementalPlanner", "PlanDelta", "StreamingExecutor",
+           "compact_plan"]

@@ -1,0 +1,193 @@
+"""StreamingExecutor: delta execution of maintained plans (DESIGN.md 1f).
+
+The fifth registry executor ("streaming").  Cold builds run the fused
+substrate like any other executor; after that the executor keeps the
+assembled (m, m) pair matrix as serving state and consumes
+:class:`~repro.stream.delta.PlanDelta` artifacts: only the delta's dirty
+reducers are recomputed (their compact sub-plan runs through the bucketed
+gather+Gram substrate at power-of-two shapes), and the cached matrix is
+*patched* — touched rows/columns are invalidated and refilled by a delta
+scatter — instead of being rebuilt.  A full re-plan delta (gap drift,
+opaque schema) falls back to a cold build, counted in ``stats()``.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.mapreduce.allpairs import _finish_pair_matrix, _scatter_blocks
+from repro.mapreduce.engine import ReducerPlan, run_reducers_bucketed
+from repro.mapreduce.executors import Executor, make_executor
+
+from .delta import PlanDelta, _pow2
+
+__all__ = ["StreamingExecutor"]
+
+
+class StreamingExecutor(Executor):
+    """Incremental pair-matrix serving over a mutable plan.
+
+    ``run_pairs`` is the cold path: it delegates to the ``substrate``
+    executor ("fused" by default — all capacity buckets in one program)
+    and caches the assembled matrix.  ``apply_delta`` is the streaming
+    path: recompute the delta's dirty reducers only, patch the cached
+    matrix.  State is keyed by the reducer function object, so the serving
+    tier's memoized ``_block_fn`` reuses both the cache and the substrate's
+    jit entries across edits.
+
+    Patch correctness: every value a dirty reducer produces is computed
+    from the *current* table, so scattering dirty blocks over the cached
+    matrix (max-combine, after invalidating touched rows/columns to -inf)
+    writes only current-correct values — overlapping clean pairs agree
+    exactly, touched pairs are refilled, and touched pairs no longer
+    covered (deleted inputs) decay to 0.  ``PlanDelta.verify`` proves the
+    dirty reducers cover every touched pair.
+    """
+
+    name = "streaming"
+
+    def __init__(self, stats: Optional[dict] = None,
+                 substrate: str = "fused"):
+        super().__init__(stats)
+        self.substrate = substrate
+        self._sub = make_executor(substrate)     # private: isolated counters
+        self._sims: Optional[jax.Array] = None
+        self._fn: Optional[Callable] = None
+
+    def _fresh_stats(self) -> dict:
+        return {"calls": 0, "full_builds": 0, "delta_updates": 0,
+                "dirty_reducers": 0, "reducers_total": 0,
+                "patched_inputs": 0, "fallbacks": 0,
+                "recompute_fraction": 0.0}
+
+    # ------------------------------------------------------------- protocol
+    def run(self, inputs, plan, reducer_fn, *, mesh=None, shard_axes=None,
+            **kwargs):
+        """Non-pairs reducer execution has no serving state to patch:
+        delegate to the substrate (counted as a fallback)."""
+        self._count("calls")
+        self._count("fallbacks")
+        return self._sub.run(inputs, plan, reducer_fn, mesh=mesh,
+                             shard_axes=shard_axes, **kwargs)
+
+    def run_pairs(self, x, plan, reducer_fn, m, *, mesh=None,
+                  use_kernel=False, interpret=False):
+        """Cold build: execute the full plan on the substrate and adopt the
+        (m, m) matrix as streaming state."""
+        self._count("calls")
+        return self._rebuild(x, plan, reducer_fn, m, mesh=mesh,
+                             use_kernel=use_kernel, interpret=interpret)
+
+    def lower(self, input_shape, plan, *, reducer_fn=None, metric=None,
+              mesh=None, dtype=jnp.float32, shard_axes=None,
+              delta: Optional[PlanDelta] = None, **kwargs):
+        """Lower the *delta* program (dry-run/roofline): the bucketed
+        gather+reduce over the dirty sub-plan — what one edit actually
+        executes.  Without a delta (or on a full-re-plan delta) this is the
+        full plan's program, i.e. the re-shuffle a static planner would
+        pay.  Returns ``[(bucket, Lowered), ...]`` like the bucketed
+        executor."""
+        target = plan
+        if delta is not None and delta.sub_plan is not None \
+                and not delta.full_replan:
+            target = delta.sub_plan
+        return make_executor("bucketed").lower(
+            input_shape, target, reducer_fn=reducer_fn, metric=metric,
+            mesh=mesh, dtype=dtype, shard_axes=shard_axes, **kwargs)
+
+    def reset(self) -> None:
+        super().reset()
+        self._sub.reset()
+
+    # ------------------------------------------------------------ streaming
+    @property
+    def sims(self) -> Optional[jax.Array]:
+        """The maintained matrix at table capacity — a power-of-two square
+        so consecutive inserts hit compiled programs instead of recompiling
+        per table size; rows/cols past the live table are zero.  (None
+        before the first build.)"""
+        return self._sims
+
+    def invalidate(self) -> None:
+        """Drop the maintained state; the next call rebuilds cold."""
+        self._sims = None
+        self._fn = None
+
+    @staticmethod
+    def _at_capacity(x, square: bool = False):
+        """Pad the leading axis (both axes with ``square=True``) to the
+        next power of two: edits then reuse the same compiled gather/patch
+        programs until the capacity actually doubles.  Padding rows are
+        never referenced (the plan indexes live rows only)."""
+        cap = _pow2(x.shape[0])
+        if cap > x.shape[0]:
+            pad = (0, cap - x.shape[0])
+            pads = (pad, pad) if square else \
+                (pad,) + ((0, 0),) * (x.ndim - 1)
+            x = jnp.pad(x, pads)
+        return x
+
+    def _rebuild(self, x, plan, reducer_fn, m, *, mesh=None,
+                 use_kernel=False, interpret=False):
+        sims = self._sub.run_pairs(x, plan, reducer_fn, m, mesh=mesh,
+                                   use_kernel=use_kernel,
+                                   interpret=interpret)
+        self._sims = self._at_capacity(sims, square=True)
+        self._fn = reducer_fn
+        self._count("full_builds")
+        self._count("dirty_reducers", plan.num_reducers)
+        self._count("reducers_total", plan.num_reducers)
+        self._stats["recompute_fraction"] = 1.0
+        return sims
+
+    def apply_delta(self, x, delta: PlanDelta, reducer_fn, m, *,
+                    plan_provider: Optional[Callable[[], ReducerPlan]] = None,
+                    mesh=None, use_kernel=False, interpret=False):
+        """Apply one edit: patch the maintained matrix through the delta.
+
+        ``x`` is the *current* full table (tombstoned rows included);
+        ``m = x.shape[0]``.  ``plan_provider`` supplies the full post-edit
+        plan, called only when a cold rebuild is unavoidable (full-re-plan
+        delta, or no maintained state / different reducer function).
+        Returns the live (m, m) view of the maintained matrix.
+        """
+        self._count("calls")
+        cold = (self._sims is None or self._fn is not reducer_fn
+                or delta.full_replan)
+        if cold:
+            assert plan_provider is not None, (
+                "cold streaming rebuild needs the full plan")
+            return self._rebuild(x, plan_provider(), reducer_fn, m,
+                                 mesh=mesh, use_kernel=use_kernel,
+                                 interpret=interpret)
+
+        sims = self._sims
+        if m > sims.shape[0]:                     # capacity doubled
+            sims = self._at_capacity(
+                jnp.pad(sims, ((0, m - sims.shape[0]),) * 2), square=True)
+        cap = sims.shape[0]
+        touched = delta.touched_inputs
+        if len(touched):
+            t = jnp.asarray(touched)
+            sims = sims.at[t, :].set(-jnp.inf).at[:, t].set(-jnp.inf)
+            if delta.sub_plan is not None and len(delta.dirty_rows):
+                per_bucket = run_reducers_bucketed(
+                    self._at_capacity(x), delta.sub_plan, reducer_fn,
+                    mesh=mesh, combine="buckets")
+                for b, blocks in per_bucket:
+                    sims = _scatter_blocks(sims, blocks,
+                                           jnp.asarray(b.idx),
+                                           jnp.asarray(b.mask))
+            sims = _finish_pair_matrix(sims, cap)
+
+        self._sims = sims
+        self._count("delta_updates")
+        self._count("dirty_reducers", int(len(delta.dirty_rows)))
+        self._count("reducers_total", int(delta.num_reducers))
+        self._count("patched_inputs", int(len(touched)))
+        self._stats["recompute_fraction"] = float(delta.recompute_fraction)
+        return sims[:m, :m]

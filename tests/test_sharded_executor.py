@@ -52,7 +52,11 @@ def _rand(rng, shape):
 # ----------------------------------------------------------------- registry
 class TestExecutorRegistry:
     def test_all_executors_registered(self):
-        assert list_executors() == ["bucketed", "dense", "fused", "sharded"]
+        core = {"bucketed", "dense", "fused", "sharded"}
+        assert core.issubset(set(list_executors()))
+        # the streaming executor registers lazily on first resolution
+        get_executor("streaming")
+        assert set(list_executors()) == core | {"streaming"}
 
     def test_unknown_executor_raises(self):
         with pytest.raises(ValueError, match="unknown executor"):

@@ -1,0 +1,443 @@
+"""Streaming maintenance: after any sequence of insert/delete/reweight
+edits the maintained schema must still be a valid mapping schema (the
+``test_schema_conformance`` coverage/capacity/>=lower-bound properties),
+and the streamed pair matrix must equal a cold full re-plan on the dense
+executor.
+
+Deterministic edit-sequence sweeps run everywhere; the @given variant
+fuzzes the same properties when hypothesis is installed
+(tests/_hypothesis_compat turns it into a per-test skip otherwise).
+"""
+
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+import jax.numpy as jnp
+
+from repro.core import PLAN_CACHE, a2a_comm_lower_bound
+from repro.core.schema import InfeasibleError
+from repro.core.strategies import PlanCache
+from repro.mapreduce import get_executor, list_executors, make_executor
+from repro.mapreduce.allpairs import _block_fn, pairwise_similarity
+from repro.serve import PairwiseService
+from repro.stream import IncrementalPlanner, StreamingExecutor
+
+TOL = 1e-9
+
+
+def _profile(kind: str, m: int, seed: int, q: float = 1.0) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    if kind == "uniform":
+        return rng.uniform(0.05, 0.33, m)
+    if kind == "zipf":
+        return np.clip(rng.zipf(1.7, m) / 24.0, 0.02, 0.45 * q)
+    if kind == "small":                     # fits one reducer -> 'single'
+        return rng.uniform(0.01, 0.04, m)
+    if kind == "near-half":                 # hybrid/binpack-k2 territory
+        return rng.uniform(0.30 * q, 0.49 * q, m)
+    raise ValueError(kind)
+
+
+def _check_conformance(planner: IncrementalPlanner) -> None:
+    """The maintained schema passes the same coverage/capacity/bound
+    checks test_schema_conformance.py applies to cold plans."""
+    if planner.num_active == 0:
+        return
+    snap = planner.snapshot()
+    snap.validate("a2a")
+    lb = a2a_comm_lower_bound(planner.active_weights(), planner.q)
+    assert snap.communication_cost() >= lb - TOL
+    # the incrementally maintained cost ledger matches the real schema
+    assert snap.communication_cost() == pytest.approx(planner.comm_cost)
+
+
+def _apply_random_edit(planner, rng, q):
+    act = planner.active_ids()
+    op = rng.choice(["insert", "delete", "reweight"], p=[0.5, 0.3, 0.2])
+    if op == "insert" or len(act) < 3:
+        return planner.insert(float(rng.uniform(0.02, 0.45 * q))), "insert"
+    if op == "delete":
+        return planner.delete(int(rng.choice(act))), "delete"
+    return planner.reweight(int(rng.choice(act)),
+                            float(rng.uniform(0.02, 0.45 * q))), "reweight"
+
+
+# ---------------------------------------------------------------- planner
+class TestIncrementalPlanner:
+    @pytest.mark.parametrize("kind,m,seed", [
+        ("uniform", 7, 0), ("uniform", 23, 1), ("uniform", 48, 2),
+        ("zipf", 23, 3), ("zipf", 48, 4),
+        ("small", 12, 5), ("near-half", 16, 6),
+    ])
+    def test_random_edit_sequences_conform(self, kind, m, seed):
+        q = 1.0
+        rng = np.random.default_rng(seed)
+        planner = IncrementalPlanner(q, _profile(kind, m, seed, q))
+        _check_conformance(planner)
+        for _ in range(25):
+            delta, op = _apply_random_edit(planner, rng, q)
+            assert delta.kind == op
+            assert delta.num_reducers == planner.num_reducers
+            assert 0.0 <= delta.recompute_fraction <= 1.0
+            _check_conformance(planner)
+
+    def test_insert_repairs_locally_on_binpack(self):
+        """On a bin-packing schema a single insert dirties a strict
+        minority of reducers (the paper's O(n) useful work, not O(n^2))."""
+        q = 1.0
+        w = _profile("zipf", 96, 0, q)
+        planner = IncrementalPlanner(q, w)
+        assert planner.kind == "binpack"
+        deltas = [planner.insert(0.03) for _ in range(5)]
+        for d in deltas:
+            assert not d.full_replan
+            assert d.recompute_fraction < 0.25
+            assert len(d.dirty_rows) >= 1
+        _check_conformance(planner)
+
+    def test_delete_is_pure_patch(self):
+        q = 1.0
+        planner = IncrementalPlanner(q, _profile("uniform", 30, 1, q))
+        delta = planner.delete(7)
+        assert not planner.active[7]
+        if not delta.full_replan:
+            assert len(delta.dirty_rows) == 0
+            assert list(delta.touched_inputs) == [7]
+        _check_conformance(planner)
+
+    def test_reweight_in_place_keeps_structure(self):
+        q = 1.0
+        planner = IncrementalPlanner(q, np.full(20, 0.18))
+        assert planner.kind == "binpack"
+        before = planner.num_reducers
+        delta = planner.reweight(3, 0.19)        # tiny change: slack holds
+        assert not delta.full_replan
+        assert len(delta.dirty_rows) == 0 and len(delta.touched_inputs) == 0
+        assert planner.num_reducers == before
+        assert planner.weights[3] == pytest.approx(0.19)
+        _check_conformance(planner)
+
+    def test_reweight_overflow_moves_or_replans(self):
+        """A reweight past the bin's slack must leave a conformant schema
+        (bin move or re-plan) with the new weight in force."""
+        q = 1.0
+        planner = IncrementalPlanner(q, np.full(20, 0.18))
+        delta = planner.reweight(3, 0.35)        # overflows the 0.2 bin
+        assert planner.weights[3] == pytest.approx(0.35)
+        assert delta.kind == "reweight"
+        _check_conformance(planner)
+
+    def test_gap_drift_triggers_amortized_replan(self):
+        """A tight drift threshold forces the re-plan path; the schema
+        stays conformant through it and the planner counts it."""
+        q = 1.0
+        rng = np.random.default_rng(2)
+        planner = IncrementalPlanner(q, _profile("uniform", 40, 2, q),
+                                     replan_drift=1.0 + 1e-9)
+        saw_replan = False
+        for _ in range(20):
+            delta, _ = _apply_random_edit(planner, rng, q)
+            saw_replan |= delta.full_replan
+            _check_conformance(planner)
+        assert saw_replan
+        assert planner.stats["replans"] >= 2     # init + >=1 drift/forced
+
+    def test_infeasible_insert_rolls_back(self):
+        q = 1.0
+        planner = IncrementalPlanner(q, np.array([0.6, 0.3]))
+        m0, r0 = len(planner.weights), planner.num_reducers
+        edits0, inv0 = planner.stats["edits"], PLAN_CACHE.invalidations
+        key0 = planner._cache_key
+        with pytest.raises(InfeasibleError):
+            planner.insert(0.7)                  # two inputs > q/2
+        assert len(planner.weights) == m0
+        assert planner.num_reducers == r0
+        # the rolled-back edit leaves the live profile's cache entry and
+        # key intact and is not counted
+        assert planner.stats["edits"] == edits0
+        assert planner._cache_key == key0
+        assert PLAN_CACHE.invalidations == inv0
+        assert PLAN_CACHE.get(key0) is not None
+        _check_conformance(planner)
+
+    def test_plan_ids_reference_full_table(self):
+        """plan() indexes the full (tombstoned) table; deleted ids never
+        appear in any reducer slot."""
+        q = 1.0
+        planner = IncrementalPlanner(q, _profile("uniform", 24, 3, q))
+        planner.delete(5)
+        planner.insert(0.1)
+        plan = planner.plan()
+        used = np.unique(plan.idx[plan.mask])
+        assert 5 not in used
+        assert used.max(initial=0) < len(planner.weights)
+
+    @given(st.lists(st.floats(0.02, 0.45), min_size=3, max_size=24),
+           st.integers(0, 5))
+    @settings(max_examples=25, deadline=None)
+    def test_property_random_profiles_and_edits(self, weights, seed):
+        q = 1.0
+        rng = np.random.default_rng(seed)
+        planner = IncrementalPlanner(q, np.asarray(weights))
+        for _ in range(8):
+            _apply_random_edit(planner, rng, q)
+            _check_conformance(planner)
+
+
+# --------------------------------------------------------------- executor
+class TestStreamingExecutor:
+    def test_registered_lazily(self):
+        ex = get_executor("streaming")
+        assert isinstance(ex, StreamingExecutor)
+        assert "streaming" in list_executors()
+        fresh = make_executor("streaming")
+        assert fresh is not ex and fresh.stats()["calls"] == 0
+
+    @pytest.mark.parametrize("kind,m,seed", [
+        ("uniform", 24, 0), ("zipf", 40, 1), ("small", 10, 2),
+    ])
+    @pytest.mark.parametrize("metric", ["dot", "cosine"])
+    def test_streamed_matches_cold_dense_replan(self, kind, m, seed,
+                                                metric):
+        """After every edit the streamed matrix equals a cold full re-plan
+        executed on the dense oracle."""
+        q = 1.0
+        rng = np.random.default_rng(seed)
+        w = _profile(kind, m, seed, q)
+        x = rng.normal(size=(m, 8)).astype(np.float32)
+        planner = IncrementalPlanner(q, w)
+        ex = make_executor("streaming")
+        fn = _block_fn(metric, False)
+        sims = ex.run_pairs(jnp.asarray(x), planner.plan(), fn, m)
+
+        table = x
+        for _ in range(10):
+            delta, op = _apply_random_edit(planner, rng, q)
+            if op == "insert":
+                table = np.concatenate(
+                    [table, rng.normal(size=(1, 8)).astype(np.float32)])
+            sims = ex.apply_delta(jnp.asarray(table), delta, fn,
+                                  table.shape[0],
+                                  plan_provider=planner.plan)
+            act = planner.active_ids()
+            ref, _, _ = pairwise_similarity(
+                jnp.asarray(table[act]), q=q,
+                weights=planner.active_weights(), metric=metric,
+                executor="dense")
+            got = np.asarray(sims)[np.ix_(act, act)]
+            np.testing.assert_allclose(got, np.asarray(ref),
+                                       rtol=1e-4, atol=1e-4)
+            # tombstoned rows/cols serve zeros
+            dead = sorted(set(range(table.shape[0])) - set(act.tolist()))
+            if dead:
+                assert np.all(np.asarray(sims)[dead, :] == 0.0)
+                assert np.all(np.asarray(sims)[:, dead] == 0.0)
+
+    def test_stats_track_recompute(self):
+        q = 1.0
+        w = _profile("uniform", 48, 2, q)
+        rng = np.random.default_rng(0)
+        x = rng.normal(size=(48, 8)).astype(np.float32)
+        planner = IncrementalPlanner(q, w)
+        assert planner.kind == "binpack"         # the repair path is live
+        ex = make_executor("streaming")
+        fn = _block_fn("dot", False)
+        ex.run_pairs(jnp.asarray(x), planner.plan(), fn, 48)
+        delta = planner.insert(0.05)
+        x = np.concatenate([x, rng.normal(size=(1, 8)).astype(np.float32)])
+        ex.apply_delta(jnp.asarray(x), delta, fn, 49,
+                       plan_provider=planner.plan)
+        s = ex.stats()
+        assert s["full_builds"] == 1
+        if not delta.full_replan:
+            assert s["delta_updates"] == 1
+            assert s["recompute_fraction"] == pytest.approx(
+                delta.recompute_fraction)
+        assert s["reducers_total"] >= s["dirty_reducers"] > 0
+
+    def test_delta_lowering_is_smaller(self):
+        """The executor lowers the delta program over the dirty sub-plan;
+        its gather is a fraction of the full plan's."""
+        q = 1.0
+        planner = IncrementalPlanner(q, _profile("zipf", 64, 1, q))
+        delta = planner.insert(0.05)
+        if delta.full_replan:
+            pytest.skip("profile re-planned; no delta program")
+        ex = get_executor("streaming")
+        fn = _block_fn("dot", False)
+        m = len(planner.weights)
+        low_delta = ex.lower((m, 8), planner.plan(), reducer_fn=fn,
+                             mesh=None, delta=delta)
+        low_full = ex.lower((m, 8), planner.plan(), reducer_fn=fn,
+                            mesh=None)
+        rows = lambda lows: sum(b.idx.shape[0] * b.width for b, _ in lows)
+        assert rows(low_delta) < rows(low_full)
+        for _, lo in low_delta:
+            assert "gather" in lo.compile().as_text().lower()
+
+
+# -------------------------------------------------------- PlanCache (sat)
+class TestPlanCacheInvalidate:
+    def test_invalidate_and_eviction_stats(self):
+        c = PlanCache(maxsize=2)
+        k1 = PlanCache.key(np.array([1.0]), 1.0, "auto")
+        k2 = PlanCache.key(np.array([2.0]), 1.0, "auto")
+        k3 = PlanCache.key(np.array([3.0]), 1.0, "auto")
+        c.put(k1, "a"), c.put(k2, "b")
+        assert c.invalidate(k1) and not c.invalidate(k1)
+        assert c.get(k1) is None                 # counted as a miss
+        c.put(k1, "a"), c.put(k3, "c")           # overflows: evicts k2 (LRU)
+        assert c.get(k2) is None
+        s = c.stats()
+        assert s["evictions"] == 1 and s["invalidations"] == 1
+        assert s["size"] == 2 and s["maxsize"] == 2
+        assert s["misses"] == 2 and s["hits"] == 0
+        c.clear()
+        s = c.stats()
+        assert s["evictions"] == s["invalidations"] == s["hits"] == \
+            s["misses"] == s["size"] == 0
+
+    def test_drift_replan_invalidates_superseded_profile(self):
+        """A streaming re-plan drops its *previous* profile's entry (this
+        stream can never query it again) instead of letting churn evict
+        live profiles."""
+        inv0 = PLAN_CACHE.invalidations
+        planner = IncrementalPlanner(1.0, _profile("uniform", 24, 0),
+                                     replan_drift=1.0 + 1e-9)
+        rng = np.random.default_rng(0)
+        for _ in range(12):
+            _apply_random_edit(planner, rng, 1.0)
+        assert planner.stats["replans"] >= 2
+        assert PLAN_CACHE.invalidations > inv0
+
+
+# ----------------------------------------------------------- serving tier
+class TestPairwiseServiceStreaming:
+    def _service_with_table(self, m=24, d=8, seed=0, q=1.0):
+        rng = np.random.default_rng(seed)
+        x = rng.normal(size=(m, d)).astype(np.float32)
+        w = _profile("uniform", m, seed, q)
+        svc = PairwiseService(q, executor="streaming")
+        sims, info = svc.load_table(x, w)
+        return svc, rng, sims, info
+
+    def test_edit_api_roundtrip(self):
+        svc, rng, sims, info = self._service_with_table()
+        assert info["executor"] == "streaming"
+        ref, _, _ = pairwise_similarity(
+            jnp.asarray(svc._table), q=svc.q,
+            weights=svc._planner.active_weights(), executor="dense")
+        np.testing.assert_allclose(np.asarray(sims), np.asarray(ref),
+                                   rtol=1e-4, atol=1e-4)
+
+        sims, info = svc.add_input(rng.normal(size=8), weight=0.1)
+        new = info["input_id"]
+        assert info["kind"] == "insert"
+        assert 0 < info["recompute_fraction"] <= 1.0
+        assert info["gap_drift"] > 0
+        # the new input's similarities are served
+        act = svc._planner.active_ids()
+        ref, _, _ = pairwise_similarity(
+            jnp.asarray(svc._table[act]), q=svc.q,
+            weights=svc._planner.active_weights(), executor="dense")
+        np.testing.assert_allclose(
+            np.asarray(sims)[np.ix_(act, act)], np.asarray(ref),
+            rtol=1e-4, atol=1e-4)
+
+        sims, info = svc.remove_input(new)
+        assert info["kind"] == "delete"
+        assert np.all(np.asarray(sims)[new] == 0.0)
+
+        _, info = svc.update_weight(0, 0.2)
+        assert info["kind"] == "reweight"
+        assert svc.stats["edits"] == 3
+        assert svc.stats["edit_reducers_total"] >= \
+            svc.stats["dirty_reducers"]
+
+    def test_edits_require_streaming_executor(self):
+        rng = np.random.default_rng(0)
+        svc = PairwiseService(1.0, executor="bucketed")
+        with pytest.raises(AssertionError, match="streaming"):
+            svc.load_table(rng.normal(size=(8, 4)).astype(np.float32))
+
+    def test_failed_add_input_rolls_back_table(self):
+        svc, rng, _, _ = self._service_with_table()
+        m0 = svc._table.shape[0]
+        with pytest.raises(InfeasibleError):
+            svc.add_input(rng.normal(size=8), weight=5.0)  # > q
+        assert svc._table.shape[0] == m0
+
+    def test_reset_stats_clears_both_coherently(self):
+        """The satellite fix: reset_stats() zeroes the request counters AND
+        the private executor instance's counters together."""
+        svc, rng, _, _ = self._service_with_table()
+        svc.add_input(rng.normal(size=8), weight=0.1)
+        assert svc.stats["requests"] > 0 and svc.stats["edits"] > 0
+        assert svc.executor_stats()["calls"] > 0
+        svc.reset_stats()
+        assert all(v == 0 for v in svc.stats.values())
+        assert all(v == 0 for v in svc.executor_stats().values())
+        # the service keeps serving after a reset
+        sims, info = svc.add_input(rng.normal(size=8), weight=0.1)
+        assert svc.stats["edits"] == 1
+        assert svc.executor_stats()["calls"] == 1
+
+    def test_streaming_on_multi_device_mesh(self):
+        """Streaming serving under a real 2-device mesh: the planner pads
+        reducer rows (full plan AND delta sub-plans) to the device count,
+        so cold builds and edits both shard (subprocess: the main test
+        process keeps its default device count)."""
+        import subprocess
+        import sys
+        import textwrap
+        script = textwrap.dedent("""
+            import os
+            os.environ["XLA_FLAGS"] = \\
+                "--xla_force_host_platform_device_count=2"
+            import jax, jax.numpy as jnp, numpy as np
+            assert len(jax.devices()) == 2, jax.devices()
+            from repro.compat import make_mesh
+            from repro.mapreduce import pairwise_similarity
+            from repro.serve import PairwiseService
+
+            rng = np.random.default_rng(0)
+            m, d = 25, 6
+            x = rng.normal(size=(m, d)).astype(np.float32)
+            w = rng.uniform(0.05, 0.33, m)
+            mesh = make_mesh((2,), ("r",))
+            svc = PairwiseService(1.0, executor="streaming", mesh=mesh)
+            sims, _ = svc.load_table(x, w)
+            for _ in range(4):
+                sims, info = svc.add_input(
+                    rng.normal(size=d).astype(np.float32), 0.1)
+            act = svc._planner.active_ids()
+            ref, _, _ = pairwise_similarity(
+                jnp.asarray(svc._table[act]), q=1.0,
+                weights=svc._planner.active_weights(), executor="dense")
+            np.testing.assert_allclose(
+                np.asarray(sims)[np.ix_(act, act)], np.asarray(ref),
+                rtol=1e-4, atol=1e-4)
+            print("STREAM_MESH_OK", info["recompute_fraction"])
+        """)
+        import os
+        res = subprocess.run(
+            [sys.executable, "-c", script],
+            capture_output=True, text=True, timeout=600,
+            env={"PYTHONPATH": "src",
+                 "PATH": "/usr/bin:/bin:/usr/local/bin",
+                 "JAX_PLATFORMS": os.environ.get("JAX_PLATFORMS", "cpu"),
+                 "HOME": os.environ.get("HOME", "/tmp")},
+        )
+        assert "STREAM_MESH_OK" in res.stdout, res.stdout + res.stderr
+
+    def test_reset_stats_non_streaming(self):
+        """reset_stats works on every executor, not just streaming."""
+        rng = np.random.default_rng(0)
+        svc = PairwiseService(1.0, executor="bucketed")
+        x = rng.normal(size=(12, 4)).astype(np.float32)
+        svc.similarity(x, weights=np.full(12, 0.2))
+        assert svc.stats["requests"] == 1
+        svc.reset_stats()
+        assert svc.stats["requests"] == 0
+        assert svc.executor_stats()["calls"] == 0
