@@ -6,8 +6,9 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: test test-fast test-schemas test-stream lint ci bench bench-quick \
-	bench-skewed bench-fused bench-sharded bench-stream
+.PHONY: test test-fast test-schemas test-stream test-x2y lint ci bench \
+	bench-quick bench-skewed bench-fused bench-sharded bench-stream \
+	bench-x2y
 
 test:
 	$(PYTHON) -m pytest -q
@@ -28,10 +29,18 @@ test-schemas:
 test-stream:
 	$(PYTHON) -m pytest -q tests/test_stream.py
 
+# rectangular X2Y execution: the executor-generic conformance matrix
+# (every registry executor x {allpairs, x2y, some-pairs} x skew profiles)
+# plus the X2Y differential suite (rect kernel vs oracle, rect partition
+# invariants, streaming X- and Y-side edits, skew-join executor routing)
+test-x2y:
+	$(PYTHON) -m pytest -q tests/test_schema_conformance.py \
+		tests/test_x2y_executors.py
+
 lint:
 	$(PYTHON) -m compileall -q src
 
-ci: lint test-schemas test-stream test
+ci: lint test-schemas test-stream test-x2y test
 
 bench:
 	$(PYTHON) benchmarks/bench_planner.py
@@ -59,3 +68,10 @@ bench-sharded:
 bench-stream:
 	JAX_PLATFORMS=$${JAX_PLATFORMS:-cpu} \
 		$(PYTHON) benchmarks/bench_stream.py
+
+# X2Y planner bounds + every registry executor on the skew_join(200x8)
+# and balanced(30x30) rectangular profiles; merges into
+# benchmarks/BENCH_x2y.json
+bench-x2y:
+	JAX_PLATFORMS=$${JAX_PLATFORMS:-cpu} \
+		$(PYTHON) -m benchmarks.bench_x2y

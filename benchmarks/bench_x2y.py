@@ -1,15 +1,36 @@
-"""Benchmark: X2Y mapping schemas vs Theorems 25 (LB) and 26 (UB)."""
+"""Benchmark: X2Y mapping schemas vs Theorems 25 (LB) and 26 (UB), plus
+rectangular execution timing across every registry executor.
+
+Two sections:
+
+* ``run``       — schema-level: planner cost vs the paper's bounds.
+* ``run_executors`` — execution-level: ``x2y_similarity`` through each
+  registry executor on the Example-3-shaped ``skew_join(200x8)`` profile
+  and the ``balanced(30x30)`` profile, asserting allclose vs dense and
+  recording median wall times.
+
+``main`` prints both tables and merges the machine-readable payload into
+``benchmarks/BENCH_x2y.json`` (same accumulate-don't-clobber contract as
+``BENCH_engine.json``; read by CI across PRs).
+"""
 
 from __future__ import annotations
+
+import os
+import time
 
 import numpy as np
 
 from repro.core import plan_x2y, x2y_comm_lower_bound, x2y_comm_upper_bound
 
+BENCH_JSON = os.path.join(os.path.dirname(__file__), "BENCH_x2y.json")
 
-def run(q: float = 1.0, seed: int = 0):
+EXEC_CASES = ("skew_join(200x8)", "balanced(30x30)")
+
+
+def _cases(q: float, seed: int):
     rng = np.random.default_rng(seed)
-    cases = {
+    return {
         "balanced(30x30)": (rng.uniform(0.05, 0.45, 30),
                             rng.uniform(0.05, 0.45, 30)),
         "skew_join(200x8)": (rng.uniform(0.01, 0.1, 200),
@@ -18,8 +39,11 @@ def run(q: float = 1.0, seed: int = 0):
                          rng.uniform(0.3, 0.5, 3)),
         "uniform(50x20)": (np.full(50, 0.2), np.full(20, 0.25)),
     }
+
+
+def run(q: float = 1.0, seed: int = 0):
     rows = []
-    for name, (wx, wy) in cases.items():
+    for name, (wx, wy) in _cases(q, seed).items():
         s = plan_x2y(wx, wy, q)
         s.validate("x2y", x_ids=range(len(wx)),
                    y_ids=range(len(wx), len(wx) + len(wy)))
@@ -30,6 +54,52 @@ def run(q: float = 1.0, seed: int = 0):
                          upper=round(ub, 2),
                          ratio=round(comm / lb, 3),
                          reducers=s.num_reducers, algo=s.algorithm))
+    return rows
+
+
+def run_executors(q: float = 1.0, d: int = 16, seed: int = 0,
+                  repeats: int = 3):
+    """Time every registry executor's rectangular path on the skewed and
+    balanced X2Y profiles; assert each matches the dense execution."""
+    import jax
+    import jax.numpy as jnp
+
+    import repro.stream  # noqa: F401  registers the streaming executor
+    from repro.mapreduce import x2y_similarity
+    from repro.mapreduce.executors import list_executors
+
+    rng = np.random.default_rng(seed)
+    cases = _cases(q, seed)
+    rows = []
+    for case in EXEC_CASES:
+        wx, wy = cases[case]
+        mx, my = len(wx), len(wy)
+        x = jnp.asarray(rng.normal(size=(mx, d)).astype(np.float32))
+        y = jnp.asarray(rng.normal(size=(my, d)).astype(np.float32))
+        schema = plan_x2y(wx, wy, q)
+        ref, _, _ = x2y_similarity(x, y, q=q, schema=schema,
+                                   executor="dense")
+        ref = np.asarray(ref)
+        for executor in list_executors():
+            sims = None
+            for _ in range(2):                       # warmup / compile
+                sims, plan, _ = x2y_similarity(
+                    x, y, q=q, schema=schema, executor=executor)
+                jax.block_until_ready(sims)
+            times = []
+            for _ in range(repeats):
+                t0 = time.perf_counter()
+                out, _, _ = x2y_similarity(
+                    x, y, q=q, schema=schema, executor=executor)
+                jax.block_until_ready(out)
+                times.append(time.perf_counter() - t0)
+            allclose = bool(np.allclose(np.asarray(sims), ref,
+                                        rtol=1e-4, atol=1e-4))
+            rows.append(dict(
+                case=case, executor=executor,
+                shape=[mx, my], reducers=plan.num_reducers,
+                wall_ms=round(float(np.median(times)) * 1e3, 2),
+                allclose=allclose))
     return rows
 
 
@@ -45,8 +115,22 @@ def main():
               f"{r['upper']:9.2f} {r['ratio']:6.3f} {r['reducers']:8d}  "
               f"{r['algo']}{'' if ok else '  ** OUT OF BOUNDS **'}")
     print(f"\n{len(rows)} cases, {bad} out of bounds")
-    return rows
+
+    erows = run_executors()
+    print(f"\n{'case':20s} {'executor':10s} {'wall_ms':>8s} {'reducers':>8s}"
+          f"  allclose")
+    for r in erows:
+        print(f"{r['case']:20s} {r['executor']:10s} {r['wall_ms']:8.2f} "
+              f"{r['reducers']:8d}  {r['allclose']}"
+              f"{'' if r['allclose'] else '  ** MISMATCH **'}")
+
+    from benchmarks.bench_engine import emit_bench_json
+    emit_bench_json({"x2y_bounds": rows, "x2y_executors": erows},
+                    BENCH_JSON)
+    return rows + erows
 
 
 if __name__ == "__main__":
+    import sys
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), os.pardir))
     main()

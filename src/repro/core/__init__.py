@@ -62,7 +62,9 @@ from .planner import (
     PlanPartition,
     bucket_summary,
     compute_buckets,
+    compute_rect_buckets,
     estimate_a2a,
+    estimate_x2y,
     naive_pairs,
     partition_plan,
     plan_a2a,
@@ -87,8 +89,8 @@ from . import unit_schemas
 __all__ = [
     "MappingSchema", "InfeasibleError",
     "plan_a2a", "plan_a2a_materialized", "plan_x2y", "plan_unit",
-    "plan_some_pairs", "estimate_a2a", "naive_pairs",
-    "compute_buckets", "bucket_summary",
+    "plan_some_pairs", "estimate_a2a", "estimate_x2y", "naive_pairs",
+    "compute_buckets", "compute_rect_buckets", "bucket_summary",
     "PlanPartition", "partition_plan", "reducer_work",
     "PLAN_CACHE", "PlanCache",
     "UNIT_REGISTRY", "A2A_REGISTRY",

@@ -66,8 +66,10 @@ __all__ = [
     "plan_unit",
     "plan_some_pairs",
     "estimate_a2a",
+    "estimate_x2y",
     "naive_pairs",
     "compute_buckets",
+    "compute_rect_buckets",
     "bucket_summary",
     "PlanPartition",
     "partition_plan",
@@ -409,13 +411,57 @@ def plan_some_pairs(weights: Sequence[float], q: float, pairs,
 # ---------------------------------------------------------------------------
 # X2Y (Section 10)
 # ---------------------------------------------------------------------------
+def _x2y_grid(wx: np.ndarray, wy: np.ndarray, q: float,
+              num_splits: int) -> list[float]:
+    """Shared bin-size grid of the X2Y estimator and builder (identical by
+    construction so ``estimate_x2y``'s winner is the schema ``plan_x2y``
+    materializes)."""
+    lo, hi = float(np.max(wx)), q - float(np.max(wy))
+    return sorted({lo, hi, q / 2, *np.linspace(lo, hi, num_splits).tolist()})
+
+
+def estimate_x2y(wx: Sequence[float], wy: Sequence[float], q: float,
+                 num_splits: int = 8) -> tuple[float, float]:
+    """Closed-form X2Y cost estimate: ``(best_b, best_cost)``.
+
+    After packing X into ``nx`` bins of size ``b`` and Y into ``ny`` bins of
+    ``q - b``, every X bin meets every Y bin, so the built schema ships
+    exactly ``ny * sum(wx) + nx * sum(wy)`` — the estimate is *exact* (the
+    same estimate-all/build-one contract as ``estimate_a2a``; enforced by
+    ``tests/test_planner_registry.py``).  Packing is O(m log m) per grid
+    point; the ``nx * ny`` reducer list is never materialized here.
+    """
+    wx = np.asarray(wx, dtype=np.float64)
+    wy = np.asarray(wy, dtype=np.float64)
+    if len(wx) == 0 or len(wy) == 0:
+        return 0.0, 0.0
+    max_x, max_y = float(np.max(wx)), float(np.max(wy))
+    if max_x + max_y > q + 1e-12:
+        raise InfeasibleError("largest X and Y inputs cannot co-reduce")
+    sx, sy = float(wx.sum()), float(wy.sum())
+    best_b, best_est = None, math.inf
+    for b in _x2y_grid(wx, wy, q, num_splits):
+        if b < max_x - 1e-12 or q - b < max_y - 1e-12:
+            continue
+        nx = len(pack(wx, b, "best"))
+        ny = len(pack(wy, q - b, "best"))
+        est = ny * sx + nx * sy
+        if est < best_est:
+            best_b, best_est = b, est
+    assert best_b is not None
+    return best_b, best_est
+
+
 def plan_x2y(wx: Sequence[float], wy: Sequence[float], q: float,
              num_splits: int = 8) -> MappingSchema:
     """Bipartite schema: X ids are 0..m-1, Y ids are m..m+n-1.
 
     Paper: pack X into bins of size b, Y into bins of q - b, cross product.
     We sweep b over a small grid (the paper fixes b = max_x resp. q/2) and
-    keep the cheapest — the paper's choices are grid points.
+    keep the cheapest — the paper's choices are grid points.  The sweep
+    runs on ``estimate_x2y``'s closed-form costs; only the winning split is
+    materialized, and ``meta['estimated_cost']`` records the estimate (==
+    the built schema's measured cost).
     """
     wx = np.asarray(wx, dtype=np.float64)
     wy = np.asarray(wy, dtype=np.float64)
@@ -423,31 +469,20 @@ def plan_x2y(wx: Sequence[float], wy: Sequence[float], q: float,
     if m == 0 or n == 0:
         return MappingSchema(np.concatenate([wx, wy]), q, [], [],
                              algorithm="empty", lower_bound=0.0)
-    max_x, max_y = float(np.max(wx)), float(np.max(wy))
-    if max_x + max_y > q + 1e-12:
-        raise InfeasibleError("largest X and Y inputs cannot co-reduce")
+    b, est = estimate_x2y(wx, wy, q, num_splits)
     w_all = np.concatenate([wx, wy])
     lb = x2y_comm_lower_bound(wx, wy, q)
-    lo, hi = max_x, q - max_y
-    grid = sorted({lo, hi, q / 2, *np.linspace(lo, hi, num_splits).tolist()})
-    best: Optional[MappingSchema] = None
-    for b in grid:
-        if b < max_x - 1e-12 or q - b < max_y - 1e-12:
-            continue
-        xbins = pack(wx, b, "best")
-        ybins = [[m + i for i in bn] for bn in pack(wy, q - b, "best")]
-        bins = [list(bn) for bn in xbins] + ybins
-        nx = len(xbins)
-        reducers = [[i, nx + j] for i in range(nx) for j in range(len(ybins))]
-        s = MappingSchema(
-            weights=w_all, q=q, bins=bins, reducers=reducers,
-            algorithm=f"x2y-binpack(b={b:.3g})",
-            meta={"b": b, "x_bins": nx, "y_bins": len(ybins)},
-            lower_bound=lb)
-        if best is None or s.communication_cost() < best.communication_cost():
-            best = s
-    assert best is not None
-    return best
+    xbins = pack(wx, b, "best")
+    ybins = [[m + i for i in bn] for bn in pack(wy, q - b, "best")]
+    bins = [list(bn) for bn in xbins] + ybins
+    nx = len(xbins)
+    reducers = [[i, nx + j] for i in range(nx) for j in range(len(ybins))]
+    return MappingSchema(
+        weights=w_all, q=q, bins=bins, reducers=reducers,
+        algorithm=f"x2y-binpack(b={b:.3g})",
+        meta={"b": b, "x_bins": nx, "y_bins": len(ybins),
+              "estimated_cost": est},
+        lower_bound=lb)
 
 
 # ---------------------------------------------------------------------------
@@ -490,6 +525,52 @@ def compute_buckets(slot_counts: Sequence[int], *, pad_slots_to: int = 1,
         widths[widths == uniq[0]] = uniq[1]
         uniq = uniq[1:]
     return [(int(w), np.flatnonzero(widths == w)) for w in uniq]
+
+
+def compute_rect_buckets(x_counts: Sequence[int], y_counts: Sequence[int],
+                         *, pad_slots_to: int = 1,
+                         max_buckets: int = 8
+                         ) -> list[tuple[int, int, np.ndarray]]:
+    """Rectangular capacity buckets: group reducers by (x-width, y-width).
+
+    The rectangular analogue of :func:`compute_buckets` for X2Y plans:
+    reducer ``r`` holds ``x_counts[r]`` X-side and ``y_counts[r]`` Y-side
+    slots; each side is padded to the smallest ``pad_slots_to * 2^j``
+    (clamped to its dense width) and reducers sharing a ``(wx, wy)`` pair
+    execute as one vmapped batch.  When more than ``max_buckets`` distinct
+    pairs appear, the two smallest-area pairs are merged into their
+    component-wise max (a reducer never lands in a bucket narrower than its
+    slot counts on either side).
+
+    Returns ``[(wx, wy, reducer_ids), ...]`` ordered by ascending area with
+    ``reducer_ids`` sorted original indices.  Empty input -> empty list.
+    """
+    xc = np.asarray(list(x_counts), dtype=np.int64)
+    yc = np.asarray(list(y_counts), dtype=np.int64)
+    assert xc.shape == yc.shape, (xc.shape, yc.shape)
+    if xc.size == 0:
+        return []
+    assert pad_slots_to >= 1 and max_buckets >= 1
+
+    def _side_widths(counts: np.ndarray) -> np.ndarray:
+        dense = -(-max(int(counts.max()), 1) // pad_slots_to) * pad_slots_to
+        tiles = np.maximum(-(-counts // pad_slots_to), 1)
+        w = pad_slots_to * (2 ** np.ceil(np.log2(tiles)).astype(np.int64))
+        return np.minimum(w, dense)
+
+    wx = _side_widths(xc)
+    wy = _side_widths(yc)
+    pairs = {(int(a), int(b)) for a, b in zip(wx, wy)}
+    while len(pairs) > max_buckets:
+        by_area = sorted(pairs, key=lambda p: (p[0] * p[1], p))
+        a, b = by_area[0], by_area[1]
+        merged = (max(a[0], b[0]), max(a[1], b[1]))
+        sel = ((wx == a[0]) & (wy == a[1])) | ((wx == b[0]) & (wy == b[1]))
+        wx[sel], wy[sel] = merged
+        pairs = (pairs - {a, b}) | {merged}
+    out = [(px, py, np.flatnonzero((wx == px) & (wy == py)))
+           for px, py in sorted(pairs, key=lambda p: (p[0] * p[1], p))]
+    return out
 
 
 def bucket_summary(schema: MappingSchema, *, pad_slots_to: int = 1,
@@ -562,6 +643,7 @@ class PlanPartition:
     comm_cost: np.ndarray
     balance_factor: float
     flop_weight: float
+    ywidths: Optional[np.ndarray] = None   # (R0,) Y-side widths (rect plans)
 
     def report(self) -> dict:
         """Telemetry dict (benchmarks, dryrun, serving dashboards)."""
@@ -582,21 +664,46 @@ def reducer_work(plan, flop_weight: float = 1.0) -> np.ndarray:
     """(R0,) per-reducer work estimate: gather slots + Gram FLOPs, both at
     the reducer's *execution* width (its capacity-bucket width — what the
     bucketed/fused pipelines actually pad to), so the balance the LPT
-    achieves is the balance the hardware sees."""
+    achieves is the balance the hardware sees.  Rectangular (X2Y) plans
+    count both sides' gather slots and the cross block's ``wx * wy``
+    FLOPs."""
     widths = _execution_widths(plan)
     w = widths.astype(np.float64)
+    yw = _execution_ywidths(plan)
+    if yw is not None:
+        y = yw.astype(np.float64)
+        return w + y + flop_weight * w * y
     return w + flop_weight * w * w
 
 
 def _execution_widths(plan) -> np.ndarray:
     """Per-real-reducer execution width: bucket width where the plan has
-    capacity buckets, the dense L otherwise."""
+    capacity buckets, the dense L otherwise.  (The X side of a rectangular
+    plan.)"""
     R0 = int(plan.num_reducers)
     widths = np.full(R0, int(plan.L) if R0 else 0, dtype=np.int64)
     for b in getattr(plan, "buckets", ()) or ():
         rows = np.asarray(b.rows)
         real = rows[(rows >= 0) & (rows < R0)].astype(np.int64)
         widths[real] = int(b.width)
+    return widths
+
+
+def _execution_ywidths(plan) -> Optional[np.ndarray]:
+    """Per-real-reducer Y-side execution width of a rectangular plan
+    (bucket ``ywidth``, dense ``Ly`` fallback) — ``None`` for square
+    plans."""
+    if getattr(plan, "yidx", None) is None:
+        return None
+    R0 = int(plan.num_reducers)
+    widths = np.full(R0, int(plan.yidx.shape[1]) if R0 else 0,
+                     dtype=np.int64)
+    for b in getattr(plan, "buckets", ()) or ():
+        if getattr(b, "yidx", None) is None:
+            continue
+        rows = np.asarray(b.rows)
+        real = rows[(rows >= 0) & (rows < R0)].astype(np.int64)
+        widths[real] = int(b.ywidth)
     return widths
 
 
@@ -625,10 +732,14 @@ def partition_plan(plan, num_shards: int, *,
     assert num_shards >= 1, num_shards
     R0 = int(plan.num_reducers)
     widths = _execution_widths(plan)
+    ywidths = _execution_ywidths(plan)
     work = reducer_work(plan, flop_weight)
     mask = np.asarray(plan.mask)
     slots = (mask[:R0].sum(axis=1).astype(np.int64) if R0
              else np.zeros(0, np.int64))
+    if getattr(plan, "ymask", None) is not None and R0:
+        slots = slots + np.asarray(plan.ymask)[:R0].sum(axis=1).astype(
+            np.int64)
     total_slots = int(slots.sum())
 
     # LPT: stable sort by descending work, min-heap of (load, shard)
@@ -654,7 +765,7 @@ def partition_plan(plan, num_shards: int, *,
     return PlanPartition(
         num_shards=num_shards, shards=shards, shard_rows=shard_rows,
         widths=widths, loads=loads, shipped_rows=shipped, comm_cost=comm,
-        balance_factor=bf, flop_weight=flop_weight)
+        balance_factor=bf, flop_weight=flop_weight, ywidths=ywidths)
 
 
 def _sub_plan(plan, rows: np.ndarray, widths: np.ndarray):
@@ -662,9 +773,12 @@ def _sub_plan(plan, rows: np.ndarray, widths: np.ndarray):
 
     idx/mask rows are copied verbatim; capacity buckets are re-grouped from
     the parent's buckets with ``rows`` re-indexed to sub-plan-local ids, so
-    the sub-plan is a self-consistent plan of the same type."""
+    the sub-plan is a self-consistent plan of the same type.  Rectangular
+    plans carry their Y-side rows (``yidx`` / ``ymask`` / bucket
+    ``ywidth``) through the same row selection."""
     idx = np.asarray(plan.idx)
     mask = np.asarray(plan.mask)
+    rect = getattr(plan, "yidx", None) is not None
     n = len(rows)
     sub_idx = idx[rows] if n else np.zeros((0, idx.shape[1]), idx.dtype)
     sub_mask = mask[rows] if n else np.zeros((0, mask.shape[1]), mask.dtype)
@@ -676,20 +790,41 @@ def _sub_plan(plan, rows: np.ndarray, widths: np.ndarray):
         if not len(pos):
             continue
         sel = b_rows[pos].astype(np.int64)               # global row ids
+        extra = {}
+        if getattr(b, "yidx", None) is not None:
+            extra = dict(ywidth=int(b.ywidth),
+                         yidx=np.asarray(b.yidx)[pos],
+                         ymask=np.asarray(b.ymask)[pos])
         buckets.append(type(b)(
             width=int(b.width),
             rows=np.asarray([local[int(g)] for g in sel], dtype=np.int64),
             idx=np.asarray(b.idx)[pos],
             mask=np.asarray(b.mask)[pos],
+            **extra,
         ))
     max_inputs = int(sub_mask.sum(axis=1).max(initial=0))
-    total_slots = max(int(mask[:plan.num_reducers].sum()), 1)
-    share = int(sub_mask.sum()) / total_slots
+    shipped = int(sub_mask.sum())
+    total_slots = int(mask[:plan.num_reducers].sum())
+    extra = {}
+    if rect:
+        ymask = np.asarray(plan.ymask)
+        yidx = np.asarray(plan.yidx)
+        sub_yidx = yidx[rows] if n else np.zeros((0, yidx.shape[1]),
+                                                 yidx.dtype)
+        sub_ymask = ymask[rows] if n else np.zeros((0, ymask.shape[1]),
+                                                   ymask.dtype)
+        shipped += int(sub_ymask.sum())
+        total_slots += int(ymask[:plan.num_reducers].sum())
+        extra = dict(yidx=sub_yidx, ymask=sub_ymask,
+                     max_y_inputs=int(sub_ymask.sum(axis=1).max(initial=0)),
+                     num_x=getattr(plan, "num_x", 0),
+                     num_y=getattr(plan, "num_y", 0))
+    share = shipped / max(total_slots, 1)
     return type(plan)(
         idx=sub_idx, mask=sub_mask, num_reducers=n,
         comm_cost=float(plan.comm_cost) * share,
         max_inputs=max_inputs, algorithm=plan.algorithm,
-        lower_bound=None, buckets=tuple(buckets))
+        lower_bound=None, buckets=tuple(buckets), **extra)
 
 
 # ---------------------------------------------------------------------------

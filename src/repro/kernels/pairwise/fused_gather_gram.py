@@ -46,6 +46,9 @@ __all__ = [
     "fused_gather_gram",
     "fused_gather_gram_ref",
     "fused_gather_gram_streamed",
+    "fused_gather_gram_rect",
+    "fused_gather_gram_rect_ref",
+    "fused_gather_gram_rect_streamed",
     "fused_traffic_model",
 ]
 
@@ -146,6 +149,167 @@ def fused_gather_gram(
         interpret=interpret,
     )(idx, mask, x)
     return out[:, :L, :L]
+
+
+# ---------------------------------------------------------------------------
+# rectangular (X2Y) variant: independent row/column gather maps
+# ---------------------------------------------------------------------------
+def _fused_rect_kernel(xidx_ref, xmsk_ref, yidx_ref, ymsk_ref, x_ref, y_ref,
+                       o_ref, xi_ref, yj_ref, sem_ref, *, blx: int,
+                       bly: int):
+    """One (reducer, x-tile, y-tile) grid step of the rectangular kernel.
+
+    Same dataflow as ``_fused_kernel`` with the two block axes decoupled:
+    the row tile gathers ``blx`` X-table rows through ``xidx``, the column
+    tile gathers ``bly`` Y-table rows through ``yidx``, and the MXU emits
+    the (blx, bly) cross block.  The square kernel is the degenerate
+    X == Y case."""
+    r = pl.program_id(0)
+    i = pl.program_id(1)
+    j = pl.program_id(2)
+
+    def gather(src_ref, idx_ref, msk_ref, tile, bl, dst_ref):
+        """DMA rows idx[r, tile*bl : (tile+1)*bl] of ``src_ref`` into VMEM,
+        zeroing masked slots; double-buffered like the square kernel."""
+        def get_cp(t):
+            row = idx_ref[r, tile * bl + t]
+            return pltpu.make_async_copy(
+                src_ref.at[pl.ds(row, 1), :], dst_ref.at[pl.ds(t, 1), :],
+                sem_ref.at[t % 2])
+
+        get_cp(0).start()
+
+        def body(t, _):
+            @pl.when(t + 1 < bl)
+            def _start_next():
+                get_cp(t + 1).start()
+            get_cp(t).wait()
+
+            @pl.when(msk_ref[r, tile * bl + t] == 0)
+            def _zero():
+                dst_ref[pl.ds(t, 1), :] = jnp.zeros_like(
+                    dst_ref[pl.ds(t, 1), :])
+            return 0
+        jax.lax.fori_loop(0, bl, body, 0)
+
+    # the x tile survives the whole y sweep; re-gather only the y tile
+    @pl.when(j == 0)
+    def _():
+        gather(x_ref, xidx_ref, xmsk_ref, i, blx, xi_ref)
+    gather(y_ref, yidx_ref, ymsk_ref, j, bly, yj_ref)
+
+    o_ref[0, :, :] = jax.lax.dot_general(
+        xi_ref[...], yj_ref[...],
+        dimension_numbers=(((1,), (1,)), ((), ())),        # Xi @ Yj^T
+        preferred_element_type=jnp.float32,
+    ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bl", "interpret", "out_dtype"))
+def fused_gather_gram_rect(
+    x: jax.Array,                  # (mx, d) replicated X table
+    y: jax.Array,                  # (my, d) replicated Y table
+    xidx: jax.Array,               # (R, Lx) int32 X-side plan rows
+    xmask: jax.Array,              # (R, Lx) bool/int32
+    yidx: jax.Array,               # (R, Ly) int32 Y-side plan rows
+    ymask: jax.Array,              # (R, Ly) bool/int32
+    *,
+    bl: int = 128,
+    interpret: bool = False,
+    out_dtype=jnp.float32,
+) -> jax.Array:                    # (R, Lx, Ly) masked per-reducer cross Gram
+    """Rectangular fused gather+Gram: the bipartite shuffle streams into
+    the MXU.  Row and column gathers run through independent index maps
+    over two (possibly distinct) tables; each side pads to its own tile
+    width, so |X| != |Y| plans never pad to a square."""
+    R, Lx = xidx.shape
+    Ly = yidx.shape[1]
+    assert x.shape[1] == y.shape[1], (x.shape, y.shape)
+    d = x.shape[1]
+    if R == 0:
+        return jnp.zeros((0, Lx, Ly), out_dtype)
+    blx = min(bl, _round_up(Lx, min_tile_sublanes(x.dtype)))
+    bly = min(bl, _round_up(Ly, min_tile_sublanes(y.dtype)))
+    Lxp = _round_up(Lx, blx)
+    Lyp = _round_up(Ly, bly)
+    n_tx = Lxp // blx
+    n_ty = Lyp // bly
+    xidx = jnp.pad(xidx.astype(jnp.int32), ((0, 0), (0, Lxp - Lx)))
+    xmask = jnp.pad(xmask.astype(jnp.int32), ((0, 0), (0, Lxp - Lx)))
+    yidx = jnp.pad(yidx.astype(jnp.int32), ((0, 0), (0, Lyp - Ly)))
+    ymask = jnp.pad(ymask.astype(jnp.int32), ((0, 0), (0, Lyp - Ly)))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,                 # xidx, xmask, yidx, ymask
+        grid=(R, n_tx, n_ty),
+        in_specs=[pl.BlockSpec(memory_space=pltpu.ANY),    # X table in HBM
+                  pl.BlockSpec(memory_space=pltpu.ANY)],   # Y table in HBM
+        out_specs=pl.BlockSpec((1, blx, bly), lambda r, i, j, *_: (r, i, j)),
+        scratch_shapes=[
+            pltpu.VMEM((blx, d), x.dtype),     # xi gather tile
+            pltpu.VMEM((bly, d), y.dtype),     # yj gather tile
+            pltpu.SemaphoreType.DMA((2,)),     # double-buffered row copies
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_fused_rect_kernel, blx=blx, bly=bly),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((R, Lxp, Lyp), out_dtype),
+        interpret=interpret,
+    )(xidx, xmask, yidx, ymask, x, y)
+    return out[:, :Lx, :Ly]
+
+
+def fused_gather_gram_rect_ref(x, y, xidx, xmask, yidx, ymask):
+    """Materializing rectangular oracle: gather both sides -> mask ->
+    batched cross Gram (fp32)."""
+    gx = jnp.take(x, xidx, axis=0) * xmask.astype(x.dtype)[..., None]
+    gy = jnp.take(y, yidx, axis=0) * ymask.astype(y.dtype)[..., None]
+    return jax.lax.dot_general(
+        gx, gy, dimension_numbers=(((2,), (2,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)
+
+
+def fused_gather_gram_rect_streamed(x, y, xidx, xmask, yidx, ymask, *,
+                                    bl: int = 128):
+    """jnp twin of the rectangular kernel's tile dataflow.
+
+    Gathers (R, bl, d) tiles per side only; the y tile is re-gathered per
+    (i, j) step exactly like the kernel, so lowered HLO traffic mirrors
+    the DMA schedule.  Non-TPU fused-executor path and dry-run target."""
+    R, Lx = xidx.shape
+    Ly = yidx.shape[1]
+    xmaskf = xmask.astype(x.dtype)[..., None]
+    ymaskf = ymask.astype(y.dtype)[..., None]
+    dims = (((2,), (2,)), ((0,), (0,)))      # batched Xi @ Yj^T
+
+    def tile(tab, idx, maskf, t, width):
+        g = jnp.take(tab,
+                     jax.lax.dynamic_slice_in_dim(idx, t * bl, width, 1),
+                     axis=0)
+        return g * jax.lax.dynamic_slice_in_dim(maskf, t * bl, width, 1)
+
+    if Lx <= bl and Ly <= bl:
+        gx = jnp.take(x, xidx, axis=0) * xmaskf
+        gy = jnp.take(y, yidx, axis=0) * ymaskf
+        return jax.lax.dot_general(gx, gy, dims,
+                                   preferred_element_type=jnp.float32)
+
+    def widths_of(L):
+        n_t = L // bl
+        return [bl] * n_t + ([L - n_t * bl] if L % bl else [])
+
+    xw = widths_of(Lx)
+    yw = widths_of(Ly)
+    rows = []
+    for i, wi in enumerate(xw):
+        gi = tile(x, xidx, xmaskf, i, wi)
+        rows.append(jnp.concatenate(
+            [jax.lax.dot_general(gi, tile(y, yidx, ymaskf, j, wj), dims,
+                                 preferred_element_type=jnp.float32)
+             for j, wj in enumerate(yw)], axis=2))
+    return jnp.concatenate(rows, axis=1)
 
 
 def fused_gather_gram_ref(x, idx, mask):

@@ -55,6 +55,7 @@ from .engine import (
     ReducerBucket,
     ReducerPlan,
     build_plan,
+    build_x2y_plan,
     configure_jit_cache,
     fused_stats,
     jit_cache_stats,
@@ -62,6 +63,8 @@ from .engine import (
     run_reducers_bucketed,
     run_reducers_fused,
     run_reducers_sharded,
+    run_reducers_x2y,
+    run_reducers_x2y_bucketed,
 )
 from .executors import (
     Executor,
@@ -73,19 +76,23 @@ from .executors import (
 from .allpairs import (
     assemble_pair_matrix,
     assemble_pair_matrix_bucketed,
+    assemble_x2y_matrix_bucketed,
     pairwise_similarity,
     some_pairs_similarity,
+    x2y_similarity,
 )
-from .skewjoin import skew_join
+from .skewjoin import join, skew_join
 
 __all__ = [
-    "ReducerBucket", "ReducerPlan", "build_plan",
+    "ReducerBucket", "ReducerPlan", "build_plan", "build_x2y_plan",
     "run_reducers", "run_reducers_bucketed", "run_reducers_fused",
-    "run_reducers_sharded",
+    "run_reducers_sharded", "run_reducers_x2y",
+    "run_reducers_x2y_bucketed",
     "Executor", "get_executor", "make_executor", "register_executor",
     "list_executors",
     "fused_stats", "jit_cache_stats", "configure_jit_cache",
-    "pairwise_similarity", "some_pairs_similarity",
+    "pairwise_similarity", "some_pairs_similarity", "x2y_similarity",
     "assemble_pair_matrix", "assemble_pair_matrix_bucketed",
-    "skew_join",
+    "assemble_x2y_matrix_bucketed",
+    "skew_join", "join",
 ]

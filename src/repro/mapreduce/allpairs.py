@@ -21,18 +21,21 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import plan_a2a, plan_some_pairs
+from repro.core import plan_a2a, plan_some_pairs, plan_x2y
 from repro.core.schema import MappingSchema
 
-from .engine import ReducerPlan, build_plan
+from .engine import ReducerPlan, build_plan, build_x2y_plan
 from .executors import get_executor
 
 __all__ = [
     "pairwise_similarity",
     "some_pairs_similarity",
+    "x2y_similarity",
     "assemble_pair_matrix",
     "assemble_pair_matrix_bucketed",
+    "assemble_x2y_matrix_bucketed",
     "block_similarity",
+    "block_similarity_x2y",
 ]
 
 
@@ -73,6 +76,41 @@ def _block_fn(metric: str, use_kernel: bool):
     return fn
 
 
+def block_similarity_x2y(xblock: jax.Array, xmask: jax.Array,
+                         yblock: jax.Array, ymask: jax.Array, *,
+                         metric: str = "dot"):
+    """(Lx, d), (Lx,), (Ly, d), (Ly,) -> (Lx, Ly) cross similarity of the
+    valid rows; invalid pairs -> 0.  The rectangular analogue of
+    :func:`block_similarity` (which is the degenerate X == Y case)."""
+    if metric == "dot":
+        sims = xblock @ yblock.T
+    elif metric == "l2":
+        n2x = jnp.sum(xblock * xblock, axis=-1)
+        n2y = jnp.sum(yblock * yblock, axis=-1)
+        sims = n2x[:, None] + n2y[None, :] - 2.0 * (xblock @ yblock.T)
+    elif metric == "cosine":
+        nx = jnp.sqrt(jnp.sum(xblock * xblock, axis=-1) + 1e-9)
+        ny = jnp.sqrt(jnp.sum(yblock * yblock, axis=-1) + 1e-9)
+        sims = (xblock @ yblock.T) / (nx[:, None] * ny[None, :])
+    else:
+        raise ValueError(metric)
+    valid = xmask[:, None] & ymask[None, :]
+    return jnp.where(valid, sims, 0.0)
+
+
+@functools.lru_cache(maxsize=None)
+def _block_fn_x2y(metric: str):
+    """Memoized two-sided reducer (same reuse contract as ``_block_fn``).
+    The ``fused_metric`` tag lets the fused/sharded executors run the
+    rectangular gather+Gram path instead of materializing the gathers."""
+    def fn(xblock, xmask, yblock, ymask):
+        return block_similarity_x2y(xblock, xmask, yblock, ymask,
+                                    metric=metric)
+    fn.__name__ = f"block_similarity_x2y_{metric}"
+    fn.fused_metric = metric
+    return fn
+
+
 def _plan_for(schema, *, pad_reducers_to: int, pad_slots_to: int):
     """``build_plan`` memoized on the schema object.
 
@@ -87,6 +125,99 @@ def _plan_for(schema, *, pad_reducers_to: int, pad_slots_to: int):
                           pad_slots_to=pad_slots_to)
         cache[key] = plan
     return plan
+
+
+def _x2y_plan_for(schema, num_x: int, *, pad_reducers_to: int,
+                  pad_slots_to: int):
+    """``build_x2y_plan`` memoized on the schema object (same contract as
+    ``_plan_for``)."""
+    key = ("x2y", num_x, pad_reducers_to, pad_slots_to)
+    cache = schema.__dict__.setdefault("_reducer_plan_cache", {})
+    plan = cache.get(key)
+    if plan is None:
+        plan = build_x2y_plan(schema, num_x,
+                              pad_reducers_to=pad_reducers_to,
+                              pad_slots_to=pad_slots_to)
+        cache[key] = plan
+    return plan
+
+
+def _pair_source_map_rect(plan: ReducerPlan, mx: int,
+                          my: int) -> np.ndarray:
+    """Rectangular inverse-shuffle map: (mx, my) int32 positions into the
+    concatenation ``[0.0, blocks_0.ravel(), ...]`` of per-bucket cross-Gram
+    stacks.  Like :func:`_pair_source_map` with decoupled axes — rows come
+    from each bucket's X-side ids, columns from its Y-side ids, and there
+    is no diagonal to zero (an (x, y) pair is never a self-pair).
+    Uncovered cells point at slot 0 (-> 0.0).  Cached on the plan."""
+    cached = plan.__dict__.get("_pair_srcmap_rect")
+    if cached is not None and cached[0] == (mx, my):
+        return cached[1]
+    srcmap = np.zeros((mx, my), np.int32)
+    base = 1
+    for b in plan.buckets:
+        Rb, Lx = b.idx.shape
+        Ly = b.yidx.shape[1]
+        rows = np.broadcast_to(b.idx[:, :, None], (Rb, Lx, Ly))
+        cols = np.broadcast_to(b.yidx[:, None, :], (Rb, Lx, Ly))
+        valid = b.mask[:, :, None] & b.ymask[:, None, :]
+        pos = np.arange(base, base + Rb * Lx * Ly,
+                        dtype=np.int64).reshape(Rb, Lx, Ly)
+        srcmap[rows[valid], cols[valid]] = pos[valid]
+        base += Rb * Lx * Ly
+    object.__setattr__(plan, "_pair_srcmap_rect", ((mx, my), srcmap))
+    return srcmap
+
+
+def _scatter_blocks_x2y(out: jax.Array, blocks: jax.Array, xidx: jax.Array,
+                        xmask: jax.Array, yidx: jax.Array,
+                        ymask: jax.Array) -> jax.Array:
+    """max-scatter (R, Lx, Ly) cross blocks into the running (mx, my)
+    matrix (initialized to -inf); duplicates agree, so max is
+    deterministic.  The streaming patch path relies on the max-combine
+    (clean cells keep their value after -inf invalidation)."""
+    Ly = yidx.shape[1]
+    Lx = xidx.shape[1]
+    rows = jnp.repeat(xidx[:, :, None], Ly, axis=2)    # (R, Lx, Ly)
+    cols = jnp.repeat(yidx[:, None, :], Lx, axis=1)
+    valid = xmask[:, :, None] & ymask[:, None, :]
+    flat_vals = jnp.where(valid, blocks, -jnp.inf).reshape(-1)
+    return out.at[rows.reshape(-1), cols.reshape(-1)].max(flat_vals)
+
+
+def _finish_x2y_matrix(out: jax.Array) -> jax.Array:
+    """Uncovered / invalidated cells -> 0 (no diagonal to zero: an (x, y)
+    pair is never a self-pair)."""
+    return jnp.where(jnp.isneginf(out), 0.0, out)
+
+
+def assemble_x2y_matrix_bucketed(per_bucket, shape: tuple[int, int]):
+    """Scatter per-bucket (Rb, Lx, Ly[, c]) cross blocks into the global
+    (mx, my[, c]) output.
+
+    ``per_bucket`` is ``run_reducers_x2y_bucketed(..., combine='buckets')``
+    output.  Invalid slots drop into a scratch row (duplicate covered
+    cells agree exactly, so plain ``set`` is deterministic), which also
+    handles payload-carrying blocks — the skew-join's (Lx, Ly, dx+dy)
+    concat outputs assemble through the same path as similarity
+    matrices."""
+    mx, my = shape
+    if not per_bucket:
+        return jnp.zeros((mx, my), dtype=jnp.float32)
+    out = None
+    for b, blocks in per_bucket:
+        trailing = blocks.shape[3:]
+        if out is None:
+            out = jnp.zeros((mx + 1, max(my, 1)) + trailing, blocks.dtype)
+        xidx = jnp.asarray(b.idx)
+        yidx = jnp.asarray(b.yidx)
+        valid = jnp.asarray(b.mask)[:, :, None] \
+            & jnp.asarray(b.ymask)[:, None, :]
+        rows = jnp.where(valid, xidx[:, :, None], mx)   # invalid -> scratch
+        cols = jnp.where(valid, yidx[:, None, :], 0)
+        out = out.at[rows.reshape(-1), cols.reshape(-1)].set(
+            blocks.reshape((-1,) + trailing))
+    return out[:mx, :my]
 
 
 def _pair_source_map(plan: ReducerPlan, m: int) -> np.ndarray:
@@ -231,6 +362,49 @@ def some_pairs_similarity(
         want[p[:, 0], p[:, 1]] = True
         want[p[:, 1], p[:, 0]] = True
     sims = jnp.where(jnp.asarray(want), sims, 0.0)
+    return sims, plan, schema
+
+
+def x2y_similarity(
+    x: jax.Array,                       # (mx, d) X-side feature rows
+    y: jax.Array,                       # (my, d) Y-side feature rows
+    *,
+    q: float,
+    wx=None,                            # X-side input sizes; default uniform
+    wy=None,                            # Y-side input sizes; default uniform
+    schema: Optional[MappingSchema] = None,
+    metric: str = "dot",
+    mesh=None,
+    use_kernel: bool = False,
+    pad_slots_to: int = 1,
+    executor: str = "bucketed",
+    interpret: bool = False,
+):
+    """Cross similarity of every X row against every Y row through an X2Y
+    mapping schema (paper Section 10).
+
+    The planner packs X into bins of size b and Y into bins of q - b; each
+    reducer meets one X bin with one Y bin, so every cross pair is covered.
+    Execution is rectangular end-to-end: reducers emit (Lx, Ly) cross
+    blocks (never a padded square), ``executor='fused'`` runs the
+    rectangular gather+Gram kernel with independent row/column gather maps,
+    ``executor='sharded'`` LPT-balances the rectangular sub-plans over the
+    mesh, and ``executor='streaming'`` serves the (mx, my) matrix as
+    patchable state.  Returns (sims (mx, my), plan, schema)."""
+    mx, my = x.shape[0], y.shape[0]
+    if schema is None:
+        wx_ = np.full(mx, 1.0) if wx is None else np.asarray(wx, float)
+        wy_ = np.full(my, 1.0) if wy is None else np.asarray(wy, float)
+        schema = plan_x2y(wx_, wy_, q)
+    plan = _x2y_plan_for(
+        schema, mx,
+        pad_reducers_to=(mesh.devices.size if mesh is not None else 1),
+        pad_slots_to=pad_slots_to,
+    )
+    fn = _block_fn_x2y(metric)
+    sims = get_executor(executor).run_x2y(
+        (x, y), plan, fn, (mx, my), mesh=mesh, use_kernel=use_kernel,
+        interpret=interpret)
     return sims, plan, schema
 
 

@@ -60,15 +60,19 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.planner import compute_buckets
+from repro.core.planner import compute_buckets, compute_rect_buckets
 from repro.core.schema import MappingSchema
 
 __all__ = [
     "ReducerBucket",
     "ReducerPlan",
     "build_plan",
+    "build_x2y_plan",
+    "build_x2y_plan_arrays",
     "run_reducers",
     "run_reducers_bucketed",
+    "run_reducers_x2y",
+    "run_reducers_x2y_bucketed",
     "run_reducers_fused",
     "run_reducers_sharded",
     "lower_reducers",
@@ -89,16 +93,28 @@ class ReducerBucket:
           padding row added so the bucket divides the device count.
     idx   (Rb, width) int32 / mask (Rb, width) bool — same layout as the
           dense plan, but only ``width`` slots wide.
+
+    Rectangular (X2Y) buckets additionally carry the Y side: ``yidx`` /
+    ``ymask`` are (Rb, ywidth) gather rows into the *Y table* (``idx``
+    then indexes the X table); ``yidx is None`` marks the square all-pairs
+    case, where ``idx`` serves both block axes.
     """
 
     width: int
     rows: np.ndarray
     idx: np.ndarray
     mask: np.ndarray
+    ywidth: int = 0
+    yidx: Optional[np.ndarray] = None
+    ymask: Optional[np.ndarray] = None
 
     @property
     def R(self) -> int:
         return int(self.idx.shape[0])
+
+    @property
+    def is_rect(self) -> bool:
+        return self.yidx is not None
 
     @property
     def num_real(self) -> int:
@@ -106,6 +122,9 @@ class ReducerBucket:
 
     @property
     def padded_elements(self) -> int:
+        """Gather slots this bucket materializes (both sides for rect)."""
+        if self.is_rect:
+            return self.R * (self.width + self.ywidth)
         return self.R * self.width
 
 
@@ -133,6 +152,17 @@ class ReducerPlan:
     algorithm: str = "unknown"             # winning strategy (provenance)
     lower_bound: Optional[float] = None    # paper's comm lower bound
     buckets: tuple[ReducerBucket, ...] = ()
+    # rectangular (X2Y) extension: per-reducer Y-side gather rows.  When
+    # ``yidx is None`` the plan is the square all-pairs degenerate case
+    # (X == Y) and ``idx``/``mask`` drive both block axes; otherwise
+    # ``idx`` indexes the X table and ``yidx`` the Y table, and reducer
+    # outputs are (Lx, Ly) cross blocks assembled into an (num_x, num_y)
+    # matrix.
+    yidx: Optional[np.ndarray] = None      # (R, Ly) int32 Y-table rows
+    ymask: Optional[np.ndarray] = None     # (R, Ly) bool Y-slot validity
+    max_y_inputs: int = 0
+    num_x: int = 0                         # X-table size (rect plans)
+    num_y: int = 0                         # Y-table size (rect plans)
 
     @property
     def R(self) -> int:
@@ -141,6 +171,16 @@ class ReducerPlan:
     @property
     def L(self) -> int:
         return int(self.idx.shape[1])
+
+    @property
+    def is_rect(self) -> bool:
+        """True for rectangular (X2Y) plans carrying a Y side."""
+        return self.yidx is not None
+
+    @property
+    def Ly(self) -> int:
+        """Dense Y-side slot count (== L for square plans)."""
+        return int(self.yidx.shape[1]) if self.is_rect else self.L
 
     @property
     def optimality_gap(self) -> Optional[float]:
@@ -152,7 +192,10 @@ class ReducerPlan:
     # ---------------------------------------------------------- telemetry
     @property
     def dense_padded_elements(self) -> int:
-        """Gather slots the dense executor materializes (R x L)."""
+        """Gather slots the dense executor materializes (R x L; both sides
+        for rectangular plans)."""
+        if self.is_rect:
+            return self.R * (self.L + self.Ly)
         return self.R * self.L
 
     @property
@@ -222,6 +265,101 @@ def build_plan(schema: MappingSchema, *, pad_reducers_to: int = 1,
                        algorithm=schema.algorithm,
                        lower_bound=schema.lower_bound,
                        buckets=buckets)
+
+
+# ---------------------------------------------------------------------------
+# rectangular (X2Y) plans: per-reducer X-side and Y-side index lists
+# ---------------------------------------------------------------------------
+def _build_rect_buckets(xs: list[list[int]], ys: list[list[int]], *,
+                        pad_slots_to: int, pad_reducers_to: int,
+                        max_buckets: int) -> tuple[ReducerBucket, ...]:
+    """Rectangular capacity buckets: reducers grouped by (wx, wy) width
+    pairs (``compute_rect_buckets``), each side padded to its own
+    power-of-two width; rows padded to a multiple of ``pad_reducers_to``."""
+    out = []
+    for wx, wy, rows in compute_rect_buckets(
+            [len(a) for a in xs], [len(a) for a in ys],
+            pad_slots_to=pad_slots_to, max_buckets=max_buckets):
+        Rb = -(-max(len(rows), 1) // pad_reducers_to) * pad_reducers_to
+        idx = np.zeros((Rb, wx), dtype=np.int32)
+        mask = np.zeros((Rb, wx), dtype=bool)
+        yidx = np.zeros((Rb, wy), dtype=np.int32)
+        ymask = np.zeros((Rb, wy), dtype=bool)
+        rows_padded = np.full(Rb, -1, dtype=np.int64)
+        rows_padded[: len(rows)] = rows
+        for i, r in enumerate(rows):
+            a, b = xs[r], ys[r]
+            idx[i, : len(a)] = a
+            mask[i, : len(a)] = True
+            yidx[i, : len(b)] = b
+            ymask[i, : len(b)] = True
+        out.append(ReducerBucket(width=wx, rows=rows_padded, idx=idx,
+                                 mask=mask, ywidth=wy, yidx=yidx,
+                                 ymask=ymask))
+    return tuple(out)
+
+
+def build_x2y_plan_arrays(
+    xs: list[list[int]],               # per-reducer X-table row ids
+    ys: list[list[int]],               # per-reducer Y-table row ids
+    *,
+    num_x: int,
+    num_y: int,
+    comm_cost: float = 0.0,
+    algorithm: str = "x2y",
+    lower_bound: Optional[float] = None,
+    pad_reducers_to: int = 1,
+    pad_slots_to: int = 1,
+    max_buckets: int = 8,
+) -> ReducerPlan:
+    """Rectangular plan from explicit per-reducer X/Y id lists.
+
+    The low-level builder ``build_x2y_plan`` and the streaming X2Y planner
+    share: reducer ``r`` gathers ``xs[r]`` from the X table and ``ys[r]``
+    from the Y table and emits the (|xs[r]|, |ys[r]|) cross block."""
+    assert len(xs) == len(ys), (len(xs), len(ys))
+    R0 = len(xs)
+    Lx0 = max((len(a) for a in xs), default=1)
+    Ly0 = max((len(a) for a in ys), default=1)
+    Lx = -(-Lx0 // pad_slots_to) * pad_slots_to
+    Ly = -(-Ly0 // pad_slots_to) * pad_slots_to
+    R = -(-max(R0, 1) // pad_reducers_to) * pad_reducers_to
+    idx = np.zeros((R, Lx), dtype=np.int32)
+    mask = np.zeros((R, Lx), dtype=bool)
+    yidx = np.zeros((R, Ly), dtype=np.int32)
+    ymask = np.zeros((R, Ly), dtype=bool)
+    for r in range(R0):
+        a, b = xs[r], ys[r]
+        idx[r, : len(a)] = a
+        mask[r, : len(a)] = True
+        yidx[r, : len(b)] = b
+        ymask[r, : len(b)] = True
+    buckets = _build_rect_buckets(xs, ys, pad_slots_to=pad_slots_to,
+                                  pad_reducers_to=pad_reducers_to,
+                                  max_buckets=max_buckets)
+    return ReducerPlan(
+        idx=idx, mask=mask, num_reducers=R0, comm_cost=float(comm_cost),
+        max_inputs=Lx0, algorithm=algorithm, lower_bound=lower_bound,
+        buckets=buckets, yidx=yidx, ymask=ymask, max_y_inputs=Ly0,
+        num_x=int(num_x), num_y=int(num_y))
+
+
+def build_x2y_plan(schema: MappingSchema, num_x: int, *,
+                   pad_reducers_to: int = 1, pad_slots_to: int = 1,
+                   max_buckets: int = 8) -> ReducerPlan:
+    """Flatten an X2Y schema (``plan_x2y`` convention: global ids
+    ``0..num_x-1`` are X, ``num_x..`` are Y) into a rectangular plan:
+    each reducer's expanded ids are split at the X/Y boundary, Y ids are
+    re-based to Y-table-local rows, and capacity buckets group reducers by
+    (wx, wy) power-of-two width pairs."""
+    expanded = schema.expand()
+    xs = [[i for i in ids if i < num_x] for ids in expanded]
+    ys = [[i - num_x for i in ids if i >= num_x] for ids in expanded]
+    return build_x2y_plan_arrays(
+        xs, ys, num_x=num_x, num_y=len(schema.weights) - num_x,
+        comm_cost=schema.communication_cost(), algorithm=schema.algorithm,
+        lower_bound=schema.lower_bound, pad_reducers_to=pad_reducers_to,
+        pad_slots_to=pad_slots_to, max_buckets=max_buckets)
 
 
 def _shardings(mesh, shard_axes):
@@ -435,6 +573,116 @@ def run_reducers_bucketed(
         return per_bucket
 
     dense_shapes = _dense_out_shapes(plan, reducer_fn, inputs)
+    leaves_t, treedef = jax.tree.flatten(dense_shapes)
+    acc = [jnp.zeros((plan.R,) + t.shape, t.dtype) for t in leaves_t]
+    for b, out in per_bucket:
+        valid = b.rows >= 0                      # static numpy mask
+        rows = jnp.asarray(b.rows[valid])
+        for i, leaf in enumerate(jax.tree.flatten(out)[0]):
+            padded = _pad_leaf_to(leaf, leaves_t[i].shape)
+            acc[i] = acc[i].at[rows].set(padded[np.flatnonzero(valid)])
+    return jax.tree.unflatten(treedef, acc)
+
+
+# ---------------------------------------------------------------------------
+# rectangular (X2Y) runners
+# ---------------------------------------------------------------------------
+def _gather_reduce_x2y(xt, yt, xidx, xmask, yidx, ymask, reducer_fn):
+    gx = jnp.take(xt, xidx, axis=0)              # (R, Lx, d) — X-side shuffle
+    gx = jnp.where(xmask[..., None], gx, 0)
+    gy = jnp.take(yt, yidx, axis=0)              # (R, Ly, d) — Y-side shuffle
+    gy = jnp.where(ymask[..., None], gy, 0)
+    return jax.vmap(reducer_fn)(gx, xmask, gy, ymask)
+
+
+def _get_jitted_x2y(reducer_fn, mesh, shard_axes):
+    def factory():
+        run = partial(_gather_reduce_x2y, reducer_fn=reducer_fn)
+        if mesh is None:
+            return jax.jit(run)
+        red_sharding, rep = _shardings(mesh, shard_axes)
+        return jax.jit(run,
+                       in_shardings=(rep, rep, red_sharding, red_sharding,
+                                     red_sharding, red_sharding),
+                       out_shardings=red_sharding)
+    return _cache_get(("x2y", reducer_fn, mesh, shard_axes), factory)
+
+
+def _as_tables(tables):
+    """(x_table, y_table) from a pair or a single shared table (X == Y)."""
+    if isinstance(tables, (tuple, list)):
+        xt, yt = tables
+    else:
+        xt = yt = tables
+    return jnp.asarray(xt), jnp.asarray(yt)
+
+
+def run_reducers_x2y(
+    tables,                                # (x (mx, dx), y (my, dy)) pair
+    plan: ReducerPlan,
+    reducer_fn: Callable,
+    *,
+    mesh: Optional[jax.sharding.Mesh] = None,
+    shard_axes: Optional[tuple[str, ...]] = None,
+):
+    """Dense rectangular execution: ``reducer_fn(xblock (Lx, dx),
+    xmask (Lx,), yblock (Ly, dy), ymask (Ly,)) -> pytree`` per reducer.
+
+    The two gathers are the bipartite shuffle — X rows and Y rows ship to
+    their reducer slots independently.  ``tables`` may be one array (shared
+    table) or an (x, y) pair."""
+    assert plan.is_rect, "run_reducers_x2y needs a rectangular plan"
+    xt, yt = _as_tables(tables)
+    shard_axes = tuple(shard_axes) if shard_axes is not None else None
+    fn = _get_jitted_x2y(reducer_fn, mesh, shard_axes)
+    return fn(xt, yt, jnp.asarray(plan.idx), jnp.asarray(plan.mask),
+              jnp.asarray(plan.yidx), jnp.asarray(plan.ymask))
+
+
+def _dense_out_shapes_x2y(plan: ReducerPlan, reducer_fn, xt, yt):
+    xb = jax.ShapeDtypeStruct((plan.L,) + xt.shape[1:], xt.dtype)
+    xm = jax.ShapeDtypeStruct((plan.L,), jnp.bool_)
+    yb = jax.ShapeDtypeStruct((plan.Ly,) + yt.shape[1:], yt.dtype)
+    ym = jax.ShapeDtypeStruct((plan.Ly,), jnp.bool_)
+    return jax.eval_shape(reducer_fn, xb, xm, yb, ym)
+
+
+def run_reducers_x2y_bucketed(
+    tables,
+    plan: ReducerPlan,
+    reducer_fn: Callable,
+    *,
+    mesh: Optional[jax.sharding.Mesh] = None,
+    shard_axes: Optional[tuple[str, ...]] = None,
+    combine: str = "dense",
+):
+    """Skew-aware rectangular execution: one vmapped double-gather+reduce
+    per (wx, wy) capacity bucket.  Semantics mirror
+    :func:`run_reducers_bucketed`: ``combine='dense'`` scatters bucket
+    outputs (padded on both slot axes to the dense (Lx, Ly)) back into
+    original reducer order; ``combine='buckets'`` returns
+    ``[(bucket, out_pytree), ...]`` unpadded."""
+    assert combine in ("dense", "buckets"), combine
+    assert plan.is_rect, "run_reducers_x2y_bucketed needs a rect plan"
+    buckets = plan.buckets
+    if not buckets:
+        out = run_reducers_x2y(tables, plan, reducer_fn, mesh=mesh,
+                               shard_axes=shard_axes)
+        return out if combine == "dense" else []
+
+    xt, yt = _as_tables(tables)
+    shard_axes = tuple(shard_axes) if shard_axes is not None else None
+    fn = _get_jitted_x2y(reducer_fn, mesh, shard_axes)
+
+    per_bucket = [
+        (b, fn(xt, yt, jnp.asarray(b.idx), jnp.asarray(b.mask),
+               jnp.asarray(b.yidx), jnp.asarray(b.ymask)))
+        for b in buckets
+    ]
+    if combine == "buckets":
+        return per_bucket
+
+    dense_shapes = _dense_out_shapes_x2y(plan, reducer_fn, xt, yt)
     leaves_t, treedef = jax.tree.flatten(dense_shapes)
     acc = [jnp.zeros((plan.R,) + t.shape, t.dtype) for t in leaves_t]
     for b, out in per_bucket:

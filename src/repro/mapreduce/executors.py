@@ -54,10 +54,13 @@ from . import engine as _engine
 from .engine import (
     ReducerBucket,
     ReducerPlan,
+    _as_tables,
     _cache_get,
     _shardings,
     run_reducers,
     run_reducers_bucketed,
+    run_reducers_x2y,
+    run_reducers_x2y_bucketed,
 )
 
 __all__ = [
@@ -101,6 +104,19 @@ class Executor:
                   *, mesh=None, use_kernel: bool = False,
                   interpret: bool = False):
         """Execute the plan and assemble the (m, m) pair matrix."""
+        raise NotImplementedError
+
+    def run_x2y(self, tables, plan: ReducerPlan, reducer_fn: Callable,
+                shape: tuple[int, int], *, mesh=None,
+                use_kernel: bool = False, interpret: bool = False):
+        """Execute a rectangular (X2Y) plan and assemble the (mx, my[, c])
+        cross output.
+
+        ``tables`` is an (x_table, y_table) pair (or one shared array);
+        ``reducer_fn(xblock, xmask, yblock, ymask)`` emits (Lx, Ly[, c])
+        cross blocks; ``shape = (mx, my)`` sizes the assembled output.
+        The square ``run_pairs`` is the degenerate X == Y case of this
+        method."""
         raise NotImplementedError
 
     def lower(self, input_shape, plan: ReducerPlan, *, reducer_fn=None,
@@ -185,6 +201,15 @@ class DenseExecutor(Executor):
         blocks = run_reducers(x, plan, reducer_fn, mesh=mesh)  # (R, L, L)
         return assemble_pair_matrix(blocks, plan, m)
 
+    def run_x2y(self, tables, plan, reducer_fn, shape, *, mesh=None,
+                use_kernel=False, interpret=False):
+        from .allpairs import assemble_x2y_matrix_bucketed
+        self._count("calls")
+        blocks = run_reducers_x2y(tables, plan, reducer_fn, mesh=mesh)
+        # the plan's dense idx/mask/yidx/ymask rows are bucket-shaped, so
+        # the whole plan assembles as a single "bucket"
+        return assemble_x2y_matrix_bucketed([(plan, blocks)], shape)
+
     def lower(self, input_shape, plan, *, reducer_fn=None, metric=None,
               mesh=None, dtype=jnp.float32, shard_axes=None, **kwargs):
         from .engine import lower_reducers
@@ -211,6 +236,14 @@ class BucketedExecutor(Executor):
         per_bucket = run_reducers_bucketed(x, plan, reducer_fn, mesh=mesh,
                                            combine="buckets")
         return assemble_pair_matrix_bucketed(per_bucket, m)
+
+    def run_x2y(self, tables, plan, reducer_fn, shape, *, mesh=None,
+                use_kernel=False, interpret=False):
+        from .allpairs import assemble_x2y_matrix_bucketed
+        self._count("calls")
+        per_bucket = run_reducers_x2y_bucketed(tables, plan, reducer_fn,
+                                               mesh=mesh, combine="buckets")
+        return assemble_x2y_matrix_bucketed(per_bucket, shape)
 
     def lower(self, input_shape, plan, *, reducer_fn=None, metric=None,
               mesh=None, dtype=jnp.float32, shard_axes=None, **kwargs):
@@ -244,6 +277,28 @@ def _finish_fused_blocks(g, mask, metric: str):
         else:
             raise ValueError(metric)
     valid = mask[:, :, None] & mask[:, None, :]
+    return jnp.where(valid, g, 0.0)
+
+
+def _finish_rect_blocks(g, xidx, xmask, yidx, ymask, n2x, n2y, metric: str):
+    """Metric post-processing of a masked rectangular cross-Gram stack.
+
+    Mirrors ``allpairs.block_similarity_x2y`` exactly.  Cross blocks carry
+    no Gram diagonal, so per-row squared norms are gathered from the
+    table-level vectors ``n2x``/``n2y`` (masked slots -> 0, matching the
+    zero-masked gathers of the reference path); invalid pairs -> 0.
+    """
+    if metric != "dot":
+        gx = jnp.where(xmask, jnp.take(n2x, xidx, axis=0), 0.0)  # (Rb, Lx)
+        gy = jnp.where(ymask, jnp.take(n2y, yidx, axis=0), 0.0)  # (Rb, Ly)
+        if metric == "l2":
+            g = gx[:, :, None] + gy[:, None, :] - 2.0 * g
+        elif metric == "cosine":
+            g = g / (jnp.sqrt(gx + 1e-9)[:, :, None]
+                     * jnp.sqrt(gy + 1e-9)[:, None, :])
+        else:
+            raise ValueError(metric)
+    valid = xmask[:, :, None] & ymask[:, None, :]
     return jnp.where(valid, g, 0.0)
 
 
@@ -288,6 +343,38 @@ def _make_fused_jitted(metric, combine, mesh, shard_axes, use_kernel,
     red_sharding, rep = _shardings(mesh, shard_axes)
     return jax.jit(run, in_shardings=(rep, red_sharding, rep),
                    static_argnums=(3, 4))
+
+
+def _make_fused_rect_jitted(metric, mesh, shard_axes, use_kernel,
+                            interpret, bl):
+    from repro.kernels.pairwise.fused_gather_gram import (
+        fused_gather_gram_rect,
+        fused_gather_gram_rect_streamed,
+    )
+
+    def run(xt, yt, buckets, srcmap):
+        n2x = jnp.sum(xt.astype(jnp.float32) ** 2, axis=-1)   # (mx,)
+        n2y = jnp.sum(yt.astype(jnp.float32) ** 2, axis=-1)   # (my,)
+        vals = [jnp.zeros((1,), jnp.float32)]
+        for xidx, xmsk, yidx, ymsk in buckets:
+            if use_kernel:
+                g = fused_gather_gram_rect(xt, yt, xidx, xmsk, yidx, ymsk,
+                                           bl=bl, interpret=interpret)
+            else:
+                g = fused_gather_gram_rect_streamed(xt, yt, xidx, xmsk,
+                                                    yidx, ymsk, bl=bl)
+            g = _finish_rect_blocks(g, xidx, xmsk.astype(bool),
+                                    yidx, ymsk.astype(bool), n2x, n2y,
+                                    metric)
+            vals.append(g.reshape(-1))
+        # rectangular inverse shuffle: ONE assembly gather through the
+        # host-precomputed source map (slot 0 -> 0.0 for uncovered cells)
+        return jnp.take(jnp.concatenate(vals), srcmap, axis=0)
+
+    if mesh is None:
+        return jax.jit(run)
+    red_sharding, rep = _shardings(mesh, shard_axes)
+    return jax.jit(run, in_shardings=(rep, rep, red_sharding, rep))
 
 
 class FusedExecutor(Executor):
@@ -367,6 +454,39 @@ class FusedExecutor(Executor):
             x, plan, reducer_fn, mesh=mesh,
             postprocess=_assemble_from_srcmap, postprocess_arg=srcmap,
             use_kernel=(True if use_kernel else None), interpret=interpret)
+
+    def run_x2y(self, tables, plan, reducer_fn, shape, *, mesh=None,
+                use_kernel=False, interpret=False, bl: int = 128):
+        """Rectangular fused path: per rect bucket, independent X/Y gather
+        maps drive the rectangular gather+Gram kernel (streamed jnp twin
+        off-TPU), and ONE inverse-shuffle gather assembles the (mx, my)
+        matrix.  Non-Gram reducers fall back to the rect-bucketed path
+        (identical outputs; counted)."""
+        from .allpairs import (
+            _pair_source_map_rect,
+            assemble_x2y_matrix_bucketed,
+        )
+        self._count("calls")
+        metric = getattr(reducer_fn, "fused_metric", None)
+        if metric is None or not plan.buckets:
+            self._count("fallbacks")
+            per_bucket = run_reducers_x2y_bucketed(
+                tables, plan, reducer_fn, mesh=mesh, combine="buckets")
+            return assemble_x2y_matrix_bucketed(per_bucket, shape)
+        uk = True if use_kernel else jax.default_backend() == "tpu"
+        self._count("kernel" if uk else "streamed")
+        srcmap = jnp.asarray(_pair_source_map_rect(plan, *shape))
+        fn = _cache_get(
+            ("fused-x2y", metric, mesh, None, bool(uk), bool(interpret),
+             bl),
+            lambda: _make_fused_rect_jitted(metric, mesh, None, uk,
+                                            interpret, bl))
+        buckets = tuple(
+            (jnp.asarray(b.idx), jnp.asarray(b.mask),
+             jnp.asarray(b.yidx), jnp.asarray(b.ymask))
+            for b in plan.buckets)
+        xt, yt = _as_tables(tables)
+        return fn(xt, yt, buckets, srcmap)
 
     def lower(self, input_shape, plan, *, reducer_fn=None, metric=None,
               mesh=None, dtype=jnp.float32, shard_axes=None,
@@ -479,6 +599,81 @@ def _sharded_srcmap(groups, m: int) -> np.ndarray:
     return srcmap
 
 
+def _stacked_rect_groups(plan: ReducerPlan, part: PlanPartition):
+    """Rectangular analogue of :func:`_stacked_groups`: groups keyed by the
+    (wx, wy) execution-width *pair*, each stacked into
+    ``xidx/xmask (S, Rw, wx)``, ``yidx/ymask (S, Rw, wy)``, ``rows (S, Rw)``
+    device arrays (padding rows masked, rows -> plan.R)."""
+    S = part.num_shards
+    R0 = plan.num_reducers
+    widths = part.widths
+    ywidths = part.ywidths
+    src = {}
+    if plan.buckets:
+        for b in plan.buckets:
+            rows = np.asarray(b.rows)
+            for i, g in enumerate(rows):
+                if 0 <= g < R0:
+                    src[int(g)] = (np.asarray(b.idx)[i],
+                                   np.asarray(b.mask)[i],
+                                   np.asarray(b.yidx)[i],
+                                   np.asarray(b.ymask)[i])
+    else:
+        for r in range(R0):
+            src[r] = (np.asarray(plan.idx)[r], np.asarray(plan.mask)[r],
+                      np.asarray(plan.yidx)[r], np.asarray(plan.ymask)[r])
+
+    keys = sorted({(int(widths[r]), int(ywidths[r]))
+                   for r in range(R0)}) if R0 else []
+    groups = []
+    for wx, wy in keys:
+        per_shard = [rows[(widths[rows] == wx) & (ywidths[rows] == wy)]
+                     for rows in part.shard_rows]
+        Rw = max((len(p) for p in per_shard), default=0)
+        if Rw == 0:
+            continue
+        xidx = np.zeros((S, Rw, wx), np.int32)
+        xmask = np.zeros((S, Rw, wx), bool)
+        yidx = np.zeros((S, Rw, wy), np.int32)
+        ymask = np.zeros((S, Rw, wy), bool)
+        rows_out = np.full((S, Rw), plan.R, np.int32)   # padding -> row R
+        for s, p in enumerate(per_shard):
+            for k, g in enumerate(p):
+                xi, xm, yi, ym = src[int(g)]
+                xidx[s, k, :] = xi[:wx]
+                xmask[s, k, :] = xm[:wx]
+                yidx[s, k, :] = yi[:wy]
+                ymask[s, k, :] = ym[:wy]
+                rows_out[s, k] = int(g)
+        groups.append((xidx, xmask, yidx, ymask, rows_out))
+    return groups
+
+
+def _sharded_rect_srcmap(groups, shape: tuple[int, int]) -> np.ndarray:
+    """Rectangular cross-shard assembly map: (mx, my) int32 positions into
+    ``[0.0, group_0.ravel(), ...]`` of the stacked per-(wx, wy) cross-Gram
+    outputs (each ``(S, Rw, wx, wy)``).  No diagonal to zero — an (x, y)
+    pair is never a self-pair; uncovered cells point at slot 0."""
+    mx, my = shape
+    srcmap = np.zeros((mx, my), np.int32)
+    base = 1
+    for xidx, xmask, yidx, ymask, _rows in groups:
+        S, Rw, wx = xidx.shape
+        wy = yidx.shape[2]
+        fx = xidx.reshape(S * Rw, wx)
+        fxm = xmask.reshape(S * Rw, wx)
+        fy = yidx.reshape(S * Rw, wy)
+        fym = ymask.reshape(S * Rw, wy)
+        rows = np.broadcast_to(fx[:, :, None], (S * Rw, wx, wy))
+        cols = np.broadcast_to(fy[:, None, :], (S * Rw, wx, wy))
+        valid = fxm[:, :, None] & fym[:, None, :]
+        pos = np.arange(base, base + S * Rw * wx * wy,
+                        dtype=np.int64).reshape(S * Rw, wx, wy)
+        srcmap[rows[valid], cols[valid]] = pos[valid]
+        base += S * Rw * wx * wy
+    return srcmap
+
+
 def _make_sharded_jitted(metric, combine, mesh, axes, use_kernel,
                          interpret, bl):
     from repro.kernels.pairwise.fused_gather_gram import (
@@ -523,6 +718,45 @@ def _make_sharded_jitted(metric, combine, mesh, axes, use_kernel,
         return acc[:R]
 
     return jax.jit(run, static_argnums=(3, 4))
+
+
+def _make_sharded_rect_jitted(metric, mesh, axes, use_kernel, interpret,
+                              bl):
+    from repro.kernels.pairwise.fused_gather_gram import (
+        fused_gather_gram_rect,
+        fused_gather_gram_rect_streamed,
+    )
+
+    P = jax.sharding.PartitionSpec
+
+    def per_shard_fn(xt, yt, n2x, n2y, xidx, xmsk, yidx, ymsk):
+        # local shapes: xt/yt/n2x/n2y replicated, idx/msk (1, Rw, w)
+        if use_kernel:
+            g = fused_gather_gram_rect(xt, yt, xidx[0], xmsk[0], yidx[0],
+                                       ymsk[0], bl=bl, interpret=interpret)
+        else:
+            g = fused_gather_gram_rect_streamed(xt, yt, xidx[0], xmsk[0],
+                                                yidx[0], ymsk[0], bl=bl)
+        return _finish_rect_blocks(g, xidx[0], xmsk[0].astype(bool),
+                                   yidx[0], ymsk[0].astype(bool),
+                                   n2x, n2y, metric)[None]  # (1, Rw, wx, wy)
+
+    def run(xt, yt, groups, srcmap):
+        n2x = jnp.sum(xt.astype(jnp.float32) ** 2, axis=-1)
+        n2y = jnp.sum(yt.astype(jnp.float32) ** 2, axis=-1)
+        vals = [jnp.zeros((1,), jnp.float32)]
+        for xidx, xmsk, yidx, ymsk, _rows in groups:
+            g = shard_map(per_shard_fn, mesh=mesh,
+                          in_specs=(P(), P(), P(), P(), P(axes), P(axes),
+                                    P(axes), P(axes)),
+                          out_specs=P(axes))(
+                xt, yt, n2x, n2y, xidx, xmsk, yidx, ymsk)
+            vals.append(g.reshape(-1))
+        # ONE cross-shard assembly gather of the (mx, my) matrix — the
+        # only cross-shard communication in the program
+        return jnp.take(jnp.concatenate(vals), srcmap, axis=0)
+
+    return jax.jit(run)
 
 
 class ShardedExecutor(Executor):
@@ -589,6 +823,28 @@ class ShardedExecutor(Executor):
             cache[(num_shards, m)] = srcmap
         return srcmap
 
+    def _rect_groups_for(self, plan, part):
+        cache = plan.__dict__.get("_shard_rect_groups_cache")
+        if cache is None:
+            cache = {}
+            object.__setattr__(plan, "_shard_rect_groups_cache", cache)
+        groups = cache.get(part.num_shards)
+        if groups is None:
+            groups = _stacked_rect_groups(plan, part)
+            cache[part.num_shards] = groups
+        return groups
+
+    def _rect_srcmap_for(self, plan, groups, num_shards: int, shape):
+        cache = plan.__dict__.get("_shard_rect_srcmap_cache")
+        if cache is None:
+            cache = {}
+            object.__setattr__(plan, "_shard_rect_srcmap_cache", cache)
+        srcmap = cache.get((num_shards, shape))
+        if srcmap is None:
+            srcmap = _sharded_rect_srcmap(groups, shape)
+            cache[(num_shards, shape)] = srcmap
+        return srcmap
+
     def _note(self, part: PlanPartition) -> None:
         self._stats["num_shards"] = part.num_shards
         self._stats["balance_factor"] = float(part.balance_factor)
@@ -646,6 +902,39 @@ class ShardedExecutor(Executor):
         return self._dispatch(x, plan, metric, "pairs", m, mesh, None,
                               (True if use_kernel else None), interpret,
                               128)
+
+    def run_x2y(self, tables, plan, reducer_fn, shape, *, mesh=None,
+                use_kernel=False, interpret=False, bl: int = 128):
+        """LPT-balance the rectangular plan over the mesh (per-reducer work
+        = wx + wy + flop·wx·wy), run the rectangular gather+Gram tile
+        pipeline per shard under ``shard_map``, and assemble the (mx, my)
+        matrix with ONE cross-shard gather.  Non-Gram reducers fall back
+        to the rect-bucketed path (counted)."""
+        from .allpairs import assemble_x2y_matrix_bucketed
+        self._count("calls")
+        metric = getattr(reducer_fn, "fused_metric", None)
+        if metric is None or plan.num_reducers == 0:
+            self._count("fallbacks")
+            per_bucket = run_reducers_x2y_bucketed(
+                tables, plan, reducer_fn, mesh=mesh, combine="buckets")
+            return assemble_x2y_matrix_bucketed(per_bucket, shape)
+        mesh, axes, S = _shard_mesh(mesh, None)
+        part = self.partition(plan, S)
+        groups = self._rect_groups_for(plan, part)
+        self._count("sharded")
+        self._note(part)
+        srcmap = jnp.asarray(
+            self._rect_srcmap_for(plan, groups, S, tuple(shape)))
+        uk = True if use_kernel else jax.default_backend() == "tpu"
+        fn = _cache_get(
+            ("sharded-x2y", metric, mesh, axes, bool(uk), bool(interpret),
+             bl),
+            lambda: _make_sharded_rect_jitted(metric, mesh, axes, uk,
+                                              interpret, bl))
+        jgroups = tuple(
+            tuple(jnp.asarray(a) for a in grp) for grp in groups)
+        xt, yt = _as_tables(tables)
+        return fn(xt, yt, jgroups, srcmap)
 
     def lower(self, input_shape, plan, *, reducer_fn=None, metric=None,
               mesh=None, dtype=jnp.float32, shard_axes=None,

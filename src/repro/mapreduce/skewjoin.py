@@ -2,7 +2,8 @@
 
 All X- and Y-tuples sharing the heavy-hitter B-value must pairwise meet
 (Example 3 of the paper).  The X2Y planner packs tuples into bins; each
-reducer joins one X-bin against one Y-bin.
+reducer joins one X-bin against one Y-bin, and execution dispatches
+through the executor registry like every other application.
 """
 
 from __future__ import annotations
@@ -16,7 +17,26 @@ import numpy as np
 from repro.core import plan_x2y
 from repro.core.schema import MappingSchema
 
-__all__ = ["skew_join"]
+__all__ = ["skew_join", "join", "join_block"]
+
+
+def join_block(xblock: jax.Array, xmask: jax.Array,
+               yblock: jax.Array, ymask: jax.Array) -> jax.Array:
+    """Per-reducer cross-product-concat: (Lx, dx), (Lx,), (Ly, dy), (Ly,)
+    -> (Lx, Ly, dx + dy) joined payloads; invalid pairs -> 0.
+
+    This is the skew join's reducer for the rectangular executor protocol
+    (``run_x2y``).  It is *not* a Gram block (no ``fused_metric`` tag), so
+    the fused/sharded/streaming executors legitimately fall back to the
+    rect-bucketed engine path — counted in their ``stats()`` — while
+    dispatch still flows through each executor's ``run_x2y``.
+    """
+    Lx, Ly = xblock.shape[0], yblock.shape[0]
+    gx = jnp.broadcast_to(xblock[:, None, :], (Lx, Ly, xblock.shape[-1]))
+    gy = jnp.broadcast_to(yblock[None, :, :], (Lx, Ly, yblock.shape[-1]))
+    joined = jnp.concatenate([gx, gy], axis=-1)
+    valid = xmask[:, None] & ymask[None, :]
+    return jnp.where(valid[:, :, None], joined, 0)
 
 
 def skew_join(
@@ -32,73 +52,38 @@ def skew_join(
 ):
     """Join every X row with every Y row through an X2Y mapping schema.
 
-    Returns (pairs (mx, my, dx+dy), schema).  The dense output is assembled
-    by scattering per-reducer cross products — each (x, y) pair is produced
-    by >= 1 reducer (coverage guarantee), duplicates agree.
+    Returns (pairs (mx, my, dx+dy), schema).  The (mx, my, dx+dy) output is
+    assembled by scattering per-reducer cross blocks — each (x, y) pair is
+    produced by >= 1 reducer (coverage guarantee), duplicates agree.
 
-    ``executor`` is validated against the executor registry for API parity
-    with the similarity apps, but the join's cross-product-concat reducer
-    is not a Gram block, so every executor runs the standard path here —
-    only *similarity*-shaped X2Y workloads (the some-pairs route in
-    ``allpairs.some_pairs_similarity``) reach the fused/sharded engines,
-    whose dispatch counters therefore track real engine dispatches only.
+    ``executor`` selects a registry executor ("dense", "bucketed", "fused",
+    "sharded", "streaming", or an :class:`~.executors.Executor` instance)
+    and execution really dispatches through its ``run_x2y``: the schema is
+    lowered to a rectangular :class:`~.engine.ReducerPlan` (independent
+    X-side and Y-side gather maps per reducer) and the executor runs and
+    assembles it.  The join's cross-product-concat reducer carries no
+    ``fused_metric`` tag, so the Gram-only engines (fused/sharded/
+    streaming) take their counted rect-bucketed fallback — outputs are
+    identical across all executors.
     """
+    from .allpairs import _x2y_plan_for
     from .executors import get_executor
-    get_executor(executor)           # registry validation (ValueError)
+    ex = get_executor(executor)
     mx, my = x_vals.shape[0], y_vals.shape[0]
     if schema is None:
         wx_ = np.full(mx, 1.0) if wx is None else np.asarray(wx, float)
         wy_ = np.full(my, 1.0) if wy is None else np.asarray(wy, float)
         schema = plan_x2y(wx_, wy_, q)
-
-    # split bins back into X-part / Y-part (ids < mx are X)
-    x_bins = [b for b in schema.bins if b and b[0] < mx]
-    y_bins = [[i - mx for i in b] for b in schema.bins if b and b[0] >= mx]
-    Lx = max(len(b) for b in x_bins)
-    Ly = max(len(b) for b in y_bins)
-    xb = np.zeros((len(x_bins), Lx), np.int32)
-    xm = np.zeros((len(x_bins), Lx), bool)
-    for i, b in enumerate(x_bins):
-        xb[i, : len(b)] = b
-        xm[i, : len(b)] = True
-    yb = np.zeros((len(y_bins), Ly), np.int32)
-    ym = np.zeros((len(y_bins), Ly), bool)
-    for i, b in enumerate(y_bins):
-        yb[i, : len(b)] = b
-        ym[i, : len(b)] = True
-
-    # reducer -> (x_bin, y_bin): planner emits [x_bin_id, y_bin_id_global]
-    nx = len(x_bins)
-    red = np.asarray(
-        [[r[0], r[1] - nx] for r in schema.reducers], np.int32)  # (R, 2)
-
-    def _join(xv, yv, xb, xm, yb, ym, red):
-        # gather bins per reducer — this is the shuffle
-        bx = jnp.take(xb, red[:, 0], axis=0)         # (R, Lx)
-        mxk = jnp.take(xm, red[:, 0], axis=0)
-        by = jnp.take(yb, red[:, 1], axis=0)         # (R, Ly)
-        myk = jnp.take(ym, red[:, 1], axis=0)
-        gx = jnp.take(xv, bx, axis=0)                # (R, Lx, dx)
-        gy = jnp.take(yv, by, axis=0)                # (R, Ly, dy)
-        # per-reducer cross product
-        R = bx.shape[0]
-        gxx = jnp.broadcast_to(gx[:, :, None, :], (R, Lx, Ly, gx.shape[-1]))
-        gyy = jnp.broadcast_to(gy[:, None, :, :], (R, Lx, Ly, gy.shape[-1]))
-        joined = jnp.concatenate([gxx, gyy], axis=-1)
-        valid = mxk[:, :, None] & myk[:, None, :]
-        return joined, valid, bx, by
-
-    joined, valid, bx, by = jax.jit(_join)(
-        jnp.asarray(x_vals), jnp.asarray(y_vals), jnp.asarray(xb),
-        jnp.asarray(xm), jnp.asarray(yb), jnp.asarray(ym), jnp.asarray(red))
-
-    # assemble into (mx, my, dx+dy)
-    rows = jnp.broadcast_to(bx[:, :, None], valid.shape)
-    cols = jnp.broadcast_to(by[:, None, :], valid.shape)
-    d = joined.shape[-1]
-    out = jnp.zeros((mx, my, d), joined.dtype)
-    flat_r = jnp.where(valid, rows, mx).reshape(-1)   # invalid -> OOB drop
-    flat_c = jnp.where(valid, cols, 0).reshape(-1)
-    out = out.at[flat_r, flat_c].set(
-        joined.reshape(-1, d), mode="drop")
+    plan = _x2y_plan_for(
+        schema, mx,
+        pad_reducers_to=(mesh.devices.size if mesh is not None else 1),
+        pad_slots_to=1,
+    )
+    out = ex.run_x2y((jnp.asarray(x_vals), jnp.asarray(y_vals)), plan,
+                     join_block, (mx, my), mesh=mesh)
     return out, schema
+
+
+# registry-era name (the similarity apps say "executor", the join docs say
+# "join"); both names are the same callable
+join = skew_join

@@ -17,7 +17,9 @@ some-pairs similarity queries planned through the registry planner (plans
 memoized by weight profile in ``PLAN_CACHE``) and executed on the
 skew-aware bucketed shuffle executor or the fused gather+Gram megakernel
 path (``executor='fused'``), with per-request plan provenance, plan-cache
-hit flags, and fused/jit-cache telemetry for dashboards.
+hit flags, and fused/jit-cache telemetry for dashboards.  ``x2y`` serves
+the rectangular bipartite workload (paper Section 10) through the same
+executor protocol's ``run_x2y``.
 
 With ``executor='streaming'`` the service additionally serves a *live*
 table: ``load_table`` plans once through ``repro.stream.
@@ -264,6 +266,22 @@ class PairwiseService:
         t0 = time.perf_counter()
         sims, plan, _schema = some_pairs_similarity(
             jnp.asarray(x), pairs, q=self.q, weights=weights,
+            metric=self.metric, mesh=self.mesh, executor=self._executor,
+            use_kernel=self.use_kernel, interpret=self.interpret)
+        sims = jax.block_until_ready(sims)
+        return sims, self._info(plan, time.perf_counter() - t0, snap)
+
+    def x2y(self, x, y, wx=None, wy=None):
+        """Cross similarity of an X table against a Y table through the
+        Section-10 rectangular (X2Y) schema.  Returns (sims (mx, my),
+        info) with the same provenance/telemetry contract as
+        :meth:`similarity` — the plan is rectangular and every registry
+        executor serves it through ``run_x2y``."""
+        from repro.mapreduce.allpairs import x2y_similarity
+        snap = self._snap()
+        t0 = time.perf_counter()
+        sims, plan, _schema = x2y_similarity(
+            jnp.asarray(x), jnp.asarray(y), q=self.q, wx=wx, wy=wy,
             metric=self.metric, mesh=self.mesh, executor=self._executor,
             use_kernel=self.use_kernel, interpret=self.interpret)
         sims = jax.block_until_ready(sims)

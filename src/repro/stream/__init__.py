@@ -19,6 +19,13 @@ package makes plans *mutable serving state* (DESIGN.md 1f):
     assembled (m, m) pair matrix cached, recomputes only dirty reducers
     through the fused/bucketed substrate, and patches the matrix with a
     delta scatter instead of rebuilding it.
+``IncrementalX2YPlanner``
+    The rectangular (DESIGN.md 1g) analogue: maintains a bipartite X2Y
+    schema under ``insert_x`` / ``insert_y`` / ``delete_x`` /
+    ``delete_y`` (X bins at capacity ``b``, Y bins at ``q - b``; a new
+    bin pairs against every live other-side bin), emitting X2Y deltas
+    whose ``verify_x2y`` coverage proofs gate the (mx, my) matrix
+    patches of ``StreamingExecutor.apply_delta_x2y``.
 
 Importing this package registers the executor; ``repro.mapreduce.
 get_executor("streaming")`` imports it lazily, so the rest of the engine
@@ -27,11 +34,12 @@ never pays for the subsystem unless it is used.
 
 from repro.mapreduce.executors import register_executor
 
-from .delta import PlanDelta, compact_plan
+from .delta import PlanDelta, compact_plan, compact_x2y_plan
 from .executor import StreamingExecutor
 from .incremental import IncrementalPlanner
+from .x2y import IncrementalX2YPlanner
 
 register_executor(StreamingExecutor())
 
-__all__ = ["IncrementalPlanner", "PlanDelta", "StreamingExecutor",
-           "compact_plan"]
+__all__ = ["IncrementalPlanner", "IncrementalX2YPlanner", "PlanDelta",
+           "StreamingExecutor", "compact_plan", "compact_x2y_plan"]

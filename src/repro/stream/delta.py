@@ -29,9 +29,14 @@ from typing import Optional, Sequence
 
 import numpy as np
 
-from repro.mapreduce.engine import ReducerBucket, ReducerPlan, _build_buckets
+from repro.mapreduce.engine import (
+    ReducerBucket,
+    ReducerPlan,
+    _build_buckets,
+    build_x2y_plan_arrays,
+)
 
-__all__ = ["PlanDelta", "compact_plan"]
+__all__ = ["PlanDelta", "compact_plan", "compact_x2y_plan"]
 
 
 def _pow2(n: int) -> int:
@@ -86,6 +91,47 @@ def compact_plan(expanded: list[list[int]], *, comm_cost: float = 0.0,
         idx=idx, mask=mask, num_reducers=R0, comm_cost=float(comm_cost),
         max_inputs=L0, algorithm=algorithm, lower_bound=None,
         buckets=buckets)
+
+
+def _pad_rect_bucket_rows(b: ReducerBucket,
+                          pad_reducers_to: int = 1) -> ReducerBucket:
+    """Rectangular analogue of :func:`_pad_bucket_rows`: pad both sides'
+    row counts (they share the row axis) to the next power of two, then to
+    a device-count multiple."""
+    Rb = b.idx.shape[0]
+    R = _pow2(Rb)
+    R = -(-R // pad_reducers_to) * pad_reducers_to
+    if R == Rb:
+        return b
+    pad = R - Rb
+    return ReducerBucket(
+        width=b.width,
+        rows=np.concatenate([b.rows, np.full(pad, -1, np.int64)]),
+        idx=np.concatenate([b.idx, np.zeros((pad, b.width), np.int32)]),
+        mask=np.concatenate([b.mask, np.zeros((pad, b.width), bool)]),
+        ywidth=b.ywidth,
+        yidx=np.concatenate([b.yidx, np.zeros((pad, b.ywidth), np.int32)]),
+        ymask=np.concatenate([b.ymask, np.zeros((pad, b.ywidth), bool)]))
+
+
+def compact_x2y_plan(xs: list[list[int]], ys: list[list[int]], *,
+                     num_x: int, num_y: int, comm_cost: float = 0.0,
+                     algorithm: str = "stream-delta-x2y",
+                     max_buckets: int = 8,
+                     pad_reducers_to: int = 1) -> ReducerPlan:
+    """Compact rectangular ReducerPlan over an explicit dirty-reducer
+    subset: ``xs[r]`` / ``ys[r]`` list *full-table* X and Y row ids, so
+    the streaming executor gathers straight from the live tables.  Bucket
+    rows are padded to power-of-two counts (:func:`_pad_rect_bucket_rows`)
+    for the same bounded-shape jit-cache contract as :func:`compact_plan`.
+    """
+    plan = build_x2y_plan_arrays(
+        xs, ys, num_x=num_x, num_y=num_y, comm_cost=comm_cost,
+        algorithm=algorithm, pad_reducers_to=1, pad_slots_to=1,
+        max_buckets=max_buckets)
+    buckets = tuple(_pad_rect_bucket_rows(b, pad_reducers_to)
+                    for b in plan.buckets)
+    return dataclasses.replace(plan, buckets=buckets)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -186,3 +232,38 @@ class PlanDelta:
             assert not missing, (
                 f"reweight({i}): {len(missing)} pairs uncovered after the "
                 f"move, e.g. {sorted(missing)[:5]}")
+
+    def verify_x2y(self, x_expanded, y_expanded,
+                   active_x: Sequence[int],
+                   active_y: Sequence[int]) -> None:
+        """Rectangular coverage proof (X2Y deltas from
+        ``IncrementalX2YPlanner``).
+
+        ``x_expanded`` / ``y_expanded`` map post-edit reducer id -> live
+        X-table / Y-table ids — full lists, or any mapping covering the
+        dirty rows.  Insert on either side: every cross pair involving the
+        new input must meet inside the *dirty* reducers alone (the new
+        input exists in no clean reducer).  Deletes need no new coverage;
+        full re-plans are covered by the planner's schema construction."""
+        if self.full_replan or self.kind in ("init", "delete_x",
+                                             "delete_y"):
+            return
+        new = int(self.input_id)
+        if self.kind == "insert_x":
+            partners: set[int] = set()
+            for r in self.dirty_rows:
+                if new in x_expanded[int(r)]:
+                    partners.update(int(j) for j in y_expanded[int(r)])
+            missing = set(int(j) for j in active_y) - partners
+            assert not missing, (
+                f"insert_x({new}): dirty reducers leave {len(missing)} "
+                f"cross pairs uncovered, e.g. {sorted(missing)[:5]}")
+        elif self.kind == "insert_y":
+            partners = set()
+            for r in self.dirty_rows:
+                if new in y_expanded[int(r)]:
+                    partners.update(int(j) for j in x_expanded[int(r)])
+            missing = set(int(j) for j in active_x) - partners
+            assert not missing, (
+                f"insert_y({new}): dirty reducers leave {len(missing)} "
+                f"cross pairs uncovered, e.g. {sorted(missing)[:5]}")

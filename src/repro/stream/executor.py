@@ -19,8 +19,18 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.mapreduce.allpairs import _finish_pair_matrix, _scatter_blocks
-from repro.mapreduce.engine import ReducerPlan, run_reducers_bucketed
+from repro.mapreduce.allpairs import (
+    _finish_pair_matrix,
+    _finish_x2y_matrix,
+    _scatter_blocks,
+    _scatter_blocks_x2y,
+)
+from repro.mapreduce.engine import (
+    ReducerPlan,
+    _as_tables,
+    run_reducers_bucketed,
+    run_reducers_x2y_bucketed,
+)
 from repro.mapreduce.executors import Executor, make_executor
 
 from .delta import PlanDelta, _pow2
@@ -57,6 +67,8 @@ class StreamingExecutor(Executor):
         self._sub = make_executor(substrate)     # private: isolated counters
         self._sims: Optional[jax.Array] = None
         self._fn: Optional[Callable] = None
+        self._sims_x2y: Optional[jax.Array] = None
+        self._fn_x2y: Optional[Callable] = None
 
     def _fresh_stats(self) -> dict:
         return {"calls": 0, "full_builds": 0, "delta_updates": 0,
@@ -116,6 +128,8 @@ class StreamingExecutor(Executor):
         """Drop the maintained state; the next call rebuilds cold."""
         self._sims = None
         self._fn = None
+        self._sims_x2y = None
+        self._fn_x2y = None
 
     @staticmethod
     def _at_capacity(x, square: bool = False):
@@ -143,6 +157,105 @@ class StreamingExecutor(Executor):
         self._count("reducers_total", plan.num_reducers)
         self._stats["recompute_fraction"] = 1.0
         return sims
+
+    # ------------------------------------------------------- rectangular X2Y
+    @property
+    def sims_x2y(self) -> Optional[jax.Array]:
+        """The maintained (capacity-padded) cross matrix; None before the
+        first rectangular build."""
+        return self._sims_x2y
+
+    def run_x2y(self, tables, plan, reducer_fn, shape, *, mesh=None,
+                use_kernel=False, interpret=False):
+        """Cold rectangular build: execute the full rect plan on the
+        substrate and adopt the (mx, my) matrix as streaming state.
+        Payload-carrying outputs (trailing dims — the skew join) execute
+        identically but are not adopted as patchable state."""
+        self._count("calls")
+        return self._rebuild_x2y(tables, plan, reducer_fn, shape,
+                                 mesh=mesh, use_kernel=use_kernel,
+                                 interpret=interpret)
+
+    @staticmethod
+    def _at_rect_capacity(s):
+        """Pad both matrix axes to the next power of two (rectangular
+        analogue of ``_at_capacity(square=True)``)."""
+        cx, cy = _pow2(s.shape[0]), _pow2(s.shape[1])
+        if (cx, cy) != s.shape[:2]:
+            s = jnp.pad(s, ((0, cx - s.shape[0]), (0, cy - s.shape[1])))
+        return s
+
+    def _rebuild_x2y(self, tables, plan, reducer_fn, shape, *, mesh=None,
+                     use_kernel=False, interpret=False):
+        sims = self._sub.run_x2y(tables, plan, reducer_fn, shape,
+                                 mesh=mesh, use_kernel=use_kernel,
+                                 interpret=interpret)
+        if sims.ndim == 2:
+            self._sims_x2y = self._at_rect_capacity(sims)
+            self._fn_x2y = reducer_fn
+        self._count("full_builds")
+        self._count("dirty_reducers", plan.num_reducers)
+        self._count("reducers_total", plan.num_reducers)
+        self._stats["recompute_fraction"] = 1.0
+        return sims
+
+    def apply_delta_x2y(self, tables, delta: PlanDelta, reducer_fn,
+                        shape, *,
+                        plan_provider: Optional[
+                            Callable[[], ReducerPlan]] = None,
+                        mesh=None, use_kernel=False, interpret=False):
+        """Apply one X2Y edit: patch the maintained (mx, my) matrix.
+
+        ``tables`` are the *current* full (X, Y) tables (tombstoned rows
+        included); ``shape = (mx, my)`` their live leading sizes.  The
+        delta's ``meta['touched_x']`` rows and ``meta['touched_y']``
+        columns are invalidated and the dirty reducers' rect sub-plan is
+        recomputed and scattered back — the two-sided analogue of
+        :meth:`apply_delta`.  Returns the live (mx, my) view."""
+        self._count("calls")
+        mx, my = shape
+        cold = (self._sims_x2y is None or self._fn_x2y is not reducer_fn
+                or delta.full_replan)
+        if cold:
+            assert plan_provider is not None, (
+                "cold streaming rebuild needs the full rect plan")
+            return self._rebuild_x2y(tables, plan_provider(), reducer_fn,
+                                     shape, mesh=mesh,
+                                     use_kernel=use_kernel,
+                                     interpret=interpret)
+
+        sims = self._sims_x2y
+        if mx > sims.shape[0] or my > sims.shape[1]:  # capacity doubled
+            sims = self._at_rect_capacity(jnp.pad(sims, (
+                (0, max(mx - sims.shape[0], 0)),
+                (0, max(my - sims.shape[1], 0)))))
+        tx = np.asarray(delta.meta.get("touched_x", ()), np.int64)
+        ty = np.asarray(delta.meta.get("touched_y", ()), np.int64)
+        if len(tx) or len(ty):
+            if len(tx):
+                sims = sims.at[jnp.asarray(tx), :].set(-jnp.inf)
+            if len(ty):
+                sims = sims.at[:, jnp.asarray(ty)].set(-jnp.inf)
+            if delta.sub_plan is not None and len(delta.dirty_rows):
+                xt, yt = _as_tables(tables)
+                per_bucket = run_reducers_x2y_bucketed(
+                    (self._at_capacity(xt), self._at_capacity(yt)),
+                    delta.sub_plan, reducer_fn, mesh=mesh,
+                    combine="buckets")
+                for b, blocks in per_bucket:
+                    sims = _scatter_blocks_x2y(
+                        sims, blocks, jnp.asarray(b.idx),
+                        jnp.asarray(b.mask), jnp.asarray(b.yidx),
+                        jnp.asarray(b.ymask))
+            sims = _finish_x2y_matrix(sims)
+
+        self._sims_x2y = sims
+        self._count("delta_updates")
+        self._count("dirty_reducers", int(len(delta.dirty_rows)))
+        self._count("reducers_total", int(delta.num_reducers))
+        self._count("patched_inputs", int(len(tx) + len(ty)))
+        self._stats["recompute_fraction"] = float(delta.recompute_fraction)
+        return sims[:mx, :my]
 
     def apply_delta(self, x, delta: PlanDelta, reducer_fn, m, *,
                     plan_provider: Optional[Callable[[], ReducerPlan]] = None,

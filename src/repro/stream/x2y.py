@@ -1,0 +1,404 @@
+"""IncrementalX2YPlanner: online maintenance of an X2Y mapping schema.
+
+The rectangular analogue of :class:`~repro.stream.incremental.
+IncrementalPlanner` for the paper's Section-10 bipartite workload: X
+inputs pack into bins of size ``b``, Y inputs into bins of ``q - b``, and
+every reducer meets one live X-bin with one live Y-bin — the maintained
+invariant is exactly X2Y coverage (every (live x, live y) cross pair
+meets at >= 1 reducer).
+
+Repair rules:
+
+  insert_x(w) — residual best-fit into the fullest live X-bin whose slack
+                still holds ``w`` (its reducers go dirty: they gain one X
+                row against their full Y side).  No slack: open a new
+                X-bin and one new reducer per live Y-bin — coverage of
+                the new input against every live Y input is restored by
+                construction, and every new reducer's load is
+                ``w + |y-bin| <= b + (q - b) = q``.
+  insert_y(w) — symmetric with capacity ``q - b``.
+  delete_x(i) / delete_y(j) — drop the input from its bin (emptied bins
+                are tombstoned, never revived); no recompute — the
+                executor zeroes row i / column j of the served matrix.
+
+An insert too large for its side's bin capacity, or gap drift past
+``replan_drift`` (maintained cost over the live profile's
+``x2y_comm_lower_bound``, relative to the gap at the last full re-plan),
+triggers a full re-plan through ``repro.core.plan_x2y`` — which may move
+the split point ``b`` itself.  ``PlanDelta.verify_x2y`` is the per-edit
+coverage proof when ``check=True``.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.core.bounds import x2y_comm_lower_bound
+from repro.core.planner import plan_x2y
+from repro.core.schema import InfeasibleError
+from repro.mapreduce.engine import ReducerPlan, build_x2y_plan_arrays
+
+from .delta import PlanDelta, compact_x2y_plan
+
+__all__ = ["IncrementalX2YPlanner"]
+
+_EPS = 1e-12
+
+
+def _ffd_pack(ids: Sequence[int], weights: Sequence[float],
+              cap: float) -> list[list[int]]:
+    """First-fit-decreasing over explicit ids (the one-sided bootstrap
+    path: no cross pairs exist yet, so any feasible packing works)."""
+    bins: list[list[int]] = []
+    loads: list[float] = []
+    for i in sorted(ids, key=lambda i: -weights[i]):
+        w = float(weights[i])
+        if w > cap + _EPS:
+            raise InfeasibleError(
+                f"input {i} (w={w}) exceeds bin capacity {cap}")
+        for b, load in enumerate(loads):
+            if load + w <= cap + _EPS:
+                bins[b].append(i)
+                loads[b] += w
+                break
+        else:
+            bins.append([i])
+            loads.append(w)
+    return bins
+
+
+class IncrementalX2YPlanner:
+    """Mutable X2Y mapping-schema state over growing/shrinking X and Y
+    tables.
+
+    Ids are stable full-table positions per side: ``insert_x`` appends a
+    new X id (``insert_y`` a new Y id) and deleted ids are never reused,
+    so the serving tier keeps two flat feature tables with tombstones.
+    ``plan()`` returns the current rectangular :class:`ReducerPlan`
+    (idx/mask into the X table, yidx/ymask into the Y table);
+    ``snapshot_counts()`` exposes the live bin structure for validation.
+    """
+
+    def __init__(self, q: float, wx: Sequence[float] = (),
+                 wy: Sequence[float] = (), *, replan_drift: float = 1.5,
+                 pad_reducers_to: int = 1, max_buckets: int = 8,
+                 check: bool = True):
+        assert replan_drift >= 1.0, replan_drift
+        self.q = float(q)
+        self.replan_drift = float(replan_drift)
+        self.check = check
+        self._pad = dict(pad_reducers_to=pad_reducers_to,
+                         max_buckets=max_buckets)
+        self.wx: list[float] = [float(w) for w in wx]
+        self.wy: list[float] = [float(w) for w in wy]
+        self.active_x: list[bool] = [True] * len(self.wx)
+        self.active_y: list[bool] = [True] * len(self.wy)
+        self.stats = {
+            "edits": 0, "repairs": 0, "replans": 0, "drift_replans": 0,
+            "opened_bins": 0, "opened_reducers": 0, "dead_bins": 0,
+        }
+        self._adopt_replan()
+
+    # ------------------------------------------------------------ properties
+    @property
+    def num_active_x(self) -> int:
+        return int(np.sum(self.active_x))
+
+    @property
+    def num_active_y(self) -> int:
+        return int(np.sum(self.active_y))
+
+    @property
+    def num_reducers(self) -> int:
+        return len(self.reducers)
+
+    @property
+    def lower_bound(self) -> float:
+        return self._lb
+
+    @property
+    def optimality_gap(self) -> float:
+        return self.comm_cost / self._lb if self._lb > 0 else 1.0
+
+    @property
+    def gap_drift(self) -> float:
+        return self.optimality_gap / max(self._base_gap, _EPS)
+
+    def active_x_ids(self) -> np.ndarray:
+        return np.flatnonzero(self.active_x)
+
+    def active_y_ids(self) -> np.ndarray:
+        return np.flatnonzero(self.active_y)
+
+    def active_x_weights(self) -> np.ndarray:
+        return np.asarray([self.wx[i] for i in self.active_x_ids()],
+                          dtype=np.float64)
+
+    def active_y_weights(self) -> np.ndarray:
+        return np.asarray([self.wy[j] for j in self.active_y_ids()],
+                          dtype=np.float64)
+
+    # -------------------------------------------------------------- adoption
+    def _adopt_replan(self) -> None:
+        """Full re-plan of the live profile through ``plan_x2y``; adopt
+        the winning schema (including its split point ``b``) as the new
+        mutable state.  One-sided profiles have no cross pairs: the
+        present side is FFD-packed at the full capacity ``q`` and no
+        reducers exist (nothing ships)."""
+        x_ids = self.active_x_ids()
+        y_ids = self.active_y_ids()
+        wx = self.active_x_weights()
+        wy = self.active_y_weights()
+        if len(x_ids) == 0 or len(y_ids) == 0:
+            self.algorithm = "empty" if not (len(x_ids) or len(y_ids)) \
+                else "x2y-one-sided"
+            # all capacity to the present side; the other side's first
+            # insert forces a full re-plan (w > 0 slack), which then
+            # picks a real split point
+            self.b = self.q if len(y_ids) == 0 else 0.0
+            self.xbins = _ffd_pack(x_ids, self.wx, self.q) \
+                if len(x_ids) else []
+            self.ybins = _ffd_pack(y_ids, self.wy, self.q) \
+                if len(y_ids) else []
+            self.reducers: list[tuple[int, int]] = []
+        else:
+            schema = plan_x2y(wx, wy, self.q)   # may raise InfeasibleError
+            self.algorithm = schema.algorithm
+            self.b = float(schema.meta["b"])
+            nxb = int(schema.meta["x_bins"])
+            nx = len(x_ids)
+            self.xbins = [[int(x_ids[i]) for i in bin_]
+                          for bin_ in schema.bins[:nxb]]
+            self.ybins = [[int(y_ids[i - nx]) for i in bin_]
+                          for bin_ in schema.bins[nxb:]]
+            self.reducers = [(int(r[0]), int(r[1]) - nxb)
+                             for r in schema.reducers]
+        self.dead_xbins: set[int] = set()
+        self.dead_ybins: set[int] = set()
+        self._bwx = np.asarray(
+            [sum(self.wx[i] for i in b) for b in self.xbins], np.float64)
+        self._bwy = np.asarray(
+            [sum(self.wy[j] for j in b) for b in self.ybins], np.float64)
+        self.xbin_of = {i: b for b, mem in enumerate(self.xbins)
+                        for i in mem}
+        self.ybin_of = {j: b for b, mem in enumerate(self.ybins)
+                        for j in mem}
+        self.reducers_of_xbin: dict[int, list[int]] = {
+            b: [] for b in range(len(self.xbins))}
+        self.reducers_of_ybin: dict[int, list[int]] = {
+            b: [] for b in range(len(self.ybins))}
+        for r, (xb, yb) in enumerate(self.reducers):
+            self.reducers_of_xbin[xb].append(r)
+            self.reducers_of_ybin[yb].append(r)
+        self.comm_cost = float(sum(self._bwx[xb] + self._bwy[yb]
+                                   for xb, yb in self.reducers))
+        self._lb = (x2y_comm_lower_bound(wx, wy, self.q)
+                    if len(x_ids) and len(y_ids) else 0.0)
+        self._base_gap = self.optimality_gap
+        self._plan: Optional[ReducerPlan] = None
+        self.stats["replans"] += 1
+
+    # --------------------------------------------------------------- queries
+    def x_expanded(self) -> list[list[int]]:
+        """reducer -> live X-table ids (dead-bin sides are empty)."""
+        return [sorted(self.xbins[xb]) for xb, _ in self.reducers]
+
+    def y_expanded(self) -> list[list[int]]:
+        return [sorted(self.ybins[yb]) for _, yb in self.reducers]
+
+    def plan(self) -> ReducerPlan:
+        """The current full rectangular ReducerPlan (X ids into the full
+        X table, Y ids into the full Y table), rebuilt lazily."""
+        if self._plan is None:
+            self._plan = build_x2y_plan_arrays(
+                self.x_expanded(), self.y_expanded(),
+                num_x=len(self.wx), num_y=len(self.wy),
+                comm_cost=self.comm_cost,
+                algorithm=f"stream:x2y(b={self.b:.3g})",
+                lower_bound=self._lb,
+                pad_reducers_to=self._pad["pad_reducers_to"],
+                max_buckets=self._pad["max_buckets"])
+        return self._plan
+
+    # ----------------------------------------------------------------- edits
+    def insert_x(self, weight: float) -> PlanDelta:
+        """Add one X input; ``delta.input_id`` is the new X-table id.
+        Raises ``InfeasibleError`` (edit rolled back) when no schema can
+        hold the grown profile."""
+        i = len(self.wx)
+        self.wx.append(float(weight))
+        self.active_x.append(True)
+        try:
+            return self._edited("insert_x", i, self._place("x", i))
+        except InfeasibleError:
+            self.wx.pop()
+            self.active_x.pop()
+            self.stats["edits"] -= 1
+            raise
+
+    def insert_y(self, weight: float) -> PlanDelta:
+        """Add one Y input; symmetric to :meth:`insert_x`."""
+        j = len(self.wy)
+        self.wy.append(float(weight))
+        self.active_y.append(True)
+        try:
+            return self._edited("insert_y", j, self._place("y", j))
+        except InfeasibleError:
+            self.wy.pop()
+            self.active_y.pop()
+            self.stats["edits"] -= 1
+            raise
+
+    def delete_x(self, i: int) -> PlanDelta:
+        """Tombstone X input ``i``; no recompute — the executor zeroes
+        row i of the served (mx, my) matrix."""
+        i = int(i)
+        assert self.active_x[i], f"x input {i} is not live"
+        self.active_x[i] = False
+        b = self.xbin_of.pop(i)
+        self.xbins[b].remove(i)
+        self._bwx[b] -= self.wx[i]
+        self.comm_cost -= self.wx[i] * len(self.reducers_of_xbin[b])
+        if not self.xbins[b]:
+            self.dead_xbins.add(b)
+            self.stats["dead_bins"] += 1
+        return self._edited("delete_x", i,
+                            dict(dirty=[], touched_x=[i], touched_y=[]))
+
+    def delete_y(self, j: int) -> PlanDelta:
+        """Tombstone Y input ``j``; the executor zeroes column j."""
+        j = int(j)
+        assert self.active_y[j], f"y input {j} is not live"
+        self.active_y[j] = False
+        b = self.ybin_of.pop(j)
+        self.ybins[b].remove(j)
+        self._bwy[b] -= self.wy[j]
+        self.comm_cost -= self.wy[j] * len(self.reducers_of_ybin[b])
+        if not self.ybins[b]:
+            self.dead_ybins.add(b)
+            self.stats["dead_bins"] += 1
+        return self._edited("delete_y", j,
+                            dict(dirty=[], touched_x=[], touched_y=[j]))
+
+    # ---------------------------------------------------------------- repair
+    def _place(self, side: str, i: int) -> Optional[dict]:
+        """Place the new input into the maintained bin structure; None
+        when only a full re-plan can absorb it (over-capacity weight, or
+        a one-sided bootstrap that must now pick a real split point)."""
+        if side == "x":
+            w, cap = self.wx[i], self.b
+            bins, bw, dead = self.xbins, self._bwx, self.dead_xbins
+            own_reds, bin_of = self.reducers_of_xbin, self.xbin_of
+            other_bins, other_dead = self.ybins, self.dead_ybins
+            other_bw, other_reds = self._bwy, self.reducers_of_ybin
+            touched = dict(touched_x=[i], touched_y=[])
+        else:
+            w, cap = self.wy[i], self.q - self.b
+            bins, bw, dead = self.ybins, self._bwy, self.dead_ybins
+            own_reds, bin_of = self.reducers_of_ybin, self.ybin_of
+            other_bins, other_dead = self.xbins, self.dead_xbins
+            other_bw, other_reds = self._bwx, self.reducers_of_xbin
+            touched = dict(touched_x=[], touched_y=[i])
+        live_other = [b for b in range(len(other_bins))
+                      if b not in other_dead and other_bins[b]]
+        if live_other and w > cap + _EPS:
+            return None                      # re-plan may move b itself
+        if not live_other:
+            # no cross pairs yet: repair only if the present side's
+            # capacity (q on a one-sided bootstrap) holds w
+            if w > (cap if self.reducers else self.q) + _EPS:
+                return None
+        # residual best-fit: fullest live bin whose slack holds w
+        fits = np.flatnonzero(bw + w <= cap + _EPS) if len(bw) else \
+            np.asarray([], np.int64)
+        fits = np.asarray([b for b in fits if b not in dead and bins[b]],
+                          dtype=np.int64)
+        if len(fits):
+            b = int(fits[np.argmax(bw[fits])])
+            bins[b].append(i)
+            bw[b] += w
+            bin_of[i] = b
+            self.comm_cost += w * len(own_reds[b])
+            return dict(dirty=list(own_reds[b]), **touched)
+        # no slack anywhere: capacity forces a new bin + one reducer per
+        # live bin of the other side (coverage by construction)
+        nb = len(bins)
+        bins.append([i])
+        if side == "x":
+            self._bwx = np.append(self._bwx, w)
+        else:
+            self._bwy = np.append(self._bwy, w)
+        bin_of[i] = nb
+        own_reds[nb] = []
+        self.stats["opened_bins"] += 1
+        dirty = []
+        for ob in live_other:
+            r = len(self.reducers)
+            self.reducers.append((nb, ob) if side == "x" else (ob, nb))
+            dirty.append(r)
+            own_reds[nb].append(r)
+            other_reds[ob].append(r)
+            self.comm_cost += w + float(other_bw[ob])
+        self.stats["opened_reducers"] += len(dirty)
+        return dict(dirty=dirty, **touched)
+
+    # ------------------------------------------------------------- finishing
+    def _edited(self, kind: str, i: int,
+                repair: Optional[dict]) -> PlanDelta:
+        self.stats["edits"] += 1
+        self._plan = None
+        if repair is not None:
+            self._lb = (x2y_comm_lower_bound(
+                self.active_x_weights(), self.active_y_weights(), self.q)
+                if self.num_active_x and self.num_active_y else 0.0)
+            if self.gap_drift <= self.replan_drift:
+                self.stats["repairs"] += 1
+                return self._finish_delta(kind, i, repair)
+            self.stats["drift_replans"] += 1
+        self._adopt_replan()
+        return PlanDelta(
+            kind=kind, input_id=i,
+            touched_inputs=np.concatenate(
+                [self.active_x_ids(), self.active_y_ids()]),
+            dirty_rows=np.arange(self.num_reducers, dtype=np.int64),
+            sub_plan=None, full_replan=True,
+            num_reducers=self.num_reducers, comm_cost=self.comm_cost,
+            lower_bound=self._lb, gap_drift=self.gap_drift,
+            meta={"workload": "x2y", "algorithm": self.algorithm,
+                  "touched_x": [int(a) for a in self.active_x_ids()],
+                  "touched_y": [int(a) for a in self.active_y_ids()]})
+
+    def _finish_delta(self, kind: str, i: int, repair: dict) -> PlanDelta:
+        dirty = np.asarray(sorted(repair["dirty"]), dtype=np.int64)
+        sub = None
+        xs_map = {int(r): sorted(self.xbins[self.reducers[int(r)][0]])
+                  for r in dirty}
+        ys_map = {int(r): sorted(self.ybins[self.reducers[int(r)][1]])
+                  for r in dirty}
+        if len(dirty):
+            xs = [xs_map[int(r)] for r in dirty]
+            ys = [ys_map[int(r)] for r in dirty]
+            comm = float(
+                sum(self.wx[a] for row in xs for a in row)
+                + sum(self.wy[a] for row in ys for a in row))
+            sub = compact_x2y_plan(
+                xs, ys, num_x=len(self.wx), num_y=len(self.wy),
+                comm_cost=comm, algorithm=f"stream-delta:{kind}",
+                max_buckets=self._pad["max_buckets"],
+                pad_reducers_to=self._pad["pad_reducers_to"])
+        delta = PlanDelta(
+            kind=kind, input_id=i,
+            touched_inputs=np.asarray(
+                repair["touched_x"] + repair["touched_y"], dtype=np.int64),
+            dirty_rows=dirty, sub_plan=sub, full_replan=False,
+            num_reducers=self.num_reducers, comm_cost=self.comm_cost,
+            lower_bound=self._lb, gap_drift=self.gap_drift,
+            meta={"workload": "x2y", "algorithm": self.algorithm,
+                  "touched_x": list(repair["touched_x"]),
+                  "touched_y": list(repair["touched_y"])})
+        if self.check:
+            delta.verify_x2y(xs_map, ys_map, self.active_x_ids(),
+                             self.active_y_ids())
+        return delta

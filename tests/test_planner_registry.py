@@ -247,3 +247,109 @@ class TestPlanSomePairs:
         pairs = [(0, 1), (2, 3)]
         s = plan_some_pairs(w, 1.0, pairs)
         s.validate("some", required_pairs=pairs)
+
+
+# ---------------------------------------------------------------------------
+# Property tests (hypothesis-optional): rectangular and some-pairs planners
+# ---------------------------------------------------------------------------
+from _hypothesis_compat import given, settings, st  # noqa: E402
+
+from repro.core import estimate_x2y, plan_x2y, x2y_comm_lower_bound  # noqa: E402
+
+
+class TestX2YProperties:
+    """Random rectangular profiles: the X2Y planner's schema covers
+    exactly the cross pairs, respects capacity, and its recorded estimate
+    equals the built schema's measured communication cost."""
+
+    @staticmethod
+    def _profile(seed):
+        rng = np.random.default_rng(seed)
+        m = int(rng.integers(1, 12))
+        n = int(rng.integers(1, 12))
+        wx = rng.uniform(0.02, 0.45, m)
+        wy = rng.uniform(0.02, 0.45, n)
+        return wx, wy
+
+    @settings(max_examples=40, deadline=None)
+    @given(st.integers(min_value=0, max_value=10_000))
+    def test_random_rect_profile_valid_and_exact(self, seed):
+        wx, wy = self._profile(seed)
+        q = float(wx.max() + wy.max()) * np.random.default_rng(
+            seed + 1).uniform(1.0, 3.0)
+        schema = plan_x2y(wx, wy, q)
+        m, n = len(wx), len(wy)
+        schema.validate("x2y", x_ids=range(m), y_ids=range(m, m + n))
+        # estimate == built cost (the contract that lets the b-sweep run
+        # estimate-only and materialize just the winner)
+        assert np.isclose(schema.meta["estimated_cost"],
+                          schema.communication_cost(), rtol=1e-9)
+        # ... and the sweep's own closed form agrees
+        b, est = estimate_x2y(wx, wy, q)
+        assert np.isclose(est, schema.communication_cost(), rtol=1e-9)
+        assert schema.communication_cost() >= \
+            x2y_comm_lower_bound(wx, wy, q) - 1e-9
+        assert schema.lower_bound == pytest.approx(
+            x2y_comm_lower_bound(wx, wy, q))
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(min_value=0, max_value=10_000))
+    def test_covers_exactly_the_cross_pairs(self, seed):
+        wx, wy = self._profile(seed)
+        q = float(wx.max() + wy.max() + 0.1)
+        m, n = len(wx), len(wy)
+        schema = plan_x2y(wx, wy, q)
+        met = set()
+        for ids in schema.expand():
+            xs = [i for i in ids if i < m]
+            ys = [j for j in ids if j >= m]
+            met.update((i, j) for i in xs for j in ys)
+            # no same-side pair is ever *required* by X2Y; reducers are
+            # one X bin against one Y bin so none can co-ship two bins of
+            # the same side beyond what one bin holds
+        want = {(i, j) for i in range(m) for j in range(m, m + n)}
+        assert met == want
+
+
+class TestSomePairsProperties:
+    """Random required-pair subsets: the winning some-pairs strategy's
+    schema covers exactly the required pairs and the estimate used for
+    strategy selection equals the built cost."""
+
+    @staticmethod
+    def _instance(seed):
+        rng = np.random.default_rng(seed)
+        m = int(rng.integers(2, 25))
+        w = rng.uniform(0.02, 0.4, m)
+        density = float(rng.uniform(0.05, 0.9))
+        cand = [(i, j) for i in range(m) for j in range(i + 1, m)]
+        take = rng.random(len(cand)) < density
+        pairs = [p for p, t in zip(cand, take) if t]
+        return w, pairs
+
+    @settings(max_examples=40, deadline=None)
+    @given(st.integers(min_value=0, max_value=10_000))
+    def test_random_pair_subset_valid_and_exact(self, seed):
+        w, pairs = self._instance(seed)
+        q = 1.0
+        schema = plan_some_pairs(w, q, pairs)
+        schema.validate("some", required_pairs=pairs)
+        if not pairs:
+            assert schema.communication_cost() == 0.0
+            return
+        assert np.isclose(schema.meta["estimated_cost"],
+                          schema.communication_cost(), rtol=1e-9), \
+            schema.algorithm
+        assert schema.communication_cost() >= \
+            some_pairs_comm_lower_bound(w, q, pairs) - 1e-9
+
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(min_value=0, max_value=10_000))
+    def test_partial_cover_never_ships_pair_free_inputs_extra(self, seed):
+        w, pairs = self._instance(seed)
+        schema = plan_some_pairs(w, 1.0, pairs)
+        if not schema.meta.get("partial_cover", False):
+            return
+        incident = {i for p in pairs for i in p}
+        placed = {i for b in schema.bins for i in b}
+        assert placed <= incident

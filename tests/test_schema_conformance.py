@@ -1,7 +1,7 @@
-"""Schema conformance: every registry strategy, on any weight profile,
-must emit a *valid mapping schema* that respects the paper's bounds.
+"""Schema conformance: every registry strategy AND every registry
+executor, on any weight profile, must respect the paper's bounds.
 
-Three properties are checked for every strategy x profile:
+Strategy level — three properties for every strategy x profile:
 
   (a) coverage  — every required pair (A2A), cross pair (X2Y), or listed
       pair (some-pairs) meets at >= 1 reducer;
@@ -10,11 +10,20 @@ Three properties are checked for every strategy x profile:
       replication-rate lower bound (a cost below the proven lower bound
       means the schema under-ships and cannot be covering).
 
+Executor level — ``TestExecutorConformanceMatrix`` runs every *registry
+executor* x {allpairs, x2y, some-pairs} workload x profile cell: the
+planned schema passes (a)-(c) and the executor's assembled matrix matches
+the dense oracle executor allclose.  Executors are discovered from the
+registry at collection time (after importing ``repro.stream`` so the
+lazily-registered streaming executor participates), so a new
+``register_executor`` entry inherits the whole matrix automatically.
+
 Deterministic profile sweeps run everywhere; the @given variants fuzz the
 same properties when hypothesis is installed (tests/_hypothesis_compat
 turns them into per-test skips otherwise).
 """
 
+import jax.numpy as jnp
 import numpy as np
 import pytest
 from _hypothesis_compat import given, settings, st
@@ -37,6 +46,16 @@ from repro.core.strategies import (
 )
 
 TOL = 1e-9
+
+
+def _registry_executors() -> list[str]:
+    """Registry executor names at collection time.  Importing
+    ``repro.stream`` first makes the lazily-registered streaming executor
+    participate; anything registered later via ``register_executor``
+    inherits the matrix on the next collection."""
+    import repro.stream  # noqa: F401 — registers "streaming"
+    from repro.mapreduce import list_executors
+    return list_executors()
 
 
 def profile(kind: str, m: int, seed: int, q: float = 1.0) -> np.ndarray:
@@ -222,3 +241,97 @@ class TestSomePairsConformance:
         w = np.array([0.7, 0.6, 0.1])
         with pytest.raises(InfeasibleError):
             plan_some_pairs(w, 1.0, [(0, 1)])
+
+
+# ----------------------------------------------- executor conformance matrix
+def xy_profile(kind: str, seed: int, q: float = 1.0):
+    """Two-sided weight profiles for the executor matrix.  ``y1`` / ``x1``
+    are the degenerate single-input sides (|Y| = 1 / |X| = 1); square
+    workloads use the concatenation."""
+    rng = np.random.default_rng(seed)
+    if kind == "uniform":
+        return rng.uniform(0.05, 0.30, 9), rng.uniform(0.05, 0.30, 7)
+    if kind == "zipf":
+        return (np.clip(rng.zipf(1.7, 9) / 24.0, 0.02, 0.40 * q),
+                np.clip(rng.zipf(1.7, 7) / 24.0, 0.02, 0.40 * q))
+    if kind == "one-giant":
+        wx = rng.uniform(0.02, 0.10, 9)
+        wx[0] = 0.55 * q
+        return wx, rng.uniform(0.02, 0.10, 7)
+    if kind == "y1":
+        return rng.uniform(0.05, 0.30, 8), np.array([0.3 * q])
+    if kind == "x1":
+        return np.array([0.3 * q]), rng.uniform(0.05, 0.30, 8)
+    raise ValueError(kind)
+
+
+class TestExecutorConformanceMatrix:
+    """Every registry executor x workload x profile cell.
+
+    Per cell: the planned schema passes coverage + capacity
+    (``schema.validate``), its measured cost is >= the instance's lower
+    bound, and the executor's assembled output matches the dense oracle
+    executor allclose.  Executor names come from the live registry
+    (:func:`_registry_executors`), so custom executors registered via
+    ``register_executor`` inherit every cell without editing this file.
+    """
+
+    D = 5
+    Q = 1.0
+
+    @pytest.mark.parametrize("executor", _registry_executors())
+    @pytest.mark.parametrize("kind",
+                             ["uniform", "zipf", "one-giant", "y1", "x1"])
+    @pytest.mark.parametrize("workload", ["allpairs", "x2y", "some_pairs"])
+    def test_cell(self, executor, kind, workload):
+        from repro.mapreduce.allpairs import (
+            pairwise_similarity,
+            some_pairs_similarity,
+            x2y_similarity,
+        )
+        q = self.Q
+        wx, wy = xy_profile(kind, seed=7, q=q)
+        rng = np.random.default_rng(11)
+
+        if workload == "x2y":
+            mx, my = len(wx), len(wy)
+            x = jnp.asarray(rng.normal(size=(mx, self.D)), jnp.float32)
+            y = jnp.asarray(rng.normal(size=(my, self.D)), jnp.float32)
+            schema = plan_x2y(wx, wy, q)
+            schema.validate("x2y", x_ids=range(mx),
+                            y_ids=range(mx, mx + my))
+            lb = x2y_comm_lower_bound(wx, wy, q)
+            assert schema.communication_cost() >= lb - TOL
+            out, plan, _ = x2y_similarity(x, y, q=q, schema=schema,
+                                          executor=executor)
+            ref, _, _ = x2y_similarity(x, y, q=q, schema=schema,
+                                       executor="dense")
+        else:
+            w = np.concatenate([wx, wy])
+            m = len(w)
+            x = jnp.asarray(rng.normal(size=(m, self.D)), jnp.float32)
+            if workload == "allpairs":
+                schema = plan_a2a(w, q)
+                schema.validate("a2a")
+                lb = a2a_comm_lower_bound(w, q)
+                assert schema.communication_cost() >= lb - TOL
+                out, plan, _ = pairwise_similarity(
+                    x, q=q, schema=schema, executor=executor)
+                ref, _, _ = pairwise_similarity(
+                    x, q=q, schema=schema, executor="dense")
+            else:
+                pairs = sorted({
+                    tuple(sorted(rng.choice(m, 2, replace=False)))
+                    for _ in range(2 * m)})
+                schema = plan_some_pairs(w, q, pairs)
+                schema.validate("some", required_pairs=pairs)
+                lb = some_pairs_comm_lower_bound(w, q, pairs)
+                assert schema.communication_cost() >= lb - TOL
+                out, plan, _ = some_pairs_similarity(
+                    x, pairs, q=q, schema=schema, executor=executor)
+                ref, _, _ = some_pairs_similarity(
+                    x, pairs, q=q, schema=schema, executor="dense")
+
+        assert plan.num_reducers > 0
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-5, atol=1e-5)
