@@ -5,20 +5,27 @@ change to the input list; the streaming subsystem (``repro.stream``) pays
 only for the reducers one edit dirties.  This bench measures that claim on
 the Zipf m=512 skewed workload across edit rates:
 
+  * first-edit (cold) latency — the edit right after ``load_table``,
+    sampled over fresh services, reported *separately* from steady state
+    (it used to hide inside the mean, skewing it 2x above the median);
+    with AOT delta-shape warmup the bar is p99 < 200ms;
   * update latency   — wall time of one streamed edit (planner repair +
     dirty-reducer recompute + matrix patch) vs a cold full re-plan +
     rebuild of the same table;
   * recompute fraction — dirty reducers over total reducers per edit
     (acceptance bar: single-input edits < 25% on Zipf m=512);
-  * delta vs re-plan comm bytes — weighted rows the delta ships vs what a
-    full re-shuffle ships, next to the replication-rate lower bound;
+  * sustained gap — the *achievable* optimality gap (cost over the
+    binpack strategy bound of Thm 9 — the Thm-8 bound is ~2x loose for
+    binpack-k2, which is what killed the old drift trigger) must stay
+    <= 1.3x through the churn and through a deletion-heavy shrink phase
+    that exercises the repack / drift-replan machinery;
   * correctness — after every edit batch the streamed matrix must be
     allclose to a cold full re-plan on the dense executor, and the
     maintained schema must pass validate('a2a') conformance.
 
-Writes the machine-readable trajectory to the repo root
-(``BENCH_stream.json``); ``benchmarks/run.py`` runs it as the
-``bench_stream`` section.
+Writes the machine-readable trajectory to ``benchmarks/BENCH_stream.json``
+(next to BENCH_engine.json / BENCH_x2y.json); ``benchmarks/run.py`` runs
+it as the ``bench_stream`` section.
 """
 
 from __future__ import annotations
@@ -33,7 +40,13 @@ import jax.numpy as jnp
 import numpy as np
 
 BENCH_JSON = os.path.join(os.path.dirname(os.path.abspath(__file__)),
-                          "..", "BENCH_stream.json")
+                          "BENCH_stream.json")
+
+# planner thresholds the bench (and its bars) run with: a hard achievable-
+# gap ceiling well under the 1.3x bar, a soft repack threshold just above
+# a fresh plan's own gap, and background (double-buffered) re-plans
+MAX_GAP = 1.2
+REPACK_GAP = 1.03
 
 
 def _make_table(m: int, d: int, q: float, zipf_a: float, seed: int):
@@ -42,6 +55,15 @@ def _make_table(m: int, d: int, q: float, zipf_a: float, seed: int):
                 0.01, 0.45 * q)
     x = rng.normal(size=(m, d)).astype(np.float32)
     return rng, w, x
+
+
+def _load(x, w, q: float, *, warmup: bool = True):
+    from repro.serve import PairwiseService
+    svc = PairwiseService(q, executor="streaming")
+    t0 = time.perf_counter()
+    _, info = svc.load_table(x, w, max_gap=MAX_GAP, repack_gap=REPACK_GAP,
+                             background=True, warmup=warmup)
+    return svc, info, time.perf_counter() - t0
 
 
 def _cold_reference(table, planner, q, repeats: int = 1):
@@ -66,23 +88,67 @@ def _cold_reference(table, planner, q, repeats: int = 1):
     return np.asarray(sims), act, float(np.median(times))
 
 
+def _check_batch(svc, sims) -> dict:
+    """Batch-boundary correctness: allclose vs a cold re-plan on the dense
+    executor, schema conformance, and the gap telemetry the bars read."""
+    planner = svc._planner
+    ref, act, replan_s = _cold_reference(svc._table, planner, svc.q)
+    got = np.asarray(sims)[np.ix_(act, act)]
+    snap = planner.snapshot()
+    snap.validate("a2a")
+    return {
+        "allclose": bool(np.allclose(got, ref, rtol=1e-4, atol=1e-4)),
+        "conformance": bool(
+            snap.communication_cost() >= planner.lower_bound - 1e-9),
+        "replan_s": replan_s,
+        "optimality_gap_thm8": round(float(planner.optimality_gap), 4),
+        "achievable_gap": round(float(planner.achievable_gap), 4),
+    }
+
+
+def bench_first_edit(m: int, d: int, q: float, zipf_a: float, seed: int,
+                     samples: int = 3) -> dict:
+    """The edit right after ``load_table``, on fresh services: the cold
+    tail the AOT warmup exists to kill.  p99 over a handful of fresh
+    services is the max sample."""
+    lat = []
+    warmed = 0
+    for s in range(samples):
+        rng, w, x = _make_table(m, d, q, zipf_a, seed + 101 + s)
+        svc, info0, _ = _load(x, w, q, warmup=True)
+        warmed = info0["warmed_shapes"]
+        _, info = svc.add_input(
+            rng.normal(size=(1, d)).astype(np.float32),
+            float(np.clip(rng.zipf(zipf_a) / 32.0, 0.01, 0.45 * q)))
+        lat.append(info["wall_s"])
+    # one unwarmed sample for the before/after story
+    rng, w, x = _make_table(m, d, q, zipf_a, seed + 97)
+    svc, _, _ = _load(x, w, q, warmup=False)
+    _, info = svc.add_input(
+        rng.normal(size=(1, d)).astype(np.float32),
+        float(np.clip(rng.zipf(zipf_a) / 32.0, 0.01, 0.45 * q)))
+    return {
+        "samples": samples,
+        "warmed_shapes": int(warmed),
+        "first_edit_ms_p99": round(float(np.max(lat)) * 1e3, 2),
+        "first_edit_ms_median": round(float(np.median(lat)) * 1e3, 2),
+        "first_edit_ms_nowarm": round(info["wall_s"] * 1e3, 2),
+    }
+
+
 def run_stream(m: int = 512, d: int = 64, q: float = 1.0,
                zipf_a: float = 1.6, seed: int = 0,
                edit_rates=(1, 16, 64)) -> dict:
-    from repro.serve import PairwiseService
-
     rng, w, x = _make_table(m, d, q, zipf_a, seed)
-    svc = PairwiseService(q, executor="streaming")
-
-    t0 = time.perf_counter()
-    sims, info0 = svc.load_table(x, w)
-    cold_s = time.perf_counter() - t0
-
+    svc, info0, cold_s = _load(x, w, q)
     planner = svc._planner
+
     rates = []
     itemsize = np.dtype(np.float32).itemsize
+    max_ach_gap = 0.0
+    sims = None
     for n_edits in edit_rates:
-        lat, fracs, dirty, replans = [], [], 0, 0
+        lat, fracs, dirty = [], [], 0
         delta_rows, replan_rows = 0.0, 0.0
         insert_fracs = []
         for _ in range(int(n_edits)):
@@ -104,57 +170,87 @@ def run_stream(m: int = 512, d: int = 64, q: float = 1.0,
             lat.append(info["wall_s"])
             fracs.append(info["recompute_fraction"])
             dirty += info["dirty_reducers"]
-            replans += int(info["full_replan"])
             delta_rows += info["delta_comm_rows"]
             replan_rows += info["comm_cost"]
 
-        # correctness at the batch boundary: allclose to a cold full
-        # re-plan on the dense executor + schema conformance
-        ref, act, replan_s = _cold_reference(svc._table, planner, q)
-        got = np.asarray(sims)[np.ix_(act, act)]
-        allclose = bool(np.allclose(got, ref, rtol=1e-4, atol=1e-4))
-        snap = planner.snapshot()
-        snap.validate("a2a")
-        conform = bool(
-            snap.communication_cost() >= planner.lower_bound - 1e-9)
-
+        check = _check_batch(svc, sims)
+        max_ach_gap = max(max_ach_gap, check["achievable_gap"])
         rates.append({
             "edits": int(n_edits),
             "update_ms_median": round(float(np.median(lat)) * 1e3, 2),
             "update_ms_mean": round(float(np.mean(lat)) * 1e3, 2),
-            "full_replan_ms": round(replan_s * 1e3, 2),
+            "update_ms_p99": round(float(np.max(lat)) * 1e3, 2),
+            "full_replan_ms": round(check["replan_s"] * 1e3, 2),
             "speedup_vs_replan": round(
-                replan_s / max(float(np.median(lat)), 1e-12), 2),
+                check["replan_s"] / max(float(np.median(lat)), 1e-12), 2),
             "recompute_fraction_mean": round(float(np.mean(fracs)), 4),
             "recompute_fraction_max": round(float(np.max(fracs)), 4),
             "insert_recompute_fraction_mean": round(
                 float(np.mean(insert_fracs)), 4) if insert_fracs else None,
             "dirty_reducers": int(dirty),
-            "replans": int(replans),
             "delta_comm_bytes": int(delta_rows * d * itemsize),
             "replan_comm_bytes": int(replan_rows * d * itemsize),
             "delta_vs_replan_bytes": round(
                 delta_rows / max(replan_rows, 1e-12), 4),
-            "allclose": allclose,
-            "conformance": conform,
+            "allclose": check["allclose"],
+            "conformance": check["conformance"],
+            "optimality_gap_thm8": check["optimality_gap_thm8"],
+            "achievable_gap": check["achievable_gap"],
         })
 
-    lb_bytes = planner.lower_bound * d * itemsize
+    # ------------------------------------------------------- shrink phase
+    # deletion-heavy churn empties bins and leaves stranded reducers — the
+    # drift the repack / drift-replan machinery exists to absorb
+    n_shrink = planner.num_active // 2
+    shrink_lat = []
+    for _ in range(n_shrink):
+        act = planner.active_ids()
+        if len(act) <= 4:
+            break
+        if rng.random() < 0.9:
+            sims, info = svc.remove_input(int(rng.choice(act)))
+        else:
+            sims, info = svc.add_input(
+                rng.normal(size=(1, d)).astype(np.float32),
+                float(np.clip(rng.zipf(zipf_a) / 32.0, 0.01, 0.45 * q)))
+        shrink_lat.append(info["wall_s"])
+    check = _check_batch(svc, sims)
+    max_ach_gap = max(max_ach_gap, check["achievable_gap"])
+    shrink = {
+        "edits": int(len(shrink_lat)),
+        "update_ms_median": round(
+            float(np.median(shrink_lat)) * 1e3, 2) if shrink_lat else None,
+        "allclose": check["allclose"],
+        "conformance": check["conformance"],
+        "optimality_gap_thm8": check["optimality_gap_thm8"],
+        "achievable_gap": check["achievable_gap"],
+    }
+
+    pstats = dict(planner.stats)
     return {
         "m": m, "d": d, "q": q, "zipf_a": zipf_a, "seed": seed,
+        "max_gap": MAX_GAP, "repack_gap": REPACK_GAP, "background": True,
         "algorithm": info0["algorithm"],
         "reducers_initial": info0["reducers"],
         "cold_build_ms": round(cold_s * 1e3, 1),
-        "optimality_gap_final": round(planner.optimality_gap, 4),
-        "lower_bound_bytes_final": int(lb_bytes),
+        "warmed_shapes": int(info0["warmed_shapes"]),
+        "optimality_gap_thm8_final": round(planner.optimality_gap, 4),
+        "achievable_gap_final": round(planner.achievable_gap, 4),
+        "achievable_gap_max": round(max_ach_gap, 4),
+        "lower_bound_bytes_final": int(
+            planner.lower_bound * d * itemsize),
         "edit_rates": rates,
-        "planner_stats": dict(planner.stats),
+        "shrink": shrink,
+        "drift_replans": int(pstats["drift_replans"]),
+        "repacks": int(pstats["repacks"]),
+        "swaps": int(pstats["swaps"]),
+        "planner_stats": pstats,
         "executor_stats": svc.executor_stats(),
     }
 
 
 def emit_bench_json(payload: dict, path: str = BENCH_JSON) -> str:
-    """Merge ``payload`` into the repo-root BENCH_stream.json (sections
+    """Merge ``payload`` into benchmarks/BENCH_stream.json (sections
     accumulate across runs, like benchmarks/BENCH_engine.json)."""
     existing = {}
     if os.path.exists(path):
@@ -179,8 +275,16 @@ def main(argv=None):
     ap.add_argument("--edits", type=int, nargs="*", default=[1, 16, 64])
     args = ap.parse_args(argv)
 
+    first = bench_first_edit(args.m, args.d, 1.0, args.zipf_a, args.seed)
+    print(f"stream A2A  first edit after load_table "
+          f"(warmed {first['warmed_shapes']} shapes): "
+          f"p99={first['first_edit_ms_p99']:.1f}ms "
+          f"median={first['first_edit_ms_median']:.1f}ms "
+          f"(unwarmed: {first['first_edit_ms_nowarm']:.1f}ms)")
+
     rep = run_stream(m=args.m, d=args.d, zipf_a=args.zipf_a, seed=args.seed,
                      edit_rates=tuple(args.edits))
+    rep["first_edit"] = first
     print(f"stream A2A  m={rep['m']} d={rep['d']} zipf_a={rep['zipf_a']} "
           f"[{rep['algorithm']}] reducers={rep['reducers_initial']} "
           f"cold={rep['cold_build_ms']:.0f}ms")
@@ -189,19 +293,38 @@ def main(argv=None):
               f" (replan {r['full_replan_ms']:7.1f}ms, "
               f"{r['speedup_vs_replan']:.1f}x) "
               f"recompute={r['recompute_fraction_mean']:.3f} "
-              f"delta/replan bytes={r['delta_vs_replan_bytes']:.3f} "
-              f"replans={r['replans']} allclose={r['allclose']} "
-              f"conform={r['conformance']}")
+              f"gap(ach)={r['achievable_gap']:.3f} "
+              f"allclose={r['allclose']} conform={r['conformance']}")
+    s = rep["shrink"]
+    print(f"  shrink edits={s['edits']:3d} gap(ach)={s['achievable_gap']:.3f}"
+          f" (thm8 {s['optimality_gap_thm8']:.3f}) "
+          f"drift_replans={rep['drift_replans']} repacks={rep['repacks']} "
+          f"swaps={rep['swaps']} allclose={s['allclose']} "
+          f"conform={s['conformance']}")
     path = emit_bench_json({"stream_edits": rep})
     print(f"  wrote {path}")
 
-    for r in rep["edit_rates"]:
+    # ------------------------------------------------------- acceptance bars
+    if first["first_edit_ms_p99"] >= 200.0:
+        raise SystemExit(
+            f"FAIL: first edit p99 {first['first_edit_ms_p99']:.1f}ms "
+            f"(bar: < 200ms)")
+    checks = rep["edit_rates"] + [rep["shrink"]]
+    for r in checks:
         if not r["allclose"]:
             raise SystemExit("FAIL: streamed matrix diverges from the cold "
                              "full re-plan")
         if not r["conformance"]:
             raise SystemExit("FAIL: maintained schema under-ships the "
                              "lower bound")
+    if rep["achievable_gap_max"] > 1.3:
+        raise SystemExit(
+            f"FAIL: sustained achievable gap {rep['achievable_gap_max']} "
+            f"(bar: <= 1.3)")
+    if rep["drift_replans"] + rep["repacks"] < 1:
+        raise SystemExit("FAIL: churn triggered no drift replan and no "
+                         "repack — the trigger is dead again")
+    for r in rep["edit_rates"]:
         frac = r["insert_recompute_fraction_mean"]
         if frac is not None and frac >= 0.25:
             raise SystemExit(

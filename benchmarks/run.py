@@ -12,9 +12,10 @@
                    merges the engine_sharded section into
                    benchmarks/BENCH_engine.json
   bench_stream   — streaming-maintenance edits vs full re-planning
-                   (update latency, recompute fraction, delta-vs-replan
-                   comm bytes across edit rates on Zipf m=512); writes the
-                   repo-root BENCH_stream.json
+                   (first-edit p99, update latency, recompute fraction,
+                   sustained achievable gap, delta-vs-replan comm bytes
+                   across edit rates on Zipf m=512); writes
+                   benchmarks/BENCH_stream.json
   bench_packing  — FFD bins applied to the data pipeline
   bench_kernels  — Pallas kernels vs oracles
 

@@ -403,8 +403,10 @@ def _env_cache_size(default: int = 64) -> int:
 
 _JIT_CACHE: OrderedDict = OrderedDict()
 _JIT_CACHE_MAX = _env_cache_size()
-_JIT_CACHE_STATS = {"hits": 0, "misses": 0, "evictions": 0}
+_JIT_CACHE_STATS = {"hits": 0, "misses": 0, "evictions": 0,
+                    "shape_hits": 0, "shape_misses": 0}
 _JIT_CACHE_HITS: dict = {}                    # key -> hit count (live entries)
+_JIT_SHAPES: dict = {}                # key -> arg-shape signatures seen
 
 
 def configure_jit_cache(max_size: Optional[int] = None) -> int:
@@ -425,7 +427,26 @@ def configure_jit_cache(max_size: Optional[int] = None) -> int:
 def _evict_oldest():
     key, _ = _JIT_CACHE.popitem(last=False)
     _JIT_CACHE_HITS.pop(key, None)
+    _JIT_SHAPES.pop(key, None)
     _JIT_CACHE_STATS["evictions"] += 1
+
+
+def _record_shapes(key, args) -> None:
+    """Shape-level compile telemetry.  ``jax.jit`` caches compilations per
+    argument shape, so a jit-cache *key* hit can still pay a compile when
+    the call carries a shape the entry has not seen.  Tracking signatures
+    per key makes that visible: a new signature is a ``shape_miss`` (a
+    retrace/compile happened), a repeat is a ``shape_hit`` — the counter
+    the streaming warm-path tests pin (a warmed first edit must add zero
+    shape_misses).  Recorded at the call sites, not by wrapping the jitted
+    fn, so ``.lower()`` on cache entries keeps working."""
+    sig = tuple((tuple(a.shape), str(a.dtype)) for a in args)
+    seen = _JIT_SHAPES.setdefault(key, set())
+    if sig in seen:
+        _JIT_CACHE_STATS["shape_hits"] += 1
+    else:
+        seen.add(sig)
+        _JIT_CACHE_STATS["shape_misses"] += 1
 
 
 def _cache_get(key, factory):
@@ -499,6 +520,7 @@ def run_reducers(
     mask = jnp.asarray(plan.mask)
     shard_axes = tuple(shard_axes) if shard_axes is not None else None
     fn = _get_jitted(reducer_fn, mesh, shard_axes)
+    _record_shapes((reducer_fn, mesh, shard_axes), (inputs, idx, mask))
     return fn(inputs, idx, mask)
 
 
@@ -565,10 +587,11 @@ def run_reducers_bucketed(
     shard_axes = tuple(shard_axes) if shard_axes is not None else None
     fn = _get_jitted(reducer_fn, mesh, shard_axes)
 
-    per_bucket = [
-        (b, fn(inputs, jnp.asarray(b.idx), jnp.asarray(b.mask)))
-        for b in buckets
-    ]
+    per_bucket = []
+    for b in buckets:
+        idx, mask = jnp.asarray(b.idx), jnp.asarray(b.mask)
+        _record_shapes((reducer_fn, mesh, shard_axes), (inputs, idx, mask))
+        per_bucket.append((b, fn(inputs, idx, mask)))
     if combine == "buckets":
         return per_bucket
 
@@ -635,8 +658,10 @@ def run_reducers_x2y(
     xt, yt = _as_tables(tables)
     shard_axes = tuple(shard_axes) if shard_axes is not None else None
     fn = _get_jitted_x2y(reducer_fn, mesh, shard_axes)
-    return fn(xt, yt, jnp.asarray(plan.idx), jnp.asarray(plan.mask),
-              jnp.asarray(plan.yidx), jnp.asarray(plan.ymask))
+    args = (xt, yt, jnp.asarray(plan.idx), jnp.asarray(plan.mask),
+            jnp.asarray(plan.yidx), jnp.asarray(plan.ymask))
+    _record_shapes(("x2y", reducer_fn, mesh, shard_axes), args)
+    return fn(*args)
 
 
 def _dense_out_shapes_x2y(plan: ReducerPlan, reducer_fn, xt, yt):
@@ -674,11 +699,12 @@ def run_reducers_x2y_bucketed(
     shard_axes = tuple(shard_axes) if shard_axes is not None else None
     fn = _get_jitted_x2y(reducer_fn, mesh, shard_axes)
 
-    per_bucket = [
-        (b, fn(xt, yt, jnp.asarray(b.idx), jnp.asarray(b.mask),
-               jnp.asarray(b.yidx), jnp.asarray(b.ymask)))
-        for b in buckets
-    ]
+    per_bucket = []
+    for b in buckets:
+        args = (xt, yt, jnp.asarray(b.idx), jnp.asarray(b.mask),
+                jnp.asarray(b.yidx), jnp.asarray(b.ymask))
+        _record_shapes(("x2y", reducer_fn, mesh, shard_axes), args)
+        per_bucket.append((b, fn(*args)))
     if combine == "buckets":
         return per_bucket
 

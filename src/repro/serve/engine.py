@@ -172,6 +172,8 @@ class PairwiseService:
             "dirty_reducers": 0,
             "edit_reducers_total": 0,
             "stream_replans": 0,
+            "stream_repacks": 0,
+            "stream_swaps": 0,
             "wall_s": 0.0,
         }
         self._planner = None                     # streaming: live planner
@@ -305,14 +307,22 @@ class PairwiseService:
             f"(this service runs {self.executor!r})")
         return self._executor
 
-    def load_table(self, x, weights=None, *, replan_drift: float = 1.5):
+    def load_table(self, x, weights=None, *, replan_drift: float = 1.5,
+                   max_gap: Optional[float] = 2.0,
+                   repack_gap: Optional[float] = None,
+                   background: bool = False, warmup: bool = True):
         """Adopt ``x`` as the live table (streaming executor only).
 
         Plans the initial schema through ``repro.stream.
         IncrementalPlanner``, cold-builds the pair matrix on the fused/
-        bucketed substrate, and returns ``(sims, info)``.  Subsequent
-        ``add_input`` / ``remove_input`` / ``update_weight`` calls edit
-        this table in place."""
+        bucketed substrate, pre-compiles the bounded delta-shape set
+        (``warmup=True`` — the first edit then hits a warm jit cache
+        instead of a compile storm), and returns ``(sims, info)``.
+        Subsequent ``add_input`` / ``remove_input`` / ``update_weight``
+        calls edit this table in place; ``max_gap`` / ``repack_gap`` /
+        ``background`` tune the planner's re-plan ceiling, soft repack
+        threshold, and double-buffered re-plan (see
+        ``repro.stream.StreamPlannerBase``)."""
         from repro.stream import IncrementalPlanner
         ex = self._require_streaming()
         self._table = np.asarray(x, dtype=np.float32)
@@ -321,7 +331,8 @@ class PairwiseService:
             else np.asarray(weights, dtype=np.float64)
         t0 = time.perf_counter()
         self._planner = IncrementalPlanner(
-            self.q, w, replan_drift=replan_drift,
+            self.q, w, replan_drift=replan_drift, max_gap=max_gap,
+            repack_gap=repack_gap, background=background,
             max_buckets=self.max_buckets,
             # mesh execution shards the bucket row axis: pad reducer rows
             # to the device count, exactly like allpairs._plan_for
@@ -333,6 +344,11 @@ class PairwiseService:
                             use_kernel=self.use_kernel,
                             interpret=self.interpret)
         sims = jax.block_until_ready(sims)
+        warmed = 0
+        if warmup:
+            warmed = ex.warm_delta_shapes(
+                jnp.asarray(self._table), self._planner.delta_shapes(),
+                self._reducer_fn(), mesh=self.mesh)
         dt = time.perf_counter() - t0
         self.stats["requests"] += 1
         self.stats["reducers"] += plan.num_reducers
@@ -344,13 +360,23 @@ class PairwiseService:
             "comm_cost": self._planner.comm_cost,
             "lower_bound": self._planner.lower_bound,
             "optimality_gap": self._planner.optimality_gap,
+            "achievable_gap": self._planner.achievable_gap,
+            "warmed_shapes": warmed,
             "wall_s": dt,
         }
         return sims, info
 
+    def flush_replan(self) -> bool:
+        """Block until any in-flight background re-plan lands (planning
+        state only — served pair values are plan-independent).  Returns
+        True if a fresh schema was adopted."""
+        assert self._planner is not None, "call load_table() first"
+        return self._planner.flush_replan()
+
     def _edit(self, op: str, *args):
         ex = self._require_streaming()
         assert self._planner is not None, "call load_table() first"
+        before = dict(self._planner.stats)
         t0 = time.perf_counter()
         delta = getattr(self._planner, op)(*args)
         sims = ex.apply_delta(
@@ -360,10 +386,15 @@ class PairwiseService:
             interpret=self.interpret)
         sims = jax.block_until_ready(sims)
         dt = time.perf_counter() - t0
+        pstats = self._planner.stats
         self.stats["edits"] += 1
         self.stats["dirty_reducers"] += int(len(delta.dirty_rows))
         self.stats["edit_reducers_total"] += int(delta.num_reducers)
-        self.stats["stream_replans"] += int(delta.full_replan)
+        self.stats["stream_replans"] += \
+            pstats["replans"] - before["replans"]
+        self.stats["stream_repacks"] += \
+            pstats["repacks"] - before["repacks"]
+        self.stats["stream_swaps"] += pstats["swaps"] - before["swaps"]
         self.stats["wall_s"] += dt
         info = {
             "executor": self.executor,
@@ -373,10 +404,16 @@ class PairwiseService:
             "num_reducers": int(delta.num_reducers),
             "recompute_fraction": float(delta.recompute_fraction),
             "full_replan": bool(delta.full_replan),
+            "replan": bool(delta.meta.get("replan", False)),
+            "replan_pending": bool(delta.meta.get("replan_pending",
+                                                  False)),
+            "swap": bool(delta.meta.get("swap", False)),
+            "repack": pstats["repacks"] > before["repacks"],
             "comm_cost": float(delta.comm_cost),
             "delta_comm_rows": float(delta.delta_comm_rows()),
             "lower_bound": float(delta.lower_bound),
             "optimality_gap": delta.optimality_gap,
+            "achievable_gap": float(self._planner.achievable_gap),
             "gap_drift": float(delta.gap_drift),
             "algorithm": self._planner.algorithm,
             "wall_s": dt,

@@ -21,12 +21,20 @@ Repair rules:
                 are tombstoned, never revived); no recompute — the
                 executor zeroes row i / column j of the served matrix.
 
-An insert too large for its side's bin capacity, or gap drift past
-``replan_drift`` (maintained cost over the live profile's
-``x2y_comm_lower_bound``, relative to the gap at the last full re-plan),
-triggers a full re-plan through ``repro.core.plan_x2y`` — which may move
-the split point ``b`` itself.  ``PlanDelta.verify_x2y`` is the per-edit
-coverage proof when ``check=True``.
+Triggers, background repacking, and the double-buffered re-plan live in
+:class:`~repro.stream.base.StreamPlannerBase` (shared with the all-pairs
+planner).  The theorem bound is Thm 25 (``x2y_comm_lower_bound`` =
+``2 s_x s_y / q``); the achievable reference is ``2x`` that — the
+grid-of-bins family any feasible covering schema belongs to ships each
+side once per opposite-side bin, which costs at least
+``2 (2 s_x s_y / q)`` when both sides saturate their capacity split — so
+ceilings fire on real degradation, not on the bound's intrinsic
+looseness.  A full re-plan (through ``repro.core.plan_x2y``, which may
+move the split point ``b`` itself) adopts the fresh schema as planning
+state but emits only a compact *patch* delta: pair values are
+plan-independent, so the served matrix never rebuilds.
+``PlanDelta.verify_x2y`` is the per-edit coverage proof when
+``check=True``.
 """
 
 from __future__ import annotations
@@ -40,11 +48,10 @@ from repro.core.planner import plan_x2y
 from repro.core.schema import InfeasibleError
 from repro.mapreduce.engine import ReducerPlan, build_x2y_plan_arrays
 
+from .base import StreamPlannerBase, _EPS
 from .delta import PlanDelta, compact_x2y_plan
 
 __all__ = ["IncrementalX2YPlanner"]
-
-_EPS = 1e-12
 
 
 def _ffd_pack(ids: Sequence[int], weights: Sequence[float],
@@ -69,7 +76,7 @@ def _ffd_pack(ids: Sequence[int], weights: Sequence[float],
     return bins
 
 
-class IncrementalX2YPlanner:
+class IncrementalX2YPlanner(StreamPlannerBase):
     """Mutable X2Y mapping-schema state over growing/shrinking X and Y
     tables.
 
@@ -83,22 +90,21 @@ class IncrementalX2YPlanner:
 
     def __init__(self, q: float, wx: Sequence[float] = (),
                  wy: Sequence[float] = (), *, replan_drift: float = 1.5,
+                 max_gap: Optional[float] = 2.0,
+                 repack_gap: Optional[float] = None,
+                 background: bool = False,
                  pad_reducers_to: int = 1, max_buckets: int = 8,
                  check: bool = True):
-        assert replan_drift >= 1.0, replan_drift
+        super().__init__(replan_drift=replan_drift, max_gap=max_gap,
+                         repack_gap=repack_gap, background=background,
+                         check=check)
         self.q = float(q)
-        self.replan_drift = float(replan_drift)
-        self.check = check
         self._pad = dict(pad_reducers_to=pad_reducers_to,
                          max_buckets=max_buckets)
         self.wx: list[float] = [float(w) for w in wx]
         self.wy: list[float] = [float(w) for w in wy]
         self.active_x: list[bool] = [True] * len(self.wx)
         self.active_y: list[bool] = [True] * len(self.wy)
-        self.stats = {
-            "edits": 0, "repairs": 0, "replans": 0, "drift_replans": 0,
-            "opened_bins": 0, "opened_reducers": 0, "dead_bins": 0,
-        }
         self._adopt_replan()
 
     # ------------------------------------------------------------ properties
@@ -114,18 +120,6 @@ class IncrementalX2YPlanner:
     def num_reducers(self) -> int:
         return len(self.reducers)
 
-    @property
-    def lower_bound(self) -> float:
-        return self._lb
-
-    @property
-    def optimality_gap(self) -> float:
-        return self.comm_cost / self._lb if self._lb > 0 else 1.0
-
-    @property
-    def gap_drift(self) -> float:
-        return self.optimality_gap / max(self._base_gap, _EPS)
-
     def active_x_ids(self) -> np.ndarray:
         return np.flatnonzero(self.active_x)
 
@@ -140,6 +134,18 @@ class IncrementalX2YPlanner:
         return np.asarray([self.wy[j] for j in self.active_y_ids()],
                           dtype=np.float64)
 
+    # ---------------------------------------------------------------- bounds
+    def _recompute_lb(self) -> None:
+        """Thm 25 theorem bound, plus the grid-family achievable
+        reference (2x Thm 25 — what a fresh split-point plan actually
+        reaches when both sides saturate their capacity split)."""
+        if self.num_active_x and self.num_active_y:
+            self._lb = x2y_comm_lower_bound(
+                self.active_x_weights(), self.active_y_weights(), self.q)
+            self._lb_ach = 2.0 * self._lb
+        else:
+            self._lb = self._lb_ach = 0.0
+
     # -------------------------------------------------------------- adoption
     def _adopt_replan(self) -> None:
         """Full re-plan of the live profile through ``plan_x2y``; adopt
@@ -152,53 +158,112 @@ class IncrementalX2YPlanner:
         wx = self.active_x_weights()
         wy = self.active_y_weights()
         if len(x_ids) == 0 or len(y_ids) == 0:
-            self.algorithm = "empty" if not (len(x_ids) or len(y_ids)) \
+            algorithm = "empty" if not (len(x_ids) or len(y_ids)) \
                 else "x2y-one-sided"
             # all capacity to the present side; the other side's first
             # insert forces a full re-plan (w > 0 slack), which then
             # picks a real split point
-            self.b = self.q if len(y_ids) == 0 else 0.0
-            self.xbins = _ffd_pack(x_ids, self.wx, self.q) \
-                if len(x_ids) else []
-            self.ybins = _ffd_pack(y_ids, self.wy, self.q) \
-                if len(y_ids) else []
-            self.reducers: list[tuple[int, int]] = []
+            b = self.q if len(y_ids) == 0 else 0.0
+            xbins = _ffd_pack(x_ids, self.wx, self.q) if len(x_ids) else []
+            ybins = _ffd_pack(y_ids, self.wy, self.q) if len(y_ids) else []
+            reducers: list[tuple[int, int]] = []
         else:
             schema = plan_x2y(wx, wy, self.q)   # may raise InfeasibleError
-            self.algorithm = schema.algorithm
-            self.b = float(schema.meta["b"])
+            algorithm = schema.algorithm
+            b = float(schema.meta["b"])
             nxb = int(schema.meta["x_bins"])
             nx = len(x_ids)
-            self.xbins = [[int(x_ids[i]) for i in bin_]
-                          for bin_ in schema.bins[:nxb]]
-            self.ybins = [[int(y_ids[i - nx]) for i in bin_]
-                          for bin_ in schema.bins[nxb:]]
-            self.reducers = [(int(r[0]), int(r[1]) - nxb)
-                             for r in schema.reducers]
-        self.dead_xbins: set[int] = set()
-        self.dead_ybins: set[int] = set()
+            xbins = [[int(x_ids[i]) for i in bin_]
+                     for bin_ in schema.bins[:nxb]]
+            ybins = [[int(y_ids[i - nx]) for i in bin_]
+                     for bin_ in schema.bins[nxb:]]
+            reducers = [(int(r[0]), int(r[1]) - nxb)
+                        for r in schema.reducers]
+        self._adopt_x2y_state(algorithm, b, xbins, ybins, reducers)
+        self._recompute_lb()
+        self._after_adopt()
+
+    def _adopt_x2y_state(self, algorithm: str, b: float,
+                         xbins: list[list[int]], ybins: list[list[int]],
+                         reducers: list[tuple[int, int]]) -> None:
+        """Install a split point + bin/reducer structure over full-table
+        ids; shared by the synchronous adopt and the background swap."""
+        self.algorithm = algorithm
+        self.b = float(b)
+        self.xbins = xbins
+        self.ybins = ybins
+        self.reducers = reducers
+        self.dead_xbins: set[int] = {bx for bx, mem in enumerate(xbins)
+                                     if not mem}
+        self.dead_ybins: set[int] = {by for by, mem in enumerate(ybins)
+                                     if not mem}
         self._bwx = np.asarray(
-            [sum(self.wx[i] for i in b) for b in self.xbins], np.float64)
+            [sum(self.wx[i] for i in bn) for bn in self.xbins], np.float64)
         self._bwy = np.asarray(
-            [sum(self.wy[j] for j in b) for b in self.ybins], np.float64)
-        self.xbin_of = {i: b for b, mem in enumerate(self.xbins)
+            [sum(self.wy[j] for j in bn) for bn in self.ybins], np.float64)
+        self.xbin_of = {i: bx for bx, mem in enumerate(self.xbins)
                         for i in mem}
-        self.ybin_of = {j: b for b, mem in enumerate(self.ybins)
+        self.ybin_of = {j: by for by, mem in enumerate(self.ybins)
                         for j in mem}
         self.reducers_of_xbin: dict[int, list[int]] = {
-            b: [] for b in range(len(self.xbins))}
+            bx: [] for bx in range(len(self.xbins))}
         self.reducers_of_ybin: dict[int, list[int]] = {
-            b: [] for b in range(len(self.ybins))}
+            by: [] for by in range(len(self.ybins))}
         for r, (xb, yb) in enumerate(self.reducers):
             self.reducers_of_xbin[xb].append(r)
             self.reducers_of_ybin[yb].append(r)
         self.comm_cost = float(sum(self._bwx[xb] + self._bwy[yb]
                                    for xb, yb in self.reducers))
-        self._lb = (x2y_comm_lower_bound(wx, wy, self.q)
-                    if len(x_ids) and len(y_ids) else 0.0)
-        self._base_gap = self.optimality_gap
         self._plan: Optional[ReducerPlan] = None
-        self.stats["replans"] += 1
+
+    # --------------------------------------------------- background re-plan
+    def _capture_profile(self):
+        return (self.active_x_ids().copy(), self.active_x_weights().copy(),
+                self.active_y_ids().copy(), self.active_y_weights().copy())
+
+    def _background_plan(self, payload):
+        x_ids, wx, y_ids, wy = payload
+        return x_ids, y_ids, plan_x2y(wx, wy, self.q)
+
+    def _swap_in(self, result) -> bool:
+        """Adopt a background plan built for a captured profile onto the
+        *current* one: deletes since capture are filtered out of its
+        bins, inserts on either side are replayed through the repair
+        rules.  False (caller re-plans synchronously) when the plan went
+        stale — a side emptied, or a bin overflows its split capacity."""
+        x_ids, y_ids, schema = result
+        if not (self.num_active_x and self.num_active_y):
+            return False
+        b = float(schema.meta["b"])
+        nxb = int(schema.meta["x_bins"])
+        nx = len(x_ids)
+        xbins = [[i for i in (int(x_ids[k]) for k in bin_)
+                  if self.active_x[i]]
+                 for bin_ in schema.bins[:nxb]]
+        ybins = [[j for j in (int(y_ids[k - nx]) for k in bin_)
+                  if self.active_y[j]]
+                 for bin_ in schema.bins[nxb:]]
+        bwx = [sum(self.wx[i] for i in bn) for bn in xbins]
+        bwy = [sum(self.wy[j] for j in bn) for bn in ybins]
+        if (bwx and max(bwx) > b + _EPS) \
+                or (bwy and max(bwy) > self.q - b + _EPS):
+            return False
+        self._adopt_x2y_state(
+            schema.algorithm, b, xbins, ybins,
+            [(int(r[0]), int(r[1]) - nxb) for r in schema.reducers])
+        self._recompute_lb()
+        # replay inserts that arrived after capture, ascending per side
+        for i in self.active_x_ids():
+            if int(i) not in self.xbin_of \
+                    and self._place("x", int(i)) is None:
+                return False
+        for j in self.active_y_ids():
+            if int(j) not in self.ybin_of \
+                    and self._place("y", int(j)) is None:
+                return False
+        self._recompute_lb()
+        self._after_adopt()
+        return True
 
     # --------------------------------------------------------------- queries
     def x_expanded(self) -> list[list[int]]:
@@ -221,6 +286,54 @@ class IncrementalX2YPlanner:
                 pad_reducers_to=self._pad["pad_reducers_to"],
                 max_buckets=self._pad["max_buckets"])
         return self._plan
+
+    def delta_shapes(self, max_shapes: int = 256) \
+            -> list[tuple[int, int, int]]:
+        """The bounded set of ``(padded rows, x width, y width)`` sub-plan
+        shapes a repair-path edit can produce, read off the live bin
+        structure (insert into a bin's slack dirties that bin's reducers,
+        one slot wider on its side; a forced new bin dirties one fresh
+        reducer per live opposite bin).  Signatures go through
+        ``compact_x2y_plan`` itself, so the shapes
+        ``StreamingExecutor.warm_delta_shapes_x2y`` pre-compiles at load
+        time are exactly the edit-time shapes by construction."""
+        if not self.reducers:
+            return []
+        shapes: set[tuple[int, int, int]] = set()
+        seen: set[tuple] = set()
+
+        def add(pairs: list[tuple[int, int]]) -> None:
+            sig = tuple(sorted(pairs))
+            if not pairs or sig in seen:
+                return
+            seen.add(sig)
+            sub = compact_x2y_plan(
+                [list(range(cx)) for cx, _ in pairs],
+                [list(range(cy)) for _, cy in pairs],
+                num_x=max(len(self.wx), 1), num_y=max(len(self.wy), 1),
+                comm_cost=0.0, algorithm="warmup",
+                max_buckets=self._pad["max_buckets"],
+                pad_reducers_to=self._pad["pad_reducers_to"])
+            for bk in sub.buckets:
+                shapes.add((int(bk.idx.shape[0]), int(bk.width),
+                            int(bk.ywidth)))
+
+        live_x = [bx for bx in range(len(self.xbins))
+                  if bx not in self.dead_xbins and self.xbins[bx]]
+        live_y = [by for by in range(len(self.ybins))
+                  if by not in self.dead_ybins and self.ybins[by]]
+        for bx in live_x:       # insert_x into bx's slack
+            add([(len(self.xbins[bx]) + 1,
+                  len(self.ybins[self.reducers[r][1]]))
+                 for r in self.reducers_of_xbin[bx]])
+        for by in live_y:       # insert_y into by's slack
+            add([(len(self.xbins[self.reducers[r][0]]),
+                  len(self.ybins[by]) + 1)
+                 for r in self.reducers_of_ybin[by]])
+        # forced new bin: one fresh reducer per live opposite bin
+        add([(1, len(self.ybins[by])) for by in live_y])
+        add([(len(self.xbins[bx]), 1) for bx in live_x])
+        return sorted(shapes)[:max_shapes]
 
     # ----------------------------------------------------------------- edits
     def insert_x(self, weight: float) -> PlanDelta:
@@ -344,33 +457,116 @@ class IncrementalX2YPlanner:
         self.stats["opened_reducers"] += len(dirty)
         return dict(dirty=dirty, **touched)
 
-    # ------------------------------------------------------------- finishing
-    def _edited(self, kind: str, i: int,
-                repair: Optional[dict]) -> PlanDelta:
-        self.stats["edits"] += 1
-        self._plan = None
-        if repair is not None:
-            self._lb = (x2y_comm_lower_bound(
-                self.active_x_weights(), self.active_y_weights(), self.q)
-                if self.num_active_x and self.num_active_y else 0.0)
-            if self.gap_drift <= self.replan_drift:
-                self.stats["repairs"] += 1
-                return self._finish_delta(kind, i, repair)
-            self.stats["drift_replans"] += 1
-        self._adopt_replan()
-        return PlanDelta(
-            kind=kind, input_id=i,
-            touched_inputs=np.concatenate(
-                [self.active_x_ids(), self.active_y_ids()]),
-            dirty_rows=np.arange(self.num_reducers, dtype=np.int64),
-            sub_plan=None, full_replan=True,
-            num_reducers=self.num_reducers, comm_cost=self.comm_cost,
-            lower_bound=self._lb, gap_drift=self.gap_drift,
-            meta={"workload": "x2y", "algorithm": self.algorithm,
-                  "touched_x": [int(a) for a in self.active_x_ids()],
-                  "touched_y": [int(a) for a in self.active_y_ids()]})
+    # --------------------------------------------------------------- repack
+    def _repack_pass(self, max_bins: int = 4) -> tuple[int, int]:
+        """Local repacking, per side: drain the lightest live bins into
+        other bins' slack (whole-bin try-then-commit), tombstone the
+        emptied bins, then prune reducers with a dead side — they cover
+        no cross pair but still ship their live side's weight.  A
+        migrated input's target bin already meets every live opposite
+        bin (the X2Y grid invariant), so no pair value changes."""
+        moved = 0
+        moved += self._drain_side("x", max_bins)
+        moved += self._drain_side("y", max_bins)
+        pruned = self._prune_dead_reducers()
+        return moved, pruned
 
-    def _finish_delta(self, kind: str, i: int, repair: dict) -> PlanDelta:
+    def _drain_side(self, side: str, max_bins: int) -> int:
+        if side == "x":
+            bins, bw, dead = self.xbins, self._bwx, self.dead_xbins
+            cap, weights = self.b, self.wx
+            own_reds, bin_of = self.reducers_of_xbin, self.xbin_of
+        else:
+            bins, bw, dead = self.ybins, self._bwy, self.dead_ybins
+            cap, weights = self.q - self.b, self.wy
+            own_reds, bin_of = self.reducers_of_ybin, self.ybin_of
+        moved = 0
+        live = sorted((b for b in range(len(bins))
+                       if b not in dead and bins[b]),
+                      key=lambda b: bw[b])
+        for src in live[:max_bins]:
+            if src in dead or not bins[src]:
+                continue
+            targets = [b for b in range(len(bins))
+                       if b != src and b not in dead and bins[b]]
+            if not targets:
+                continue
+            loads = bw.copy()
+            assign = []
+            for i in sorted(bins[src], key=lambda j: -weights[j]):
+                w = weights[i]
+                best, best_load = -1, -1.0
+                for b in targets:
+                    if loads[b] + w <= cap + _EPS and loads[b] > best_load:
+                        best, best_load = b, float(loads[b])
+                if best < 0:
+                    assign = None
+                    break
+                loads[best] += w
+                assign.append((i, best))
+            if assign is None:
+                continue
+            deg_src = len(own_reds[src])
+            for i, tgt in assign:
+                w = weights[i]
+                bins[src].remove(i)
+                bins[tgt].append(i)
+                bin_of[i] = tgt
+                bw[src] -= w
+                bw[tgt] += w
+                self.comm_cost += w * (len(own_reds[tgt]) - deg_src)
+                moved += 1
+            dead.add(src)
+            self.stats["dead_bins"] += 1
+        return moved
+
+    def _prune_dead_reducers(self) -> int:
+        """Drop reducers whose X or Y bin is dead — they cover no cross
+        pair (X2Y coverage is full bipartite between *live* bins), so
+        pruning is always safe and saves the live side's shipped weight.
+        Reducer ids are re-compacted; only called on empty-dirty edits,
+        so no outstanding delta references old ids."""
+        keep: list[tuple[int, int]] = []
+        pruned = 0
+        for (xb, yb) in self.reducers:
+            x_dead = xb in self.dead_xbins or not self.xbins[xb]
+            y_dead = yb in self.dead_ybins or not self.ybins[yb]
+            if x_dead or y_dead:
+                self.comm_cost -= float(self._bwx[xb] + self._bwy[yb])
+                pruned += 1
+            else:
+                keep.append((xb, yb))
+        if pruned:
+            self.reducers = keep
+            self.reducers_of_xbin = {
+                b: [] for b in range(len(self.xbins))}
+            self.reducers_of_ybin = {
+                b: [] for b in range(len(self.ybins))}
+            for r, (xb, yb) in enumerate(self.reducers):
+                self.reducers_of_xbin[xb].append(r)
+                self.reducers_of_ybin[yb].append(r)
+        return pruned
+
+    # ------------------------------------------------------------- finishing
+    def _patch_after_replan(self, kind: str, i: int) -> dict:
+        """Compact patch re-serving the edited input under the freshly
+        adopted plan: an inserted input's reducers cover all its cross
+        pairs (the X2Y grid property); deletes just zero their
+        row/column."""
+        if kind == "insert_x":
+            rows = sorted(self.reducers_of_xbin[self.xbin_of[i]]) \
+                if i in self.xbin_of else []
+            return dict(dirty=rows, touched_x=[i], touched_y=[])
+        if kind == "insert_y":
+            rows = sorted(self.reducers_of_ybin[self.ybin_of[i]]) \
+                if i in self.ybin_of else []
+            return dict(dirty=rows, touched_x=[], touched_y=[i])
+        if kind == "delete_x":
+            return dict(dirty=[], touched_x=[i], touched_y=[])
+        return dict(dirty=[], touched_x=[], touched_y=[i])
+
+    def _finish_delta(self, kind: str, i: int, repair: dict,
+                      extra_meta: Optional[dict] = None) -> PlanDelta:
         dirty = np.asarray(sorted(repair["dirty"]), dtype=np.int64)
         sub = None
         xs_map = {int(r): sorted(self.xbins[self.reducers[int(r)][0]])
@@ -388,6 +584,12 @@ class IncrementalX2YPlanner:
                 comm_cost=comm, algorithm=f"stream-delta:{kind}",
                 max_buckets=self._pad["max_buckets"],
                 pad_reducers_to=self._pad["pad_reducers_to"])
+        meta = {"workload": "x2y", "algorithm": self.algorithm,
+                "achievable_gap": float(self.achievable_gap),
+                "touched_x": [int(a) for a in repair["touched_x"]],
+                "touched_y": [int(a) for a in repair["touched_y"]]}
+        if extra_meta:
+            meta.update(extra_meta)
         delta = PlanDelta(
             kind=kind, input_id=i,
             touched_inputs=np.asarray(
@@ -395,9 +597,7 @@ class IncrementalX2YPlanner:
             dirty_rows=dirty, sub_plan=sub, full_replan=False,
             num_reducers=self.num_reducers, comm_cost=self.comm_cost,
             lower_bound=self._lb, gap_drift=self.gap_drift,
-            meta={"workload": "x2y", "algorithm": self.algorithm,
-                  "touched_x": list(repair["touched_x"]),
-                  "touched_y": list(repair["touched_y"])})
+            meta=meta)
         if self.check:
             delta.verify_x2y(xs_map, ys_map, self.active_x_ids(),
                              self.active_y_ids())

@@ -130,7 +130,10 @@ class TestIncrementalPlanner:
 
     def test_gap_drift_triggers_amortized_replan(self):
         """A tight drift threshold forces the re-plan path; the schema
-        stays conformant through it and the planner counts it."""
+        stays conformant through it and the planner counts it.  Re-plans
+        are *patch* deltas now (pair values are plan-independent, so the
+        executor never cold-rebuilds): ``meta['replan']`` marks them,
+        ``full_replan`` stays False."""
         q = 1.0
         rng = np.random.default_rng(2)
         planner = IncrementalPlanner(q, _profile("uniform", 40, 2, q),
@@ -138,7 +141,8 @@ class TestIncrementalPlanner:
         saw_replan = False
         for _ in range(20):
             delta, _ = _apply_random_edit(planner, rng, q)
-            saw_replan |= delta.full_replan
+            saw_replan |= bool(delta.meta.get("replan"))
+            assert not delta.full_replan
             _check_conformance(planner)
         assert saw_replan
         assert planner.stats["replans"] >= 2     # init + >=1 drift/forced

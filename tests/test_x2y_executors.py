@@ -221,7 +221,11 @@ class TestStreamingX2Y:
         inc = st.IncrementalX2YPlanner(6.0, wx=[2.0, 3.0])
         assert inc.num_reducers == 0 and inc.comm_cost == 0.0
         delta = inc.insert_y(2.0)          # first Y forces a real split
-        assert delta.full_replan
+        # forced re-plans are patch deltas now: the fresh plan is adopted
+        # as planning state, but only the new input's reducers recompute
+        assert delta.meta.get("replan") and delta.meta.get("forced")
+        assert not delta.full_replan
+        assert len(delta.dirty_rows) >= 1
         assert inc.num_reducers >= 1
         plan = inc.plan()
         assert plan.is_rect
