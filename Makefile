@@ -6,9 +6,9 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: test test-fast test-schemas test-stream test-x2y lint ci bench \
-	bench-quick bench-skewed bench-fused bench-sharded bench-stream \
-	bench-x2y
+.PHONY: test test-fast test-schemas test-stream test-x2y test-hierarchy \
+	lint ci bench bench-quick bench-skewed bench-fused bench-sharded \
+	bench-stream bench-x2y bench-hierarchy
 
 test:
 	$(PYTHON) -m pytest -q
@@ -30,17 +30,23 @@ test-stream:
 	$(PYTHON) -m pytest -q tests/test_stream.py tests/test_stream_tail.py
 
 # rectangular X2Y execution: the executor-generic conformance matrix
-# (every registry executor x {allpairs, x2y, some-pairs} x skew profiles)
-# plus the X2Y differential suite (rect kernel vs oracle, rect partition
-# invariants, streaming X- and Y-side edits, skew-join executor routing)
+# (every registry executor x {allpairs, x2y, some-pairs, block} x skew
+# profiles) plus the X2Y differential suite (rect kernel vs oracle, rect
+# partition invariants, streaming X- and Y-side edits, skew-join routing)
 test-x2y:
 	$(PYTHON) -m pytest -q tests/test_schema_conformance.py \
 		tests/test_x2y_executors.py
 
+# hierarchical planning: prefix pack vs FFD/BFD oracles, composed gap
+# ledger (gap_total == gap_outer * gap_inner), PlanCache keying by
+# grouping factor, sampled pair coverage at large m, run_block vs dense
+test-hierarchy:
+	$(PYTHON) -m pytest -q tests/test_hierarchy.py
+
 lint:
 	$(PYTHON) -m compileall -q src
 
-ci: lint test-schemas test-stream test-x2y test
+ci: lint test-schemas test-stream test-x2y test-hierarchy test
 
 bench:
 	$(PYTHON) benchmarks/bench_planner.py
@@ -77,3 +83,11 @@ bench-stream:
 bench-x2y:
 	JAX_PLATFORMS=$${JAX_PLATFORMS:-cpu} \
 		$(PYTHON) -m benchmarks.bench_x2y
+
+# hierarchical planner at m=10^6 (Zipf profile) + block serving; writes
+# benchmarks/BENCH_hierarchy.json and enforces the acceptance bars:
+# plan+bound < 10s, o(m^2) host index, sampled coverage == 1.0,
+# gap_total <= 2x flat gap at m=1024, block-served allclose to dense
+bench-hierarchy:
+	JAX_PLATFORMS=$${JAX_PLATFORMS:-cpu} \
+		$(PYTHON) benchmarks/bench_hierarchy.py

@@ -1,0 +1,224 @@
+"""Benchmark: hierarchical million-input planning + block serving.
+
+Three acceptance bars (ISSUE 8 / DESIGN.md section 1h):
+
+  * plan_million — ``plan_a2a_hierarchical`` plans *and lower-bounds* an
+    m=10^6 Zipf profile in < 10 s wall-clock, with host-side index state
+    o(m^2) (reported as CSR entries and peak RSS; the dense met matrix
+    alone would be 10^12 cells);
+  * gap_vs_flat — at m=1024 the composed ledger's ``gap_total`` (the
+    provable upper bound on the two-level plan's gap) stays <= 2x the
+    flat planner's measured gap on the same profile;
+  * block_allclose — every block of an m=1024 cross-check grid served
+    through ``Executor.run_block`` matches the dense executor allclose.
+
+Writes the machine-readable report to ``benchmarks/BENCH_hierarchy.json``
+(next to BENCH_engine.json / BENCH_stream.json / BENCH_x2y.json).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+BENCH_JSON = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                          "BENCH_hierarchy.json")
+
+PLAN_WALL_BAR_S = 10.0
+GAP_RATIO_BAR = 2.0
+HOST_ENTRIES_PER_INPUT_BAR = 100      # o(m^2) witness: entries <= 100 m
+
+
+def zipf_weights(m: int, q: float, a: float = 0.6, seed: int = 0):
+    """Power-law rank profile w_k ~ k^-a, shuffled, clipped under q/4 so
+    grouping factors c >= 2 stay feasible."""
+    w = 1.0 / (np.arange(1, m + 1) ** a)
+    w = w / w.max()
+    w = np.clip(w, None, 0.24 * q)
+    np.random.default_rng(seed).shuffle(w)
+    return w
+
+
+def bench_plan_million(m: int, seed: int) -> dict:
+    from repro.core import PLAN_CACHE, plan_a2a_hierarchical, \
+        sampled_pair_coverage
+    from repro.mapreduce import build_sparse_plan
+
+    q = 25.0
+    w = zipf_weights(m, q, seed=seed)
+    PLAN_CACHE.clear()
+    t0 = time.perf_counter()
+    schema = plan_a2a_hierarchical(w, q)
+    gap = schema.optimality_gap()            # cost + Thm-8 bound computed
+    plan_s = time.perf_counter() - t0
+    h = schema.meta.get("hierarchy", {})
+
+    t0 = time.perf_counter()
+    sparse = build_sparse_plan(schema)
+    sparse_s = time.perf_counter() - t0
+    cov = sampled_pair_coverage(schema, 2048, seed=seed)
+
+    try:
+        import resource
+        maxrss_mb = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss \
+            / 1024.0
+    except Exception:
+        maxrss_mb = None
+    return {
+        "m": m, "q": q, "s": float(np.sum(w)),
+        "algorithm": schema.algorithm,
+        "reducers": schema.num_reducers,
+        "plan_s": plan_s,
+        "sparse_build_s": sparse_s,
+        "optimality_gap": gap,
+        "hierarchy": h,
+        "sampled_coverage": cov,
+        "host_entries": sparse.host_entries,
+        "host_entries_per_input": sparse.host_entries / m,
+        "maxrss_mb": maxrss_mb,
+    }
+
+
+def bench_gap_vs_flat(m: int, seed: int) -> dict:
+    from repro.core import plan_a2a, plan_a2a_hierarchical
+
+    q = 25.0
+    w = zipf_weights(m, q, seed=seed)
+    flat = plan_a2a(w, q, use_cache=False)
+    flat_gap = flat.optimality_gap()
+    hier = plan_a2a_hierarchical(w, q, c=2, use_cache=False)
+    h = hier.meta["hierarchy"]
+    return {
+        "m": m, "q": q,
+        "flat_algorithm": flat.algorithm,
+        "flat_gap": flat_gap,
+        "hier_algorithm": hier.algorithm,
+        "hier_measured_gap": hier.optimality_gap(),
+        "gap_total": h["gap_total"],
+        "gap_inner": h["gap_inner"],
+        "gap_outer": h["gap_outer"],
+        "gap_ratio": h["gap_total"] / flat_gap if flat_gap else None,
+    }
+
+
+def bench_block_allclose(m: int, d: int, block: int, seed: int,
+                         executors=("bucketed", "fused")) -> dict:
+    import jax.numpy as jnp
+    from repro.core import plan_a2a_hierarchical
+    from repro.mapreduce.allpairs import (
+        pairwise_similarity,
+        pairwise_similarity_block,
+    )
+
+    q = 25.0
+    w = zipf_weights(m, q, seed=seed)
+    rng = np.random.default_rng(seed + 1)
+    x = jnp.asarray(rng.normal(size=(m, d)), jnp.float32)
+    schema = plan_a2a_hierarchical(w, q, c=2, use_cache=False)
+    ref, _, _ = pairwise_similarity(x, q=q, schema=schema,
+                                    executor="dense")
+    ref = np.asarray(ref)
+    out = {"m": m, "d": d, "block": block, "executors": {}}
+    for ex in executors:
+        t0 = time.perf_counter()
+        max_err, blocks, ok = 0.0, 0, True
+        for i0 in range(0, m, block):
+            for j0 in range(0, m, block):
+                i1, j1 = min(i0 + block, m), min(j0 + block, m)
+                blk, _, _ = pairwise_similarity_block(
+                    x, i0, i1, j0, j1, q=q, schema=schema, executor=ex)
+                err = float(np.abs(np.asarray(blk)
+                                   - ref[i0:i1, j0:j1]).max())
+                max_err = max(max_err, err)
+                ok = ok and np.allclose(np.asarray(blk),
+                                        ref[i0:i1, j0:j1], atol=1e-4)
+                blocks += 1
+        out["executors"][ex] = {
+            "blocks": blocks, "allclose": bool(ok),
+            "max_abs_err": max_err,
+            "wall_s": time.perf_counter() - t0,
+        }
+    return out
+
+
+def emit_bench_json(payload: dict, path: str = BENCH_JSON) -> str:
+    existing = {}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                existing = json.load(f)
+        except (json.JSONDecodeError, OSError):
+            existing = {}
+    existing.update(payload)
+    with open(path, "w") as f:
+        json.dump(existing, f, indent=1, sort_keys=True)
+        f.write("\n")
+    return os.path.abspath(path)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--m-plan", type=int, default=1_000_000)
+    ap.add_argument("--m-block", type=int, default=1024)
+    ap.add_argument("--d", type=int, default=8)
+    ap.add_argument("--block", type=int, default=256)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    plan = bench_plan_million(args.m_plan, args.seed)
+    print(f"hierarchy  m={plan['m']} [{plan['algorithm']}] "
+          f"plan+bound={plan['plan_s']:.2f}s "
+          f"sparse={plan['sparse_build_s']:.2f}s "
+          f"gap={plan['optimality_gap']:.3f} "
+          f"gap_total={plan['hierarchy'].get('gap_total', 0):.3f} "
+          f"coverage={plan['sampled_coverage']:.3f} "
+          f"host_entries/m={plan['host_entries_per_input']:.1f}")
+
+    gap = bench_gap_vs_flat(args.m_block, args.seed)
+    print(f"  m={gap['m']} flat[{gap['flat_algorithm']}] "
+          f"gap={gap['flat_gap']:.3f} vs hier[{gap['hier_algorithm']}] "
+          f"gap_total={gap['gap_total']:.3f} "
+          f"(measured {gap['hier_measured_gap']:.3f}) "
+          f"ratio={gap['gap_ratio']:.2f}")
+
+    blocks = bench_block_allclose(args.m_block, args.d, args.block,
+                                  args.seed)
+    for ex, r in blocks["executors"].items():
+        print(f"  block-serve [{ex}] {r['blocks']} blocks of "
+              f"{blocks['block']} allclose={r['allclose']} "
+              f"max_err={r['max_abs_err']:.2e} wall={r['wall_s']:.1f}s")
+
+    path = emit_bench_json({"hierarchy": {
+        "plan_million": plan, "gap_vs_flat": gap,
+        "block_allclose": blocks}})
+    print(f"  wrote {path}")
+
+    # ------------------------------------------------------- acceptance bars
+    if plan["plan_s"] >= PLAN_WALL_BAR_S:
+        raise SystemExit(f"FAIL: m={plan['m']} plan+bound took "
+                         f"{plan['plan_s']:.1f}s (bar: < "
+                         f"{PLAN_WALL_BAR_S:.0f}s)")
+    if plan["sampled_coverage"] < 1.0:
+        raise SystemExit("FAIL: sampled pair coverage "
+                         f"{plan['sampled_coverage']:.4f} (bar: == 1.0)")
+    if plan["host_entries_per_input"] > HOST_ENTRIES_PER_INPUT_BAR:
+        raise SystemExit(
+            f"FAIL: {plan['host_entries_per_input']:.0f} host index "
+            f"entries per input (bar: <= {HOST_ENTRIES_PER_INPUT_BAR} — "
+            f"o(m^2) violated)")
+    if gap["gap_ratio"] is None or gap["gap_ratio"] > GAP_RATIO_BAR:
+        raise SystemExit(f"FAIL: gap_total/flat_gap = {gap['gap_ratio']} "
+                         f"(bar: <= {GAP_RATIO_BAR})")
+    for ex, r in blocks["executors"].items():
+        if not r["allclose"]:
+            raise SystemExit(f"FAIL: [{ex}] block-served values diverge "
+                             f"from dense (max err {r['max_abs_err']:.2e})")
+    return {"plan": plan, "gap": gap, "blocks": blocks}
+
+
+if __name__ == "__main__":
+    main()

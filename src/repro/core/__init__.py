@@ -43,7 +43,7 @@ Supporting modules: ``unit_schemas`` (Sections 5-7 constructions),
 ``exact`` (brute-force optima for tiny instances), ``primes``.
 """
 
-from .binpack import bfd, ffd, pack
+from .binpack import bfd, ffd, pack, pack_prefix, prefix_bins
 from .bounds import (
     a2a_algk_comm_upper_bound,
     a2a_binpack_comm_lower_bound,
@@ -57,6 +57,11 @@ from .bounds import (
     x2y_comm_lower_bound,
     x2y_comm_upper_bound,
     x2y_reducers_lower_bound,
+)
+from .hierarchy import (
+    choose_grouping_factor,
+    plan_a2a_hierarchical,
+    sampled_pair_coverage,
 )
 from .planner import (
     PlanPartition,
@@ -95,7 +100,9 @@ __all__ = [
     "PLAN_CACHE", "PlanCache",
     "UNIT_REGISTRY", "A2A_REGISTRY",
     "register_unit_strategy", "register_a2a_strategy",
-    "ffd", "bfd", "pack",
+    "ffd", "bfd", "pack", "pack_prefix", "prefix_bins",
+    "plan_a2a_hierarchical", "choose_grouping_factor",
+    "sampled_pair_coverage",
     "is_prime", "prev_prime", "next_prime",
     "unit_schemas",
     "a2a_comm_lower_bound", "a2a_reducers_lower_bound",

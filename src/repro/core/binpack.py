@@ -12,6 +12,16 @@ O(n^2) scans (kept as ``ffd_reference``/``bfd_reference`` for tests and the
 packing benchmark) — the planner's estimate phase packs once per candidate
 bin size, so packing must not dominate planning time (see DESIGN.md,
 "strategy registry").
+
+``pack_prefix`` is the array-native formulation for million-input instances
+(DESIGN.md "hierarchical planning"): next-fit decreasing over prefix sums.
+One vectorized ``searchsorted`` finds, for every sorted position, where a
+bin starting there would end; walking that jump table from position 0
+yields the bin boundaries in O(#bins) steps — no per-item Python
+iteration.  Adjacent bins always sum past capacity (else they would have
+merged), which keeps the half-full count guarantee the paper's theorems
+lean on (``#bins <= ceil(2s/b) + 1``), so the hierarchical planner's
+composed gap ledger stays a provable constant.
 """
 
 from __future__ import annotations
@@ -25,6 +35,8 @@ __all__ = [
     "ffd",
     "bfd",
     "pack",
+    "pack_prefix",
+    "prefix_bins",
     "num_bins_lower_bound",
     "ffd_reference",
     "bfd_reference",
@@ -149,12 +161,81 @@ def bfd_reference(weights: Sequence[float],
     return bins
 
 
+def pack_prefix(weights: Sequence[float], bin_size: float) -> np.ndarray:
+    """Array-native sorted-prefix-sum packing: (n,) int64 bin assignment.
+
+    Next-fit decreasing, vectorized.  With ``csum`` the inclusive prefix
+    sums of the descending-sorted weights, a single ``searchsorted(csum,
+    csum - w + b)`` computes for *every* sorted position the end of the bin
+    that would start there; the actual bin boundaries are the orbit of
+    position 0 under that jump table, O(#bins) trivially-cheap steps
+    instead of FFD's inherently sequential per-item placement.  The first
+    item of each bin did not fit in the previous bin, so adjacent bins sum
+    past capacity and ``#bins <= ceil(2s / b) + 1`` — the same half-full
+    guarantee behind Theorem 10's ``#bins <= 2s/b``.  A million weights
+    pack in milliseconds where the segment-tree FFD takes seconds.
+
+    Returns bin ids in original item order; ids are contiguous from 0 in
+    descending-weight order.  Empirically FFD packs a few percent tighter;
+    the hierarchical planner accounts for the difference in its
+    ``gap_inner`` ledger term, which this construction provably bounds.
+    """
+    w = np.asarray(weights, dtype=np.float64)
+    if w.size and bin_size <= 0:
+        raise ValueError(f"bin_size must be positive, got {bin_size}")
+    _check_fits(w, bin_size)
+    n = len(w)
+    if n == 0:
+        return np.zeros(0, dtype=np.int64)
+    order = _decreasing_order(w)
+    ws = w[order]
+    csum = np.cumsum(ws)
+    cap = bin_size
+    # float cumsum error can push a boundary item over capacity at very
+    # large n; shave the measured overshoot off the working capacity and
+    # re-split (overshoot is rounding noise, so this converges immediately)
+    for _ in range(4):
+        ends = np.searchsorted(csum, csum - ws + cap + _EPS, side="right")
+        ends = np.maximum(ends, np.arange(1, n + 1))  # always make progress
+        bounds = [0]
+        pos = 0
+        while pos < n:  # orbit walk: one step per *bin*, not per item
+            pos = int(ends[pos])
+            bounds.append(pos)
+        counts = np.diff(np.asarray(bounds, dtype=np.int64))
+        bin_of_sorted = np.repeat(
+            np.arange(len(counts), dtype=np.int64), counts)
+        over = float(np.bincount(bin_of_sorted, weights=ws).max()) - bin_size
+        if over <= _EPS:
+            break
+        cap -= over
+    else:  # pragma: no cover - float noise is orders below bin_size
+        raise AssertionError("prefix pack failed to fit bins")
+    bin_of = np.empty(n, dtype=np.int64)
+    bin_of[order] = bin_of_sorted
+    return bin_of
+
+
+def prefix_bins(weights: Sequence[float], bin_size: float) -> list[list[int]]:
+    """``pack_prefix`` in the bin -> item-ids format of ``ffd``/``bfd``."""
+    w = np.asarray(weights, dtype=np.float64)
+    bin_of = pack_prefix(w, bin_size)
+    if bin_of.size == 0:
+        return []
+    order = _decreasing_order(w)
+    sorted_bins = bin_of[order]
+    cuts = np.flatnonzero(np.diff(sorted_bins)) + 1
+    return [g.tolist() for g in np.split(order, cuts)]
+
+
 def pack(weights: Sequence[float], bin_size: float,
          method: str = "ffd") -> list[list[int]]:
     if method == "ffd":
         return ffd(weights, bin_size)
     if method == "bfd":
         return bfd(weights, bin_size)
+    if method == "prefix":
+        return prefix_bins(weights, bin_size)
     if method == "best":
         a, b = ffd(weights, bin_size), bfd(weights, bin_size)
         return a if len(a) <= len(b) else b

@@ -54,7 +54,10 @@ Public API
 from .engine import (
     ReducerBucket,
     ReducerPlan,
+    SparsePlan,
+    block_subplan,
     build_plan,
+    build_sparse_plan,
     build_x2y_plan,
     configure_jit_cache,
     fused_stats,
@@ -78,20 +81,23 @@ from .allpairs import (
     assemble_pair_matrix_bucketed,
     assemble_x2y_matrix_bucketed,
     pairwise_similarity,
+    pairwise_similarity_block,
     some_pairs_similarity,
     x2y_similarity,
 )
 from .skewjoin import join, skew_join
 
 __all__ = [
-    "ReducerBucket", "ReducerPlan", "build_plan", "build_x2y_plan",
+    "ReducerBucket", "ReducerPlan", "SparsePlan", "build_plan",
+    "build_sparse_plan", "block_subplan", "build_x2y_plan",
     "run_reducers", "run_reducers_bucketed", "run_reducers_fused",
     "run_reducers_sharded", "run_reducers_x2y",
     "run_reducers_x2y_bucketed",
     "Executor", "get_executor", "make_executor", "register_executor",
     "list_executors",
     "fused_stats", "jit_cache_stats", "configure_jit_cache",
-    "pairwise_similarity", "some_pairs_similarity", "x2y_similarity",
+    "pairwise_similarity", "pairwise_similarity_block",
+    "some_pairs_similarity", "x2y_similarity",
     "assemble_pair_matrix", "assemble_pair_matrix_bucketed",
     "assemble_x2y_matrix_bucketed",
     "skew_join", "join",

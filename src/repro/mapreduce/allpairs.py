@@ -21,14 +21,17 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import plan_a2a, plan_some_pairs, plan_x2y
+from repro.core import (plan_a2a, plan_a2a_hierarchical, plan_some_pairs,
+                        plan_x2y)
 from repro.core.schema import MappingSchema
 
-from .engine import ReducerPlan, build_plan, build_x2y_plan
+from .engine import (ReducerPlan, SparsePlan, build_plan,
+                     build_sparse_plan, build_x2y_plan)
 from .executors import get_executor
 
 __all__ = [
     "pairwise_similarity",
+    "pairwise_similarity_block",
     "some_pairs_similarity",
     "x2y_similarity",
     "assemble_pair_matrix",
@@ -319,6 +322,57 @@ def pairwise_similarity(
     sims = _run_and_assemble(x, plan, fn, m, mesh, executor,
                              use_kernel=use_kernel, interpret=interpret)
     return sims, plan, schema
+
+
+def _sparse_plan_for(schema) -> SparsePlan:
+    """Memoized CSR plan for a schema (same caching contract as
+    ``_plan_for``: one sparse plan per schema object, shared across block
+    requests so executor-side srcmaps and the sub-plan LRU persist)."""
+    cached = schema.__dict__.get("_sparse_plan")
+    if cached is None:
+        cached = build_sparse_plan(schema)
+        schema.__dict__["_sparse_plan"] = cached
+    return cached
+
+
+def pairwise_similarity_block(
+    x: jax.Array,                       # (m, d)
+    i0: int, i1: int, j0: int, j1: int,
+    *,
+    q: Optional[float] = None,
+    weights=None,                       # per-input sizes; default: uniform
+    schema: Optional[MappingSchema] = None,
+    metric: str = "dot",
+    mesh=None,
+    pad_slots_to: int = 1,
+    executor: str = "bucketed",
+    interpret: bool = False,
+):
+    """One ``[i0:i1) x [j0:j1)`` sub-block of the all-pairs similarity
+    matrix, without materializing (m, m) anywhere.
+
+    The schema is planned hierarchically (``plan_a2a_hierarchical`` — the
+    flat planner at small m, two-level super-input packing at large m) and
+    lowered once to a CSR :class:`~repro.mapreduce.engine.SparsePlan`
+    cached on the schema; each block request then routes through the
+    executor's ``run_block`` — the registry default selects only the
+    reducers covering the block and serves them via ``run_x2y``, so
+    per-block work scales with the block, not with m.  Global-diagonal
+    cells inside the block are zeroed, matching ``pairwise_similarity``.
+
+    Returns (block (i1-i0, j1-j0), sparse plan, schema)."""
+    m = x.shape[0]
+    if schema is None:
+        if q is None:
+            raise ValueError("pass q or a pre-planned schema")
+        w = np.full(m, 1.0) if weights is None else np.asarray(weights, float)
+        schema = plan_a2a_hierarchical(w, q)
+    sparse = _sparse_plan_for(schema)
+    fn = _block_fn_x2y(metric)
+    block = get_executor(executor).run_block(
+        x, sparse, fn, int(i0), int(i1), int(j0), int(j1), mesh=mesh,
+        interpret=interpret, pad_slots_to=pad_slots_to)
+    return block, sparse, schema
 
 
 def some_pairs_similarity(

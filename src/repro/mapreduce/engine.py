@@ -66,7 +66,10 @@ from repro.core.schema import MappingSchema
 __all__ = [
     "ReducerBucket",
     "ReducerPlan",
+    "SparsePlan",
     "build_plan",
+    "build_sparse_plan",
+    "block_subplan",
     "build_x2y_plan",
     "build_x2y_plan_arrays",
     "run_reducers",
@@ -342,6 +345,186 @@ def build_x2y_plan_arrays(
         max_inputs=Lx0, algorithm=algorithm, lower_bound=lower_bound,
         buckets=buckets, yidx=yidx, ymask=ymask, max_y_inputs=Ly0,
         num_x=int(num_x), num_y=int(num_y))
+
+
+# ---------------------------------------------------------------------------
+# sparse plans: CSR gather maps for block-addressed serving (no O(m^2) host)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class SparsePlan:
+    """CSR view of a schema for block-addressed execution.
+
+    ``build_plan`` expands reducer -> original input ids, which at m = 10^6
+    with thousands of inputs per reducer is ~10^9 host entries before a
+    single gather runs.  The sparse plan stays at the schema's own
+    granularity — three CSR maps totaling O(m + assignments):
+
+      bin_indptr / bin_inputs    — bin -> original input ids (disjoint);
+      bin_of                     — input -> bin (inverse of the above);
+      red_indptr / red_bins      — reducer -> bin ids;
+      binred_indptr / bin_reds   — bin -> reducer ids (inverse shuffle).
+
+    ``block_subplan`` materializes only the reducers a requested
+    ``[i0:i1) x [j0:j1)`` output block needs, as a rectangular
+    :class:`ReducerPlan` in block-local coordinates, so every registry
+    executor serves blocks through its existing ``run_x2y`` path.  Built
+    sub-plans are LRU-cached on the instance (``_block_cache``) because
+    the fused/sharded executors cache their inverse-shuffle srcmaps on the
+    plan object.
+    """
+
+    num_inputs: int
+    q: float
+    bin_indptr: np.ndarray
+    bin_inputs: np.ndarray
+    bin_of: np.ndarray
+    red_indptr: np.ndarray
+    red_bins: np.ndarray
+    binred_indptr: np.ndarray
+    bin_reds: np.ndarray
+    comm_cost: float = 0.0
+    lower_bound: Optional[float] = None
+    algorithm: str = "unknown"
+
+    @property
+    def num_bins(self) -> int:
+        return int(len(self.bin_indptr) - 1)
+
+    @property
+    def num_reducers(self) -> int:
+        return int(len(self.red_indptr) - 1)
+
+    @property
+    def host_entries(self) -> int:
+        """Total host-side index entries — o(m^2) by construction."""
+        return int(self.bin_inputs.size + self.bin_of.size
+                   + 2 * self.red_bins.size)
+
+    @property
+    def optimality_gap(self) -> Optional[float]:
+        if self.lower_bound is None or self.lower_bound <= 0.0:
+            return None
+        return self.comm_cost / self.lower_bound
+
+
+def build_sparse_plan(schema: MappingSchema) -> SparsePlan:
+    """CSR maps from a disjoint-bins schema, no per-input Python loops.
+
+    Raises on overlapping-bin schemas (hybrid / big-input paths): those are
+    small-m constructions that the dense ``build_plan`` already serves.
+    """
+    if schema.meta.get("bins_overlap", False):
+        raise ValueError(
+            "sparse plans require disjoint bins; use build_plan for the "
+            "overlapping hybrid/big-input schemas")
+    m = schema.m
+    nb = len(schema.bins)
+    bin_counts = np.asarray([len(b) for b in schema.bins], dtype=np.int64)
+    bin_inputs = (np.concatenate(
+        [np.asarray(b, dtype=np.int64) for b in schema.bins])
+        if nb else np.zeros(0, dtype=np.int64))
+    bin_indptr = np.zeros(nb + 1, dtype=np.int64)
+    np.cumsum(bin_counts, out=bin_indptr[1:])
+    bin_of = np.full(m, -1, dtype=np.int64)
+    bin_of[bin_inputs] = np.repeat(
+        np.arange(nb, dtype=np.int64), bin_counts)
+
+    nr = len(schema.reducers)
+    red_counts = np.asarray([len(r) for r in schema.reducers],
+                            dtype=np.int64)
+    red_bins = (np.concatenate(
+        [np.asarray(r, dtype=np.int64) for r in schema.reducers])
+        if nr else np.zeros(0, dtype=np.int64))
+    red_indptr = np.zeros(nr + 1, dtype=np.int64)
+    np.cumsum(red_counts, out=red_indptr[1:])
+
+    # invert to bin -> reducers (the inverse-shuffle direction)
+    red_of = np.repeat(np.arange(nr, dtype=np.int64), red_counts)
+    order = np.lexsort((red_of, red_bins))
+    binred_indptr = np.zeros(nb + 1, dtype=np.int64)
+    np.cumsum(np.bincount(red_bins, minlength=nb), out=binred_indptr[1:])
+    return SparsePlan(
+        num_inputs=m, q=float(schema.q), bin_indptr=bin_indptr,
+        bin_inputs=bin_inputs, bin_of=bin_of, red_indptr=red_indptr,
+        red_bins=red_bins, binred_indptr=binred_indptr,
+        bin_reds=red_of[order], comm_cost=schema.communication_cost(),
+        lower_bound=schema.lower_bound, algorithm=schema.algorithm)
+
+
+def _gather_csr(indptr: np.ndarray, data: np.ndarray,
+                keys: np.ndarray) -> np.ndarray:
+    """Concatenate ``data[indptr[k]:indptr[k+1]]`` over ``keys``."""
+    if keys.size == 0:
+        return np.zeros(0, dtype=data.dtype)
+    return np.concatenate(
+        [data[indptr[k]:indptr[k + 1]] for k in keys])
+
+
+def block_subplan(sparse: SparsePlan, i0: int, i1: int, j0: int, j1: int,
+                  *, pad_reducers_to: int = 1, pad_slots_to: int = 1,
+                  max_buckets: int = 8,
+                  cache_size: int = 64) -> Optional[ReducerPlan]:
+    """Rectangular sub-plan serving output block ``[i0:i1) x [j0:j1)``.
+
+    Selects exactly the reducers hosting at least one row bin *and* one
+    column bin — for any required pair (i, j) in the block, the reducer
+    the schema covers it with hosts ``bin_of[i]`` (a row bin) and
+    ``bin_of[j]`` (a column bin), so it is selected and the block inherits
+    the schema's full coverage.  Each selected reducer is restricted to
+    the block-local X / Y ids it actually hosts; the result is an ordinary
+    rectangular plan any executor runs via ``run_x2y``.  Returns ``None``
+    for a block no reducer touches (empty ranges).  LRU-cached on the
+    sparse plan so repeated requests reuse executor-side srcmaps.
+    """
+    if not (0 <= i0 <= i1 <= sparse.num_inputs
+            and 0 <= j0 <= j1 <= sparse.num_inputs):
+        raise IndexError(
+            f"block [{i0}:{i1}) x [{j0}:{j1}) outside "
+            f"m={sparse.num_inputs}")
+    key = (i0, i1, j0, j1, pad_reducers_to, pad_slots_to, max_buckets)
+    cache = sparse.__dict__.get("_block_cache")
+    if cache is None:
+        cache = OrderedDict()
+        object.__setattr__(sparse, "_block_cache", cache)
+    if key in cache:
+        cache.move_to_end(key)
+        return cache[key]
+
+    row_bins = np.unique(sparse.bin_of[i0:i1])
+    col_bins = np.unique(sparse.bin_of[j0:j1])
+    row_bins = row_bins[row_bins >= 0]
+    col_bins = col_bins[col_bins >= 0]
+    row_reds = np.unique(
+        _gather_csr(sparse.binred_indptr, sparse.bin_reds, row_bins))
+    col_reds = np.unique(
+        _gather_csr(sparse.binred_indptr, sparse.bin_reds, col_bins))
+    cand = np.intersect1d(row_reds, col_reds, assume_unique=True)
+
+    xs: list[np.ndarray] = []
+    ys: list[np.ndarray] = []
+    for r in cand:
+        bins_r = sparse.red_bins[
+            sparse.red_indptr[r]:sparse.red_indptr[r + 1]]
+        inputs_r = _gather_csr(sparse.bin_indptr, sparse.bin_inputs, bins_r)
+        xr = inputs_r[(inputs_r >= i0) & (inputs_r < i1)] - i0
+        yr = inputs_r[(inputs_r >= j0) & (inputs_r < j1)] - j0
+        if xr.size and yr.size:
+            xs.append(xr)
+            ys.append(yr)
+    if not xs:
+        plan = None
+    else:
+        plan = build_x2y_plan_arrays(
+            xs, ys, num_x=i1 - i0, num_y=j1 - j0,
+            comm_cost=float(sum(len(a) + len(b)
+                                for a, b in zip(xs, ys))),
+            algorithm=f"block+{sparse.algorithm}",
+            pad_reducers_to=pad_reducers_to, pad_slots_to=pad_slots_to,
+            max_buckets=max_buckets)
+    cache[key] = plan
+    while len(cache) > cache_size:
+        cache.popitem(last=False)
+    return plan
 
 
 def build_x2y_plan(schema: MappingSchema, num_x: int, *,

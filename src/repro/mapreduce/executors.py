@@ -119,6 +119,40 @@ class Executor:
         method."""
         raise NotImplementedError
 
+    def run_block(self, x, sparse, reducer_fn: Callable,
+                  i0: int, i1: int, j0: int, j1: int, *, mesh=None,
+                  use_kernel: bool = False, interpret: bool = False,
+                  pad_reducers_to: int = 1, pad_slots_to: int = 1,
+                  max_buckets: int = 8):
+        """Serve the ``[i0:i1) x [j0:j1)`` sub-block of the (m, m) pair
+        matrix without materializing the whole matrix.
+
+        ``sparse`` is an :class:`~repro.mapreduce.engine.SparsePlan`;
+        ``reducer_fn`` is a two-sided (X2Y) reducer.  The default routes
+        the block's reducers — selected by
+        :func:`~repro.mapreduce.engine.block_subplan` — through this
+        executor's own ``run_x2y`` (fused/sharded executors therefore
+        reuse their inverse-shuffle srcmap machinery restricted to the
+        block), then zeroes global-diagonal cells to match the dense pair
+        matrix's convention.  Works for every registry executor; override
+        only to specialize the routing."""
+        bx, by = i1 - i0, j1 - j0
+        sub = _engine.block_subplan(
+            sparse, i0, i1, j0, j1, pad_reducers_to=pad_reducers_to,
+            pad_slots_to=pad_slots_to, max_buckets=max_buckets)
+        if sub is None or bx == 0 or by == 0:
+            out = jnp.zeros((max(bx, 0), max(by, 0)), jnp.float32)
+        else:
+            out = self.run_x2y((x[i0:i1], x[j0:j1]), sub, reducer_fn,
+                               (bx, by), mesh=mesh, use_kernel=use_kernel,
+                               interpret=interpret)
+        lo, hi = max(i0, j0), min(i1, j1)
+        if lo < hi:  # the block crosses the global diagonal: zero it
+            d = jnp.arange(lo, hi)
+            out = out.at[d - i0, d - j0].set(0.0)
+        self._count("block_calls")
+        return out
+
     def lower(self, input_shape, plan: ReducerPlan, *, reducer_fn=None,
               metric=None, mesh=None, dtype=jnp.float32, shard_axes=None,
               **kwargs):

@@ -174,10 +174,14 @@ class PairwiseService:
             "stream_replans": 0,
             "stream_repacks": 0,
             "stream_swaps": 0,
+            "block_requests": 0,
             "wall_s": 0.0,
         }
         self._planner = None                     # streaming: live planner
         self._table: Optional[np.ndarray] = None  # streaming: live rows
+        self._block_table: Optional[np.ndarray] = None  # block serving
+        self._block_schema = None
+        self._block_sparse = None
 
     def executor_stats(self) -> dict:
         """This service's private executor dispatch counters."""
@@ -294,6 +298,69 @@ class PairwiseService:
         """Aggregate dense/bucketed padded-element ratio across requests."""
         return (self.stats["dense_padded_elements"] /
                 max(self.stats["bucketed_padded_elements"], 1))
+
+    # --------------------------------------------------------- block serving
+    def load_block_table(self, x, weights=None, *, c=None):
+        """Adopt ``x`` for block-addressed serving (any executor).
+
+        Plans a hierarchical schema (``plan_a2a_hierarchical``: the flat
+        registry planner at small m, two-level super-input packing beyond)
+        and lowers it to a CSR sparse plan — O(m + assignments) host
+        state, never the (m, m) matrix — so the table can be orders of
+        magnitude larger than ``similarity`` allows.  Returns an info dict
+        with the plan provenance, including the composed optimality-gap
+        ledger (``hierarchy``) when the two-level path ran.  Serve blocks
+        with :meth:`block`."""
+        from repro.core import plan_a2a_hierarchical
+        from repro.mapreduce.allpairs import _sparse_plan_for
+        t0 = time.perf_counter()
+        self._block_table = np.asarray(x, dtype=np.float32)
+        m = self._block_table.shape[0]
+        w = np.full(m, 1.0) if weights is None \
+            else np.asarray(weights, dtype=np.float64)
+        self._block_schema = plan_a2a_hierarchical(w, self.q, c=c)
+        self._block_sparse = _sparse_plan_for(self._block_schema)
+        dt = time.perf_counter() - t0
+        self.stats["wall_s"] += dt
+        sp = self._block_sparse
+        return {
+            "executor": self.executor,
+            "algorithm": sp.algorithm,
+            "m": m,
+            "reducers": sp.num_reducers,
+            "bins": sp.num_bins,
+            "host_entries": sp.host_entries,
+            "comm_cost": sp.comm_cost,
+            "lower_bound": sp.lower_bound,
+            "optimality_gap": sp.optimality_gap,
+            "hierarchy": self._block_schema.meta.get("hierarchy"),
+            "wall_s": dt,
+        }
+
+    def block(self, i0: int, i1: int, j0: int, j1: int):
+        """Serve one ``[i0:i1) x [j0:j1)`` sub-block of the pair matrix
+        through this service's executor (``Executor.run_block``) — only
+        the reducers covering the block run, nothing O(m^2) is built.
+        Returns ``(block, info)``."""
+        from repro.mapreduce.allpairs import _block_fn_x2y
+        assert getattr(self, "_block_table", None) is not None, \
+            "call load_block_table() first"
+        t0 = time.perf_counter()
+        blk = self._executor.run_block(
+            jnp.asarray(self._block_table), self._block_sparse,
+            _block_fn_x2y(self.metric), int(i0), int(i1), int(j0),
+            int(j1), mesh=self.mesh, use_kernel=self.use_kernel,
+            interpret=self.interpret)
+        blk = jax.block_until_ready(blk)
+        dt = time.perf_counter() - t0
+        self.stats["block_requests"] += 1
+        self.stats["wall_s"] += dt
+        return blk, {
+            "executor": self.executor,
+            "block": (int(i0), int(i1), int(j0), int(j1)),
+            "block_calls": self._executor.stats().get("block_calls", 0),
+            "wall_s": dt,
+        }
 
     # ------------------------------------------------------------- streaming
     def _reducer_fn(self):

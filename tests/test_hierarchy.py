@@ -1,0 +1,270 @@
+"""Hierarchical planner + sparse block serving (DESIGN.md section 1h).
+
+Covers the composed optimality-gap ledger (gap_total == gap_outer *
+gap_inner, and the measured gap it provably bounds), the array-native
+prefix pack against the FFD/BFD oracles, PlanCache keying by grouping
+factor, sampled pair-coverage conformance at large m, and run_block
+against the dense executor over a full cross-check grid.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    PLAN_CACHE,
+    choose_grouping_factor,
+    plan_a2a,
+    plan_a2a_hierarchical,
+    sampled_pair_coverage,
+)
+from repro.core.binpack import (
+    ffd_reference,
+    num_bins_lower_bound,
+    pack,
+    pack_prefix,
+    prefix_bins,
+)
+from repro.core.bounds import a2a_comm_lower_bound
+from repro.core.schema import InfeasibleError
+
+
+# ------------------------------------------------------------- prefix pack
+class TestPackPrefix:
+    def test_capacity_and_count_guarantee(self):
+        rng = np.random.default_rng(0)
+        for _ in range(100):
+            n = int(rng.integers(1, 80))
+            w = rng.uniform(0.01, 1.0, n)
+            b = float(rng.uniform(1.0, 3.0))
+            bin_of = pack_prefix(w, b)
+            sums = np.bincount(bin_of, weights=w)
+            assert sums.max() <= b + 1e-9
+            s = w.sum()
+            # half-full guarantee, same form as Theorem 10's 2s/b
+            assert bin_of.max() + 1 <= int(np.ceil(2 * s / b)) + 1
+            assert bin_of.max() + 1 >= num_bins_lower_bound(w, b)
+
+    def test_assignment_is_a_partition(self):
+        rng = np.random.default_rng(1)
+        w = rng.uniform(0.05, 0.9, 200)
+        bin_of = pack_prefix(w, 2.0)
+        bins = prefix_bins(w, 2.0)
+        assert sorted(i for g in bins for i in g) == list(range(200))
+        assert set(bin_of) == set(range(int(bin_of.max()) + 1))
+        for gid, g in enumerate(bins):
+            assert all(bin_of[i] == gid for i in g)
+
+    def test_close_to_ffd_oracle(self):
+        """Next-fit decreasing trails FFD by a bounded factor; at uniform
+        profiles the slack stays well under the 2x the ledger allows."""
+        rng = np.random.default_rng(2)
+        w = rng.uniform(0.01, 1.0, 500)
+        nf = len(ffd_reference(w, 2.0))
+        npx = int(pack_prefix(w, 2.0).max()) + 1
+        assert npx <= int(np.ceil(1.5 * nf)) + 1
+
+    def test_pack_dispatch_and_edges(self):
+        assert pack_prefix([], 1.0).size == 0
+        assert prefix_bins([], 1.0) == []
+        assert pack_prefix([1.0], 1.0).tolist() == [0]
+        assert pack_prefix([0.9, 0.8, 0.7], 1.0).tolist() == [0, 1, 2]
+        w = np.random.default_rng(3).uniform(0.1, 0.9, 40)
+        assert pack(w, 2.0, method="prefix") == prefix_bins(w, 2.0)
+        with pytest.raises(ValueError):
+            pack_prefix([0.5], -1.0)
+        with pytest.raises(ValueError):
+            pack_prefix([1.5], 1.0)  # item does not fit
+
+
+# ------------------------------------------------------------- gap ledger
+class TestGapLedger:
+    @pytest.mark.parametrize("m,c,seed", [(60, 1, 0), (150, 2, 1),
+                                          (300, 3, 2), (200, 2, 3)])
+    def test_product_identity_and_bound(self, m, c, seed):
+        rng = np.random.default_rng(seed)
+        q = 30.0
+        w = rng.uniform(0.1, q / (2 * c), m) * 0.999
+        schema = plan_a2a_hierarchical(w, q, c=c, use_cache=False)
+        schema.validate("a2a")
+        h = schema.meta["hierarchy"]
+        assert h["gap_total"] == pytest.approx(
+            h["gap_outer"] * h["gap_inner"], abs=1e-12)
+        gap = schema.optimality_gap()
+        if gap is not None:
+            # flattening preserves cost and Thm-8 bound: measured == outer
+            assert gap == pytest.approx(h["gap_outer"], rel=1e-9)
+            assert gap <= h["gap_total"] + 1e-9
+        assert schema.communication_cost() >= \
+            a2a_comm_lower_bound(w, q) - 1e-9
+
+    def test_ledger_fields(self):
+        rng = np.random.default_rng(4)
+        w = rng.uniform(0.2, 1.0, 400)
+        schema = plan_a2a_hierarchical(w, 24.0, c=4, use_cache=False)
+        h = schema.meta["hierarchy"]
+        assert h["c"] == 4 and h["b"] == pytest.approx(3.0)
+        assert h["num_super"] >= h["inner_bins_lb"]
+        assert h["gap_inner"] >= 1.0 and h["gap_outer"] >= 1.0 - 1e-9
+        assert schema.algorithm.startswith("hier-c4+")
+
+
+# ------------------------------------------------------------ cache by c
+class TestPlanCacheByGroupingFactor:
+    def test_keyed_by_profile_and_c(self):
+        """Satellite regression: hierarchical entries are keyed by
+        (profile, c) — changing c misses instead of colliding, and flat
+        plans for the same profile stay separate entries."""
+        rng = np.random.default_rng(5)
+        w = rng.uniform(0.3, 1.5, 300)
+        q = 40.0
+        PLAN_CACHE.clear()
+        s2 = plan_a2a_hierarchical(w, q, c=2)
+        after_miss = PLAN_CACHE.stats()
+        s2b = plan_a2a_hierarchical(w, q, c=2)
+        after_hit = PLAN_CACHE.stats()
+        assert s2b is s2
+        assert after_hit["hits"] == after_miss["hits"] + 1
+        assert after_hit["misses"] == after_miss["misses"]
+
+        s3 = plan_a2a_hierarchical(w, q, c=3)
+        assert s3 is not s2
+        assert s3.meta["hierarchy"]["c"] == 3
+        assert s2.meta["hierarchy"]["c"] == 2
+
+        flat = plan_a2a(w, q)
+        assert "hierarchy" not in flat.meta
+        # and the flat entry did not evict or alias the hierarchical ones
+        assert plan_a2a_hierarchical(w, q, c=2) is s2
+
+
+# ----------------------------------------------------------- planner paths
+class TestHierarchicalPlanner:
+    def test_auto_small_m_falls_back_flat(self):
+        w = np.random.default_rng(6).uniform(0.2, 0.5, 64)
+        schema = plan_a2a_hierarchical(w, 4.0, use_cache=False)
+        assert "hierarchy" not in schema.meta
+        schema.validate("a2a")
+
+    def test_auto_big_input_falls_back_flat(self):
+        w = np.random.default_rng(7).uniform(0.02, 0.1, 5000)
+        w[0] = 0.8
+        schema = plan_a2a_hierarchical(w, 1.0, use_cache=False,
+                                       target_super=256)
+        assert "hierarchy" not in schema.meta
+
+    def test_auto_large_m_groups(self):
+        w = np.random.default_rng(8).uniform(0.01, 0.05, 20000)
+        schema = plan_a2a_hierarchical(w, 2.0, use_cache=False,
+                                       target_super=512)
+        h = schema.meta["hierarchy"]
+        assert h["c"] >= 1 and h["num_super"] < 20000
+        assert sampled_pair_coverage(schema, 1024, seed=0) == 1.0
+
+    def test_explicit_c_infeasible_raises(self):
+        w = np.array([0.4, 0.3, 0.2])
+        with pytest.raises(InfeasibleError):
+            plan_a2a_hierarchical(w, 1.0, c=2)  # b = 0.25 < wmax
+        with pytest.raises(ValueError):
+            plan_a2a_hierarchical(w, 1.0, c=0)
+        with pytest.raises(InfeasibleError):
+            plan_a2a_hierarchical(np.array([1.5]), 1.0, c=1)
+
+    def test_choose_grouping_factor(self):
+        w = np.full(100000, 0.01)
+        assert choose_grouping_factor(w, 2.0, target_super=1000) >= 1
+        # an input above q/2 makes grouping impossible
+        assert choose_grouping_factor(np.array([0.9, 0.1]), 1.0) == 0
+        assert choose_grouping_factor(np.zeros(0), 1.0) == 0
+        # clamp: c never pushes b below wmax
+        c = choose_grouping_factor(np.full(1000, 0.4), 2.0,
+                                   target_super=10**6)
+        assert 2.0 / (2 * c) >= 0.4
+
+
+# --------------------------------------------------- sampled pair coverage
+class TestSampledCoverage:
+    def test_large_m_hierarchical(self):
+        m = 100_000
+        w = 1.0 / (np.arange(1, m + 1) ** 0.5)
+        w = w / w.max()
+        rng = np.random.default_rng(9)
+        rng.shuffle(w)
+        q = 20.0
+        schema = plan_a2a_hierarchical(w, q)
+        h = schema.meta["hierarchy"]
+        assert h["gap_total"] >= schema.optimality_gap() - 1e-9
+        assert sampled_pair_coverage(schema, 4096, seed=1) == 1.0
+
+    def test_flat_schema_also_supported(self):
+        w = np.random.default_rng(10).uniform(0.1, 0.45, 200)
+        schema = plan_a2a(w, 1.0)
+        if schema.meta.get("bins_overlap", False):
+            pytest.skip("sampled coverage requires disjoint bins")
+        assert sampled_pair_coverage(schema, 2048, seed=2) == 1.0
+
+    def test_detects_broken_schema(self):
+        """The sampler must actually look: drop a reducer and coverage
+        falls below 1."""
+        w = np.random.default_rng(11).uniform(0.1, 0.45, 100)
+        schema = plan_a2a(w, 1.0, use_cache=False)
+        assert len(schema.reducers) > 1
+        schema.reducers.pop()
+        assert sampled_pair_coverage(schema, 4096, seed=3) < 1.0
+
+
+# -------------------------------------------------------- block execution
+class TestRunBlockGrid:
+    @pytest.mark.parametrize("executor", ["bucketed", "fused"])
+    def test_full_grid_matches_dense(self, executor):
+        from repro.mapreduce.allpairs import (
+            pairwise_similarity,
+            pairwise_similarity_block,
+        )
+        rng = np.random.default_rng(12)
+        m, d, q = 160, 6, 18.0
+        x = jnp.asarray(rng.normal(size=(m, d)), jnp.float32)
+        w = rng.uniform(0.4, 2.0, m)
+        schema = plan_a2a_hierarchical(w, q, c=2, use_cache=False)
+        ref, _, _ = pairwise_similarity(x, q=q, schema=schema,
+                                        executor="dense")
+        ref = np.asarray(ref)
+        B = 48  # uneven tail blocks included
+        for i0 in range(0, m, B):
+            for j0 in range(0, m, B):
+                i1, j1 = min(i0 + B, m), min(j0 + B, m)
+                blk, sparse, _ = pairwise_similarity_block(
+                    x, i0, i1, j0, j1, q=q, schema=schema,
+                    executor=executor)
+                np.testing.assert_allclose(
+                    np.asarray(blk), ref[i0:i1, j0:j1],
+                    rtol=1e-5, atol=1e-5,
+                    err_msg=f"block [{i0}:{i1})x[{j0}:{j1})")
+        assert sparse.host_entries < m * m
+
+    def test_serve_block_api(self):
+        from repro.mapreduce.allpairs import pairwise_similarity
+        from repro.serve import PairwiseService
+        rng = np.random.default_rng(13)
+        m, d, q = 96, 5, 14.0
+        x = rng.normal(size=(m, d)).astype(np.float32)
+        w = rng.uniform(0.5, 2.0, m)
+        svc = PairwiseService(q, metric="dot", executor="bucketed")
+        info = svc.load_block_table(x, w)
+        assert info["host_entries"] < m * m
+        ref, _, _ = pairwise_similarity(jnp.asarray(x), q=q, weights=w,
+                                        executor="dense")
+        ref = np.asarray(ref)
+        blk, binfo = svc.block(8, 72, 30, 96)
+        np.testing.assert_allclose(np.asarray(blk), ref[8:72, 30:96],
+                                   rtol=1e-5, atol=1e-5)
+        assert svc.stats["block_requests"] == 1
+        assert binfo["block_calls"] >= 1
+
+    def test_out_of_range_block_raises(self):
+        from repro.mapreduce import build_sparse_plan, block_subplan
+        w = np.random.default_rng(14).uniform(0.1, 0.25, 50)
+        schema = plan_a2a(w, 1.0)
+        sparse = build_sparse_plan(schema)
+        with pytest.raises(IndexError):
+            block_subplan(sparse, 0, 60, 0, 10)

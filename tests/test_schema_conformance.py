@@ -282,10 +282,12 @@ class TestExecutorConformanceMatrix:
     @pytest.mark.parametrize("executor", _registry_executors())
     @pytest.mark.parametrize("kind",
                              ["uniform", "zipf", "one-giant", "y1", "x1"])
-    @pytest.mark.parametrize("workload", ["allpairs", "x2y", "some_pairs"])
+    @pytest.mark.parametrize("workload",
+                             ["allpairs", "x2y", "some_pairs", "block"])
     def test_cell(self, executor, kind, workload):
         from repro.mapreduce.allpairs import (
             pairwise_similarity,
+            pairwise_similarity_block,
             some_pairs_similarity,
             x2y_similarity,
         )
@@ -306,6 +308,35 @@ class TestExecutorConformanceMatrix:
                                           executor=executor)
             ref, _, _ = x2y_similarity(x, y, q=q, schema=schema,
                                        executor="dense")
+        elif workload == "block":
+            # block-served sub-matrices against the dense (m, m) oracle:
+            # the executor-generic run_block default must agree cell-for-
+            # cell on a full cross-check grid, uneven tail blocks included
+            w = np.concatenate([wx, wy])
+            m = len(w)
+            x = jnp.asarray(rng.normal(size=(m, self.D)), jnp.float32)
+            schema = plan_a2a(w, q)
+            if schema.meta.get("bins_overlap", False):
+                pytest.skip("block serving requires disjoint bins "
+                            "(hybrid/big-input schemas stay on build_plan)")
+            schema.validate("a2a")
+            ref, _, _ = pairwise_similarity(x, q=q, schema=schema,
+                                            executor="dense")
+            ref = np.asarray(ref)
+            B = max(2, m // 2 - 1)
+            sparse = None
+            for i0 in range(0, m, B):
+                for j0 in range(0, m, B):
+                    i1, j1 = min(i0 + B, m), min(j0 + B, m)
+                    blk, sparse, _ = pairwise_similarity_block(
+                        x, i0, i1, j0, j1, q=q, schema=schema,
+                        executor=executor)
+                    np.testing.assert_allclose(
+                        np.asarray(blk), ref[i0:i1, j0:j1],
+                        rtol=1e-5, atol=1e-5,
+                        err_msg=f"block [{i0}:{i1})x[{j0}:{j1})")
+            assert sparse is not None and sparse.num_reducers > 0
+            return
         else:
             w = np.concatenate([wx, wy])
             m = len(w)
