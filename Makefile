@@ -8,7 +8,7 @@ export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
 .PHONY: test test-fast test-schemas test-stream test-x2y test-hierarchy \
 	lint ci bench bench-quick bench-skewed bench-fused bench-sharded \
-	bench-stream bench-x2y bench-hierarchy
+	bench-coded bench-stream bench-x2y bench-hierarchy
 
 test:
 	$(PYTHON) -m pytest -q
@@ -17,12 +17,12 @@ test:
 test-fast:
 	$(PYTHON) -m pytest -q -m "not slow"
 
-# the paper's correctness core: schema conformance + bucketed-, fused-
-# and sharded-executor differential tests
+# the paper's correctness core: schema conformance + bucketed-, fused-,
+# sharded- and coded-executor differential tests
 test-schemas:
 	$(PYTHON) -m pytest -q tests/test_schema_conformance.py \
 		tests/test_bucketed_executor.py tests/test_fused_executor.py \
-		tests/test_sharded_executor.py
+		tests/test_sharded_executor.py tests/test_coded_executor.py
 
 # streaming maintenance: edit-sequence conformance + streamed-vs-cold
 # differential + serving edit API
@@ -46,7 +46,7 @@ test-hierarchy:
 lint:
 	$(PYTHON) -m compileall -q src
 
-ci: lint test-schemas test-stream test-x2y test-hierarchy test
+ci: lint test-schemas test-stream test-x2y test-hierarchy test bench-coded
 
 bench:
 	$(PYTHON) benchmarks/bench_planner.py
@@ -67,6 +67,16 @@ bench-sharded:
 	XLA_FLAGS=--xla_force_host_platform_device_count=8 \
 		JAX_PLATFORMS=$${JAX_PLATFORMS:-cpu} \
 		$(PYTHON) benchmarks/bench_engine.py --sharded
+
+# coded vs sharded assembly traffic on a forced 8-device CPU mesh +
+# replication-vs-communication Pareto frontier; writes
+# benchmarks/BENCH_coded.json and enforces the acceptance bars:
+# allclose to dense, coded r=2 assembly bytes <= 0.6x uncoded sharded,
+# frontier monotone in r, every point >= the Thm-8 lower bound
+bench-coded:
+	XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+		JAX_PLATFORMS=$${JAX_PLATFORMS:-cpu} \
+		$(PYTHON) benchmarks/bench_coded.py
 
 # streaming edits vs full re-planning on Zipf m=512 (first-edit p99,
 # update latency, recompute fraction, delta-vs-replan comm bytes); writes

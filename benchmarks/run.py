@@ -11,6 +11,10 @@
                    report (per-shard padded elements, balance factor);
                    merges the engine_sharded section into
                    benchmarks/BENCH_engine.json
+  bench_coded    — coded shuffle executor: replication-vs-communication
+                   Pareto frontier on a forced 8-device mesh (assembly
+                   bytes vs the uncoded sharded gather, Thm-8 LB check);
+                   writes benchmarks/BENCH_coded.json
   bench_stream   — streaming-maintenance edits vs full re-planning
                    (first-edit p99, update latency, recompute fraction,
                    sustained achievable gap, delta-vs-replan comm bytes
@@ -31,24 +35,33 @@ import sys
 import time
 
 
-def _bench_engine_sharded():
-    """Run the sharded bench in a SUBPROCESS with a forced 8-device CPU
+def _bench_8dev(script_name: str, *args: str):
+    """Run a bench script in a SUBPROCESS with a forced 8-device CPU
     mesh: XLA_FLAGS cannot change the device count of this already-
     initialized process, and a 1-device in-process run would overwrite the
-    committed multi-device engine_sharded section of BENCH_engine.json
-    with trivial numbers."""
+    committed multi-device sections of the BENCH json with trivial
+    numbers."""
     script = os.path.join(os.path.dirname(os.path.abspath(__file__)),
-                          "bench_engine.py")
+                          script_name)
     env = dict(os.environ,
                XLA_FLAGS="--xla_force_host_platform_device_count=8",
                JAX_PLATFORMS=os.environ.get("JAX_PLATFORMS", "cpu"),
                PYTHONPATH="src" + (
                    os.pathsep + os.environ["PYTHONPATH"]
                    if os.environ.get("PYTHONPATH") else ""))
-    res = subprocess.run([sys.executable, script, "--sharded"], env=env)
+    res = subprocess.run([sys.executable, script, *args], env=env)
     if res.returncode != 0:
-        raise SystemExit(f"bench_engine --sharded failed ({res.returncode})")
+        raise SystemExit(
+            f"{script_name} {' '.join(args)} failed ({res.returncode})")
     return [res]
+
+
+def _bench_engine_sharded():
+    return _bench_8dev("bench_engine.py", "--sharded")
+
+
+def _bench_coded():
+    return _bench_8dev("bench_coded.py")
 
 
 def main() -> None:
@@ -61,6 +74,7 @@ def main() -> None:
         ("bench_engine", bench_engine.main),
         ("bench_engine_fused", lambda: [bench_engine.main(["--fused"])]),
         ("bench_engine_sharded", _bench_engine_sharded),
+        ("bench_coded", _bench_coded),
         ("bench_stream", lambda: [bench_stream.main([])]),
         ("bench_packing", bench_packing.main),
         ("bench_kernels", bench_kernels.main),

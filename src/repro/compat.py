@@ -21,7 +21,8 @@ import contextlib
 
 import jax
 
-__all__ = ["AXIS_TYPE_AUTO", "make_mesh", "pcast", "set_mesh", "shard_map"]
+__all__ = ["AXIS_TYPE_AUTO", "all_to_all", "make_mesh", "pcast", "set_mesh",
+           "shard_map"]
 
 AXIS_TYPE_AUTO = getattr(getattr(jax.sharding, "AxisType", None), "Auto", None)
 
@@ -49,6 +50,18 @@ if hasattr(jax, "shard_map"):
     shard_map = jax.shard_map
 else:                                                  # pragma: no cover
     from jax.experimental.shard_map import shard_map  # noqa: F401
+
+
+def all_to_all(x, axis_name, *, split_axis: int = 0, concat_axis: int = 0):
+    """Tiled ``jax.lax.all_to_all`` over one shard_map axis (or a tuple of
+    axes, collectived jointly).  ``x`` is the local ``(S, ...)`` lane
+    stack: lane ``s`` of the result is what shard ``s`` addressed to this
+    shard — the batched per-shard-group exchange the coded executor's
+    residual combining runs on."""
+    name = axis_name if not (isinstance(axis_name, (tuple, list))
+                             and len(axis_name) == 1) else axis_name[0]
+    return jax.lax.all_to_all(x, name, split_axis=split_axis,
+                              concat_axis=concat_axis, tiled=True)
 
 
 def pcast(x, axis_name, *, to: str = "varying"):

@@ -632,6 +632,20 @@ class PlanPartition:
     balance_factor — max(loads) / mean(loads) (1.0 = perfectly balanced;
                     inflated when num_shards > num_reducers since empty
                     shards drag the mean down).
+    replication   — r: every reducer's sub-plan is *materialized* on r
+                    shards (primary + r-1 LPT-chosen replicas).  The
+                    primary assignment — and with it coverage, capacity,
+                    ``shipped_rows`` and ``comm_cost`` — is byte-identical
+                    to the r=1 partition; replication only adds holders.
+    replica_rows  — per-shard sorted arrays of ALL global rows the shard
+                    holds (primary ∪ replicas); every row appears on
+                    exactly r shards, and shard s's array is a superset of
+                    ``shard_rows[s]``.
+    replica_loads — (S,) per-shard work including replicas (what the
+                    coded executor's redundant compute actually costs).
+    replica_slots — (S,) valid slots held per shard including replicas;
+                    sums to exactly ``replication * sum(shipped_rows)``
+                    (the replication ledger).
     """
 
     num_shards: int
@@ -644,9 +658,20 @@ class PlanPartition:
     balance_factor: float
     flop_weight: float
     ywidths: Optional[np.ndarray] = None   # (R0,) Y-side widths (rect plans)
+    replication: int = 1
+    replica_rows: Optional[tuple] = None
+    replica_loads: Optional[np.ndarray] = None
+    replica_slots: Optional[np.ndarray] = None
 
     def report(self) -> dict:
         """Telemetry dict (benchmarks, dryrun, serving dashboards)."""
+        rrows = (self.replica_rows if self.replica_rows is not None
+                 else self.shard_rows)
+        rloads = (self.replica_loads if self.replica_loads is not None
+                  else self.loads)
+        rslots = (self.replica_slots if self.replica_slots is not None
+                  else self.shipped_rows)
+        rmean = float(rloads.sum()) / max(self.num_shards, 1)
         return {
             "num_shards": self.num_shards,
             "reducers_per_shard": [int(len(r)) for r in self.shard_rows],
@@ -657,6 +682,12 @@ class PlanPartition:
             "max_load": float(self.loads.max(initial=0.0)),
             "padded_elements_per_shard": [
                 int(np.sum(self.widths[rows])) for rows in self.shard_rows],
+            "replication": int(self.replication),
+            "replica_reducers_per_shard": [int(len(r)) for r in rrows],
+            "replica_slots": [int(x) for x in rslots],
+            "replica_balance_factor": (
+                float(rloads.max(initial=0.0)) / rmean if rmean > 0
+                else 1.0),
         }
 
 
@@ -708,7 +739,8 @@ def _execution_ywidths(plan) -> Optional[np.ndarray]:
 
 
 def partition_plan(plan, num_shards: int, *,
-                   flop_weight: float = 1.0) -> PlanPartition:
+                   flop_weight: float = 1.0,
+                   replication: int = 1) -> PlanPartition:
     """LPT/greedy balance of a ReducerPlan's reducers into per-shard
     compact sub-plans.
 
@@ -728,8 +760,20 @@ def partition_plan(plan, num_shards: int, *,
     re-buckets it).  Works on any plan-shaped object exposing ``idx`` /
     ``mask`` / ``num_reducers`` / ``buckets``; sub-plans are built with
     ``type(plan)`` so this module stays free of engine imports.
+
+    ``replication=r > 1`` additionally materializes every reducer on r-1
+    *replica* shards (coded execution, after Afrati et al.'s
+    replication-rate framing, arXiv:1206.4377): round by round, each
+    reducer — heaviest first — is placed on the least replica-loaded
+    shard not already holding it, so holder sets are nested across r
+    (the r-replica holders contain the (r-1)-replica holders).  The
+    primary assignment and every coverage/capacity/comm ledger above are
+    *unchanged*; replication is accounted separately in ``replica_rows``
+    / ``replica_loads`` / ``replica_slots`` and in ``report()``.
     """
     assert num_shards >= 1, num_shards
+    replication = int(replication)
+    assert 1 <= replication <= num_shards, (replication, num_shards)
     R0 = int(plan.num_reducers)
     widths = _execution_widths(plan)
     ywidths = _execution_ywidths(plan)
@@ -762,10 +806,28 @@ def partition_plan(plan, num_shards: int, *,
     shards = tuple(_sub_plan(plan, rows, widths) for rows in shard_rows)
     total = float(work.sum())
     bf = (float(loads.max()) / (total / num_shards)) if total > 0 else 1.0
+
+    # replica placement: nested LPT rounds over the replica-load tally
+    held = np.zeros((num_shards, R0), dtype=bool)
+    for s, rows in enumerate(shard_rows):
+        held[s, rows] = True
+    rloads = loads.copy()
+    for _ in range(replication - 1):
+        for r in order:
+            cand = np.flatnonzero(~held[:, r])
+            s = int(cand[np.argmin(rloads[cand])])
+            held[s, r] = True
+            rloads[s] += float(work[r])
+    replica_rows = tuple(np.flatnonzero(held[s]).astype(np.int64)
+                         for s in range(num_shards))
+    replica_slots = np.array([int(slots[rows].sum())
+                              for rows in replica_rows], dtype=np.int64)
     return PlanPartition(
         num_shards=num_shards, shards=shards, shard_rows=shard_rows,
         widths=widths, loads=loads, shipped_rows=shipped, comm_cost=comm,
-        balance_factor=bf, flop_weight=flop_weight, ywidths=ywidths)
+        balance_factor=bf, flop_weight=flop_weight, ywidths=ywidths,
+        replication=replication, replica_rows=replica_rows,
+        replica_loads=rloads, replica_slots=replica_slots)
 
 
 def _sub_plan(plan, rows: np.ndarray, widths: np.ndarray):

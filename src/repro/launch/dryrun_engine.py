@@ -202,6 +202,63 @@ def analyze_sharded(plan, m, d, mesh, name):
                       extra=extra)
 
 
+def analyze_coded(plan, m, d, name, num_shards: int = 16):
+    """Coded path: the replication x communication sweep.
+
+    Lowers the coded executor's program (per-shard rect tile pipeline +
+    the residual all-to-all) at several replication rates r on a 1-D
+    ``num_shards``-device submesh (the coded combining stage is a 1-D
+    shard-group exchange; a full 16x16 lowering adds nothing but compile
+    time) and emits the replication-vs-communication Pareto frontier:
+    measured per-shard assembly bytes (HLO collectives) fall with r while
+    the input-shipping term ``r x comm_cost`` rises, and every point's
+    total stays above the Thm-8 lower bound — replication never tunnels
+    under it, it only re-shapes where the bytes are paid.
+    ``choose_replication`` marks the knee."""
+    from repro.compat import make_mesh
+    from repro.launch.roofline import collective_bytes
+    from repro.mapreduce.executors import choose_replication
+
+    ex = get_executor("coded")
+    mesh = make_mesh((num_shards,), ("shard",))
+    S = num_shards
+    itemsize = 2                                     # bf16 table rows
+    lb_rows = float(plan.lower_bound) if plan.lower_bound else None
+    lb_bytes = lb_rows * d * itemsize if lb_rows else None
+    shipped_bytes = float(plan.comm_cost) * d * itemsize
+    best_r, model_frontier = choose_replication(
+        plan, S, m, d, itemsize=itemsize)
+    frontier = []
+    for rec in model_frontier:
+        r = rec["replication"]
+        lowered = ex.lower((m, d), plan, metric="dot", mesh=mesh,
+                           dtype=jnp.bfloat16, m=m, replication=r)
+        coll = collective_bytes(lowered.compile().as_text())
+        point = {
+            "replication": r,
+            "measured_assembly_bytes_per_shard": coll["total"],
+            "model_assembly_bytes_per_shard":
+                rec["assembly_bytes_per_shard"],
+            "local_fraction": rec["local_fraction"],
+            "shipped_bytes": rec["shipped_bytes"],
+            "total_comm_bytes": (rec["shipped_bytes"]
+                                 + S * coll["total"]),
+            "ge_lower_bound": (
+                rec["shipped_bytes"] + S * coll["total"] >= lb_bytes
+                if lb_bytes else None),
+        }
+        frontier.append(point)
+    return {
+        "name": name,
+        "reducers": plan.num_reducers,
+        "num_shards": S,
+        "best_replication": best_r,
+        "schema_comm_bytes": shipped_bytes,
+        "schema_lower_bound_bytes": lb_bytes,
+        "pareto_frontier": frontier,
+    }
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--m", type=int, default=1024)
@@ -266,6 +323,18 @@ def main():
                   f"lower-bound share "
                   f"{(lb or 0)/1e6:.1f} MB"
                   + (f" ({r['per_shard_hbm_vs_lb']:.2f}x)" if lb else ""))
+    cr = analyze_coded(plan_opt, args.m, args.d,
+                       f"coded-frontier[{schema.algorithm}]")
+    rows.append(cr)
+    print(f"{cr['name']:40s} shards={cr['num_shards']} "
+          f"knee r={cr['best_replication']} "
+          f"(LB {(cr['schema_lower_bound_bytes'] or 0)/1e6:.2f} MB)")
+    for p in cr["pareto_frontier"]:
+        print(f"{'':40s} r={p['replication']:2d} assembly "
+              f"{p['measured_assembly_bytes_per_shard']/1e6:.2f} MB/shard, "
+              f"shipped {p['shipped_bytes']/1e6:.2f} MB, total "
+              f"{p['total_comm_bytes']/1e6:.2f} MB "
+              f">=LB:{p['ge_lower_bound']}")
     sr = analyze_streaming(w, args.q, args.m, args.d,
                            "streaming-delta[insert]")
     rows.append(sr)

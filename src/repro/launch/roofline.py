@@ -43,6 +43,10 @@ _COLL_RE = re.compile(
     r"=\s*(\(?[a-z0-9_\[\],{} ]+?\)?)\s*"
     r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
     r"(?:-start)?\(")
+# XLA annotates wide tuple types with /*index=N*/ comments; strip them or
+# the type char-class above rejects >5-way tuple collectives (e.g. the
+# coded executor's 8-way all-to-all).
+_HLO_COMMENT_RE = re.compile(r"/\*.*?\*/")
 _SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
 _GROUPS_RE = re.compile(r"replica_groups=\{?\{([0-9, ]+)\}")
 _GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
@@ -76,6 +80,7 @@ def collective_bytes(hlo_text: str) -> dict:
     out = {"all-gather": 0.0, "all-reduce": 0.0, "reduce-scatter": 0.0,
            "all-to-all": 0.0, "collective-permute": 0.0, "ops": 0}
     for line in hlo_text.splitlines():
+        line = _HLO_COMMENT_RE.sub("", line)
         m = _COLL_RE.search(line)
         if not m:
             continue

@@ -37,7 +37,7 @@ Public API
 ``get_executor(name)`` / ``make_executor(name)`` / ``register_executor``
     The executor registry (``repro.mapreduce.executors``): executors are
     classes exposing ``run`` / ``run_pairs`` / ``lower`` / ``stats`` and
-    registered by name ("dense", "bucketed", "fused", "sharded",
+    registered by name ("dense", "bucketed", "fused", "sharded", "coded",
     "streaming") — the single dispatch point for every application entry
     below.
 ``pairwise_similarity(x, q=...)``
@@ -55,10 +55,12 @@ from .engine import (
     ReducerBucket,
     ReducerPlan,
     SparsePlan,
+    block_cache_stats,
     block_subplan,
     build_plan,
     build_sparse_plan,
     build_x2y_plan,
+    configure_block_cache,
     configure_jit_cache,
     fused_stats,
     jit_cache_stats,
@@ -96,6 +98,7 @@ __all__ = [
     "Executor", "get_executor", "make_executor", "register_executor",
     "list_executors",
     "fused_stats", "jit_cache_stats", "configure_jit_cache",
+    "block_cache_stats", "configure_block_cache",
     "pairwise_similarity", "pairwise_similarity_block",
     "some_pairs_similarity", "x2y_similarity",
     "assemble_pair_matrix", "assemble_pair_matrix_bucketed",

@@ -83,6 +83,8 @@ __all__ = [
     "lower_reducers_fused",
     "jit_cache_stats",
     "configure_jit_cache",
+    "block_cache_stats",
+    "configure_block_cache",
     "fused_stats",
     "reset_fused_stats",
 ]
@@ -463,7 +465,7 @@ def _gather_csr(indptr: np.ndarray, data: np.ndarray,
 def block_subplan(sparse: SparsePlan, i0: int, i1: int, j0: int, j1: int,
                   *, pad_reducers_to: int = 1, pad_slots_to: int = 1,
                   max_buckets: int = 8,
-                  cache_size: int = 64) -> Optional[ReducerPlan]:
+                  cache_size: Optional[int] = None) -> Optional[ReducerPlan]:
     """Rectangular sub-plan serving output block ``[i0:i1) x [j0:j1)``.
 
     Selects exactly the reducers hosting at least one row bin *and* one
@@ -474,8 +476,13 @@ def block_subplan(sparse: SparsePlan, i0: int, i1: int, j0: int, j1: int,
     the block-local X / Y ids it actually hosts; the result is an ordinary
     rectangular plan any executor runs via ``run_x2y``.  Returns ``None``
     for a block no reducer touches (empty ranges).  LRU-cached on the
-    sparse plan so repeated requests reuse executor-side srcmaps.
+    sparse plan so repeated requests reuse executor-side srcmaps;
+    ``cache_size=None`` (default) takes the shared cap set by
+    ``REPRO_BLOCK_CACHE_SIZE`` / :func:`configure_block_cache`, and
+    hit/miss/evict counters feed :func:`block_cache_stats`.
     """
+    if cache_size is None:
+        cache_size = _BLOCK_CACHE_MAX
     if not (0 <= i0 <= i1 <= sparse.num_inputs
             and 0 <= j0 <= j1 <= sparse.num_inputs):
         raise IndexError(
@@ -488,7 +495,9 @@ def block_subplan(sparse: SparsePlan, i0: int, i1: int, j0: int, j1: int,
         object.__setattr__(sparse, "_block_cache", cache)
     if key in cache:
         cache.move_to_end(key)
+        _BLOCK_CACHE_STATS["hits"] += 1
         return cache[key]
+    _BLOCK_CACHE_STATS["misses"] += 1
 
     row_bins = np.unique(sparse.bin_of[i0:i1])
     col_bins = np.unique(sparse.bin_of[j0:j1])
@@ -524,6 +533,7 @@ def block_subplan(sparse: SparsePlan, i0: int, i1: int, j0: int, j1: int,
     cache[key] = plan
     while len(cache) > cache_size:
         cache.popitem(last=False)
+        _BLOCK_CACHE_STATS["evictions"] += 1
     return plan
 
 
@@ -571,12 +581,12 @@ def _gather_reduce(x, idx, mask, reducer_fn):
 # configurable via the ``REPRO_JIT_CACHE_SIZE`` environment variable (read
 # at import and by ``configure_jit_cache()``); ``jit_cache_stats`` feeds the
 # serving telemetry, including per-key hit counts.
-def _env_cache_size(default: int = 64) -> int:
-    """``REPRO_JIT_CACHE_SIZE`` as a cap >= 1; malformed or non-positive
-    values fall back to the default (a cap of 0 would evict every insert
-    immediately — unbounded retracing, the exact cost the cache exists to
-    prevent)."""
-    raw = os.environ.get("REPRO_JIT_CACHE_SIZE", "")
+def _env_cache_size(default: int = 64,
+                    var: str = "REPRO_JIT_CACHE_SIZE") -> int:
+    """``var`` as a cap >= 1; malformed or non-positive values fall back
+    to the default (a cap of 0 would evict every insert immediately —
+    unbounded retracing, the exact cost the cache exists to prevent)."""
+    raw = os.environ.get(var, "")
     try:
         size = int(raw)
     except ValueError:
@@ -670,6 +680,33 @@ def jit_cache_stats() -> dict:
         per_key[label] = per_key.get(label, 0) + hits
     return {**_JIT_CACHE_STATS, "size": len(_JIT_CACHE),
             "max_size": _JIT_CACHE_MAX, "per_key": per_key}
+
+
+# The block sub-plan LRU (``block_subplan``) lives per SparsePlan instance
+# but all instances share one configurable cap and one set of counters,
+# mirroring the jit cache above: ``REPRO_BLOCK_CACHE_SIZE`` /
+# ``configure_block_cache()`` set the cap, ``block_cache_stats()`` feeds
+# the serving telemetry.  The cap is applied at insert time, so lowering
+# it trims each plan's cache on that plan's next block request.
+_BLOCK_CACHE_MAX = _env_cache_size(var="REPRO_BLOCK_CACHE_SIZE")
+_BLOCK_CACHE_STATS = {"hits": 0, "misses": 0, "evictions": 0}
+
+
+def configure_block_cache(max_size: Optional[int] = None) -> int:
+    """Set the block sub-plan LRU cap; with no argument, re-read
+    ``REPRO_BLOCK_CACHE_SIZE`` from the environment (default 64).
+    Returns the active cap."""
+    global _BLOCK_CACHE_MAX
+    if max_size is None:
+        max_size = _env_cache_size(var="REPRO_BLOCK_CACHE_SIZE")
+    assert max_size >= 1, max_size
+    _BLOCK_CACHE_MAX = max_size
+    return _BLOCK_CACHE_MAX
+
+
+def block_cache_stats() -> dict:
+    """Block sub-plan cache counters (shared across all SparsePlans)."""
+    return {**_BLOCK_CACHE_STATS, "max_size": _BLOCK_CACHE_MAX}
 
 
 def _get_jitted(reducer_fn, mesh, shard_axes):

@@ -12,7 +12,8 @@ hardware.  Every executor is a class exposing
   ``stats()`` / ``reset()``                — instance-scoped dispatch
         telemetry (no module globals to pollute across callers);
 
-registered by name ("dense", "bucketed", "fused", "sharded", "streaming")
+registered by name ("dense", "bucketed", "fused", "sharded", "coded",
+"streaming")
 so applications dispatch through ``get_executor(name)`` instead of
 per-module ``if executor == ...`` ladders.  ``make_executor(name)`` returns
 a *fresh* instance with its own counters — what ``serve.PairwiseService``
@@ -33,6 +34,14 @@ The registry executors:
                 balances reducers over the mesh's reducer axis, each shard
                 runs the fused/bucketed tile pipeline under ``shard_map``,
                 and one cross-shard gather assembles the (m, m) matrix.
+``coded``     — coded shuffle execution (DESIGN.md "coded shuffle
+                execution"; Afrati et al., arXiv:1206.4377): each
+                reducer's sub-plan is replicated on ``r`` LPT-chosen
+                shards, the output matrix is row-sliced, replica holders
+                serve their slice's cells locally, and only the residual
+                entries cross shards in one batched all-to-all — assembly
+                bytes fall roughly as ``(1 - r/S)`` at the price of
+                ``r×`` input shipping.
 ``streaming`` — delta execution of maintained plans (DESIGN.md "streaming
                 maintenance"; ``repro.stream``, registered lazily): only
                 the reducers an edit dirtied are recomputed, and the
@@ -69,6 +78,9 @@ __all__ = [
     "BucketedExecutor",
     "FusedExecutor",
     "ShardedExecutor",
+    "CodedExecutor",
+    "coded_assembly_model",
+    "choose_replication",
     "register_executor",
     "get_executor",
     "make_executor",
@@ -564,7 +576,8 @@ def _shard_mesh(mesh, shard_axes):
     return mesh, axes, num_shards
 
 
-def _stacked_groups(plan: ReducerPlan, part: PlanPartition):
+def _stacked_groups(plan: ReducerPlan, part: PlanPartition,
+                    rows_by_shard=None):
     """Stack the partition into uniform per-width device arrays.
 
     For every execution width ``w`` appearing in the partition, build
@@ -575,10 +588,17 @@ def _stacked_groups(plan: ReducerPlan, part: PlanPartition):
     cross-shard padding this stacking adds is small exactly when the
     balance factor is small.  Returns ``[(idx, mask, rows), ...]`` with
     widths ascending (numpy; the executor converts once per plan).
+
+    ``rows_by_shard`` overrides the per-shard row sets (default: the
+    partition's primary ``shard_rows``) — the coded executor passes
+    ``part.replica_rows`` so every shard's stack holds all of its
+    replicas, not just its primary assignment.
     """
     S = part.num_shards
     R0 = plan.num_reducers
     widths = part.widths
+    if rows_by_shard is None:
+        rows_by_shard = part.shard_rows
     # per-global-row source arrays at the row's execution width
     if plan.buckets:
         src_idx = {}
@@ -595,7 +615,7 @@ def _stacked_groups(plan: ReducerPlan, part: PlanPartition):
 
     groups = []
     for w in sorted(set(int(x) for x in widths)) if R0 else []:
-        per_shard = [rows[widths[rows] == w] for rows in part.shard_rows]
+        per_shard = [rows[widths[rows] == w] for rows in rows_by_shard]
         Rw = max((len(p) for p in per_shard), default=0)
         if Rw == 0:
             continue
@@ -633,15 +653,19 @@ def _sharded_srcmap(groups, m: int) -> np.ndarray:
     return srcmap
 
 
-def _stacked_rect_groups(plan: ReducerPlan, part: PlanPartition):
+def _stacked_rect_groups(plan: ReducerPlan, part: PlanPartition,
+                         rows_by_shard=None):
     """Rectangular analogue of :func:`_stacked_groups`: groups keyed by the
     (wx, wy) execution-width *pair*, each stacked into
     ``xidx/xmask (S, Rw, wx)``, ``yidx/ymask (S, Rw, wy)``, ``rows (S, Rw)``
-    device arrays (padding rows masked, rows -> plan.R)."""
+    device arrays (padding rows masked, rows -> plan.R).  ``rows_by_shard``
+    overrides the per-shard row sets as in :func:`_stacked_groups`."""
     S = part.num_shards
     R0 = plan.num_reducers
     widths = part.widths
     ywidths = part.ywidths
+    if rows_by_shard is None:
+        rows_by_shard = part.shard_rows
     src = {}
     if plan.buckets:
         for b in plan.buckets:
@@ -662,7 +686,7 @@ def _stacked_rect_groups(plan: ReducerPlan, part: PlanPartition):
     groups = []
     for wx, wy in keys:
         per_shard = [rows[(widths[rows] == wx) & (ywidths[rows] == wy)]
-                     for rows in part.shard_rows]
+                     for rows in rows_by_shard]
         Rw = max((len(p) for p in per_shard), default=0)
         if Rw == 0:
             continue
@@ -1004,6 +1028,412 @@ class ShardedExecutor(Executor):
 
 
 # ---------------------------------------------------------------------------
+# coded (replicated shuffle) executor
+# ---------------------------------------------------------------------------
+def _coded_maps(groups, shape: tuple[int, int], row_block: int,
+                zero_diag: bool):
+    """Host-side maps for the coded combining stage.
+
+    ``groups`` are replica-stacked rect groups
+    ``[(xidx (S,Rw,wx), xmask, yidx (S,Rw,wy), ymask, rows (S,Rw)), ...]``
+    where ``rows`` holds each shard's full replica set (padding slots have
+    all-false masks and are skipped).  The output ``(mx, my)`` matrix is
+    row-sliced: shard ``s`` owns rows ``[s*row_block, (s+1)*row_block)``.
+
+    Per output cell the serving Gram entry is resolved to either a
+    position in the owning shard's *local* value vector (a replica is
+    held: zero traffic) or a slot in the residual exchange: for every
+    (block, destination) pair with no local replica, the block rows whose
+    output rows fall in the destination's slice — never the whole block —
+    are stride-split across ALL replica holders (least-filled lane
+    first), so each holder ships ~1/r of the residual and the exchange
+    lanes shrink as replication grows.  The residual is batched into
+    per-destination lanes and moved by ONE tiled all-to-all sized by the
+    maximum lane.
+
+    Returns ``(sendmap (S, S, E) int32`` into the shard-local value
+    vector, ``srcmap (S, row_block, my) int32`` into
+    ``[vals_local (Lv), recv (S*E)]``, and a stats dict).  Slot 0 of the
+    value vector is 0.0 (uncovered cells, padding lanes, the diagonal).
+    """
+    mx, my = shape
+    S = groups[0][0].shape[0] if groups else 1
+    bases = []
+    Lv = 1
+    for xidx, _xm, yidx, _ym, _rows in groups:
+        bases.append(Lv)
+        Lv += xidx.shape[1] * xidx.shape[2] * yidx.shape[2]
+
+    # holders: global row -> [(shard, group, slot), ...] (replica set)
+    holders: dict[int, list] = {}
+    for gi, (_xi, xmask, _yi, ymask, rows) in enumerate(groups):
+        live = xmask.any(axis=2) & ymask.any(axis=2)      # (S, Rw)
+        for s, k in np.argwhere(live):
+            holders.setdefault(int(rows[s, k]), []).append(
+                (int(s), gi, int(k)))
+
+    send: list[list[list]] = [[[] for _ in range(S)] for _ in range(S)]
+    cnt = np.zeros((S, S), dtype=np.int64)
+    recv_fill: list[list] = [[] for _ in range(S)]
+    srcmap = np.zeros((S, row_block, my), dtype=np.int64)
+    local_entries = 0
+    for _b, hl in holders.items():
+        s0, gi, k0 = hl[0]
+        xidx, xmask, yidx, ymask, _rows = groups[gi]
+        wx, wy = xidx.shape[2], yidx.shape[2]
+        pv = np.flatnonzero(xmask[s0, k0])
+        qv = np.flatnonzero(ymask[s0, k0])
+        if not pv.size or not qv.size:
+            continue
+        gx = xidx[s0, k0][pv].astype(np.int64)
+        gy = yidx[s0, k0][qv].astype(np.int64)
+        ds = gx // row_block
+        hpos = {s: bases[g] + k * wx * wy for s, g, k in hl}
+        for s in np.unique(ds):
+            s = int(s)
+            sel = ds == s
+            p_s, gx_s = pv[sel], gx[sel]
+            if s in hpos:                      # local replica: no traffic
+                pos = hpos[s] + (p_s[:, None] * wy + qv[None, :])
+                srcmap[s][np.ix_(gx_s - s * row_block, gy)] = pos
+                local_entries += pos.size
+            else:                              # residual: split over holders
+                hs = sorted(hpos, key=lambda tt: cnt[tt, s])
+                for j, t in enumerate(hs):
+                    p_j, gx_j = p_s[j::len(hs)], gx_s[j::len(hs)]
+                    if not p_j.size:
+                        continue
+                    pos = hpos[t] + (p_j[:, None] * wy + qv[None, :])
+                    send[t][s].append(pos.ravel())
+                    recv_fill[s].append((t, int(cnt[t, s]), gx_j, gy))
+                    cnt[t, s] += pos.size
+    E = max(1, int(cnt.max(initial=0)))
+    sendmap = np.zeros((S, S, E), dtype=np.int64)
+    for t in range(S):
+        for s in range(S):
+            if send[t][s]:
+                v = np.concatenate(send[t][s])
+                sendmap[t, s, :len(v)] = v
+    for s in range(S):
+        for t, e0, gx_s, gy in recv_fill[s]:
+            e = e0 + np.arange(len(gx_s) * len(gy), dtype=np.int64)
+            srcmap[s][np.ix_(gx_s - s * row_block, gy)] = (
+                Lv + t * E + e.reshape(len(gx_s), len(gy)))
+    if zero_diag:
+        for s in range(S):
+            d = np.arange(s * row_block, min((s + 1) * row_block, mx))
+            srcmap[s, d - s * row_block, d] = 0
+    stats = {
+        "local_entries": int(local_entries),
+        "residual_entries": int(cnt.sum()),
+        "lane_max": E,
+        "lane_fill": float(cnt.sum() / max(S * S * E, 1)),
+        "vals_len": int(Lv),
+    }
+    return (sendmap.astype(np.int32), srcmap.astype(np.int32), stats)
+
+
+def _make_coded_jitted(metric, mesh, axes, use_kernel, interpret, bl):
+    from repro.compat import all_to_all
+    from repro.kernels.pairwise.fused_gather_gram import (
+        fused_gather_gram_rect,
+        fused_gather_gram_rect_streamed,
+    )
+
+    P = jax.sharding.PartitionSpec
+
+    def per_shard_fn(xt, yt, n2x, n2y, groups, sendmap, srcmap):
+        # local shapes: tables/norms replicated, stacks (1, Rw, w),
+        # sendmap (1, S, E), srcmap (1, row_block, my)
+        vals = [jnp.zeros((1,), jnp.float32)]
+        for xidx, xmsk, yidx, ymsk in groups:
+            if use_kernel:
+                g = fused_gather_gram_rect(xt, yt, xidx[0], xmsk[0],
+                                           yidx[0], ymsk[0], bl=bl,
+                                           interpret=interpret)
+            else:
+                g = fused_gather_gram_rect_streamed(xt, yt, xidx[0],
+                                                    xmsk[0], yidx[0],
+                                                    ymsk[0], bl=bl)
+            g = _finish_rect_blocks(g, xidx[0], xmsk[0].astype(bool),
+                                    yidx[0], ymsk[0].astype(bool),
+                                    n2x, n2y, metric)
+            vals.append(g.reshape(-1))
+        vloc = jnp.concatenate(vals)
+        # coded combining: replicas serve locally through srcmap; ONLY the
+        # residual lanes cross shards, in one batched tiled all-to-all —
+        # there is no all-gather of the Gram stacks in this program
+        send = jnp.take(vloc, sendmap[0], axis=0)          # (S, E)
+        recv = all_to_all(send, axes)                      # (S, E)
+        full = jnp.concatenate([vloc, recv.reshape(-1)])
+        return jnp.take(full, srcmap[0], axis=0)[None]     # (1, rb, my)
+
+    def run(xt, yt, groups, sendmap, srcmap):
+        n2x = jnp.sum(xt.astype(jnp.float32) ** 2, axis=-1)
+        n2y = jnp.sum(yt.astype(jnp.float32) ** 2, axis=-1)
+        out = shard_map(per_shard_fn, mesh=mesh,
+                        in_specs=(P(), P(), P(), P(), P(axes), P(axes),
+                                  P(axes)),
+                        out_specs=P(axes))(
+            xt, yt, n2x, n2y, groups, sendmap, srcmap)
+        return out.reshape(-1, out.shape[-1])   # (S*rb, my); caller trims
+
+    return jax.jit(run)
+
+
+class CodedExecutor(ShardedExecutor):
+    """Coded shuffle execution: trade replication for cross-shard traffic.
+
+    The sharded executor pays ONE cross-shard all-gather to assemble the
+    replicated (m, m) matrix — every shard receives every Gram stack.  The
+    coded executor (the coded-MapReduce tradeoff of Afrati et al.,
+    arXiv:1206.4377) spends replication to cut that traffic:
+    ``partition_plan(..., replication=r)`` materializes each reducer's
+    sub-plan on r LPT-chosen shards, the output matrix is row-sliced
+    across shards, and assembly becomes a coded combining stage — a shard
+    holding a replica serves its slice's cells from local Gram entries
+    (zero traffic), and only the residual entries (block rows owned by a
+    slice with no replica) are exchanged, batched into per-destination
+    lanes and moved by ONE tiled all-to-all.  Per shard the residual is
+    ~``2G/S * (1 - r/S)`` entries (G = total Gram entries) vs ~``G`` for
+    the uncoded all-gather, so measured assembly bytes collapse and keep
+    falling as r grows; ``choose_replication`` picks the knee of the
+    replication-vs-communication frontier.
+
+    Same fallback rules as the sharded executor (Gram-block reducers
+    only); ``replication`` is clamped to the mesh's shard count.
+    """
+
+    name = "coded"
+
+    def __init__(self, stats: Optional[dict] = None, replication: int = 2):
+        super().__init__(stats=stats)
+        self.replication = int(replication)
+
+    def _fresh_stats(self) -> dict:
+        return {"calls": 0, "coded": 0, "fallbacks": 0, "num_shards": 0,
+                "balance_factor": 0.0, "replication": 0,
+                "local_entries": 0, "residual_entries": 0,
+                "local_fraction": 0.0}
+
+    # -- replication-aware partition plumbing (cached on the plan) --------
+    def partition_coded(self, plan: ReducerPlan, num_shards: int,
+                        replication: Optional[int] = None) -> PlanPartition:
+        r = min(self.replication if replication is None else int(replication),
+                num_shards)
+        cache = plan.__dict__.get("_coded_partition_cache")
+        if cache is None:
+            cache = {}
+            object.__setattr__(plan, "_coded_partition_cache", cache)
+        part = cache.get((num_shards, r))
+        if part is None:
+            part = partition_plan(plan, num_shards, replication=r)
+            cache[(num_shards, r)] = part
+        return part
+
+    def _coded_groups_for(self, plan, part, rect: bool):
+        cache = plan.__dict__.get("_coded_groups_cache")
+        if cache is None:
+            cache = {}
+            object.__setattr__(plan, "_coded_groups_cache", cache)
+        key = (part.num_shards, part.replication, rect)
+        groups = cache.get(key)
+        if groups is None:
+            if rect:
+                groups = _stacked_rect_groups(
+                    plan, part, rows_by_shard=part.replica_rows)
+            else:
+                groups = [(i, k, i, k, r) for i, k, r in _stacked_groups(
+                    plan, part, rows_by_shard=part.replica_rows)]
+            cache[key] = groups
+        return groups
+
+    def _coded_maps_for(self, plan, groups, part, shape, zero_diag: bool):
+        cache = plan.__dict__.get("_coded_maps_cache")
+        if cache is None:
+            cache = {}
+            object.__setattr__(plan, "_coded_maps_cache", cache)
+        key = (part.num_shards, part.replication, tuple(shape), zero_diag)
+        maps = cache.get(key)
+        if maps is None:
+            rb = -(-shape[0] // part.num_shards)
+            maps = _coded_maps(groups, tuple(shape), rb, zero_diag)
+            cache[key] = maps
+        return maps
+
+    def _note_coded(self, part: PlanPartition, mstats: dict) -> None:
+        self._note(part)
+        self._stats["replication"] = int(part.replication)
+        self._stats["local_entries"] = mstats["local_entries"]
+        self._stats["residual_entries"] = mstats["residual_entries"]
+        tot = mstats["local_entries"] + mstats["residual_entries"]
+        self._stats["local_fraction"] = (
+            mstats["local_entries"] / tot if tot else 1.0)
+
+    def _coded_dispatch(self, xt, yt, plan, metric, shape, zero_diag,
+                        mesh, shard_axes, use_kernel, interpret, bl,
+                        rect: bool):
+        mesh, axes, S = _shard_mesh(mesh, shard_axes)
+        part = self.partition_coded(plan, S)
+        groups = self._coded_groups_for(plan, part, rect)
+        sendmap, srcmap, mstats = self._coded_maps_for(
+            plan, groups, part, shape, zero_diag)
+        self._count("coded")
+        self._note_coded(part, mstats)
+        if use_kernel is None:
+            use_kernel = jax.default_backend() == "tpu"
+        fn = _cache_get(
+            ("coded", metric, mesh, axes, bool(use_kernel),
+             bool(interpret), bl),
+            lambda: _make_coded_jitted(metric, mesh, axes, use_kernel,
+                                       interpret, bl))
+        jgroups = tuple(
+            (jnp.asarray(xi), jnp.asarray(xm), jnp.asarray(yi),
+             jnp.asarray(ym))
+            for xi, xm, yi, ym, _rows in groups)
+        out = fn(xt, yt, jgroups, jnp.asarray(sendmap),
+                 jnp.asarray(srcmap))
+        return out[:shape[0]]
+
+    # -- protocol ----------------------------------------------------------
+    def run_pairs(self, x, plan, reducer_fn, m, *, mesh=None,
+                  use_kernel=False, interpret=False):
+        from .allpairs import assemble_pair_matrix_bucketed
+        self._count("calls")
+        metric = getattr(reducer_fn, "fused_metric", None)
+        if metric is None or plan.num_reducers == 0:
+            self._count("fallbacks")
+            per_bucket = run_reducers_bucketed(x, plan, reducer_fn,
+                                               mesh=mesh, combine="buckets")
+            return assemble_pair_matrix_bucketed(per_bucket, m)
+        x = jnp.asarray(x)
+        return self._coded_dispatch(
+            x, x, plan, metric, (m, m), True, mesh, None,
+            (True if use_kernel else None), interpret, 128, rect=False)
+
+    def run_x2y(self, tables, plan, reducer_fn, shape, *, mesh=None,
+                use_kernel=False, interpret=False, bl: int = 128):
+        from .allpairs import assemble_x2y_matrix_bucketed
+        self._count("calls")
+        metric = getattr(reducer_fn, "fused_metric", None)
+        if metric is None or plan.num_reducers == 0:
+            self._count("fallbacks")
+            per_bucket = run_reducers_x2y_bucketed(
+                tables, plan, reducer_fn, mesh=mesh, combine="buckets")
+            return assemble_x2y_matrix_bucketed(per_bucket, shape)
+        uk = True if use_kernel else None
+        xt, yt = _as_tables(tables)
+        return self._coded_dispatch(
+            xt, yt, plan, metric, tuple(shape), False, mesh, None, uk,
+            interpret, bl, rect=True)
+
+    def lower(self, input_shape, plan, *, reducer_fn=None, metric=None,
+              mesh=None, dtype=jnp.float32, shard_axes=None,
+              m: Optional[int] = None, replication: Optional[int] = None,
+              use_kernel: bool = False, bl: int = 128, **kwargs):
+        """Lower the coded all-pairs program (no execution) for dry-run /
+        roofline: per-shard rect tile pipeline + the residual all-to-all.
+        ``replication`` overrides the instance rate (clamped to the
+        mesh's shard count); the send/recv lane sizes baked into the
+        lowered shapes are the real host-computed ones, so HLO collective
+        bytes measure the actual coded exchange."""
+        if metric is None:
+            metric = getattr(reducer_fn, "fused_metric", None)
+        assert metric is not None, "coded lowering needs a Gram metric"
+        mesh, axes, S = _shard_mesh(mesh, shard_axes)
+        part = self.partition_coded(plan, S, replication)
+        groups = self._coded_groups_for(plan, part, rect=False)
+        mm = m if m is not None else input_shape[0]
+        sendmap, srcmap, _ = self._coded_maps_for(
+            plan, groups, part, (mm, mm), True)
+        fn = _make_coded_jitted(metric, mesh, axes, use_kernel, False, bl)
+        x = jax.ShapeDtypeStruct(input_shape, dtype)
+        sgroups = tuple(
+            (jax.ShapeDtypeStruct(xi.shape, jnp.int32),
+             jax.ShapeDtypeStruct(xm.shape, jnp.bool_),
+             jax.ShapeDtypeStruct(yi.shape, jnp.int32),
+             jax.ShapeDtypeStruct(ym.shape, jnp.bool_))
+            for xi, xm, yi, ym, _rows in groups)
+        return fn.lower(x, x, sgroups,
+                        jax.ShapeDtypeStruct(sendmap.shape, jnp.int32),
+                        jax.ShapeDtypeStruct(srcmap.shape, jnp.int32))
+
+
+def coded_assembly_model(plan, num_shards: int, replication: int, m: int,
+                         *, itemsize: int = 4) -> dict:
+    """Analytic bytes of the coded combining stage at replication ``r`` —
+    host-only (builds the real send/recv maps, lowers nothing).
+
+    ``assembly_bytes_per_shard`` uses the same ring accounting as the
+    roofline HLO parser (result bytes x (S-1)/S for the tiled
+    all-to-all), so model and measured numbers are directly comparable;
+    ``uncoded_assembly_bytes_per_shard`` is the sharded executor's
+    all-gather of the full primary Gram stacks under the same accounting.
+    """
+    S = int(num_shards)
+    r = min(int(replication), S)
+    part = partition_plan(plan, S, replication=r)
+    sq = _stacked_groups(plan, part, rows_by_shard=part.replica_rows)
+    groups = [(i, k, i, k, rows) for i, k, rows in sq]
+    rb = -(-int(m) // S)
+    sendmap, _srcmap, st = _coded_maps(groups, (int(m), int(m)), rb, True)
+    frac = (S - 1) / S if S > 1 else 0.0
+    primary = _stacked_groups(plan, part)
+    gram_entries = sum(int(np.prod(i.shape[:2])) * i.shape[2] ** 2
+                       for i, _k, _r in primary)
+    return {
+        "replication": r,
+        "num_shards": S,
+        "local_entries": st["local_entries"],
+        "residual_entries": st["residual_entries"],
+        "local_fraction": (
+            st["local_entries"]
+            / max(st["local_entries"] + st["residual_entries"], 1)),
+        "lane_max": st["lane_max"],
+        "lane_fill": st["lane_fill"],
+        "assembly_bytes_per_shard": int(sendmap.shape[1] * sendmap.shape[2]
+                                        * itemsize * frac),
+        "uncoded_assembly_bytes_per_shard": int(gram_entries * itemsize
+                                                * frac),
+        "replica_slots": [int(x) for x in part.replica_slots],
+    }
+
+
+def choose_replication(plan, num_shards: int, m: int, d: int, *,
+                       itemsize: int = 4,
+                       candidates=None) -> tuple[int, list[dict]]:
+    """Auto-``r``: sweep the replication-vs-communication frontier and
+    pick the knee for ``num_shards`` shards.
+
+    Total cluster communication at replication r =
+    ``r x shipped input bytes`` (every replica shard receives its
+    sub-plan's input rows: the paper's map->reduce cost scales linearly
+    with r) ``+ S x assembly bytes per shard`` (falls with r as replicas
+    serve locally).  The knee is the argmin of that total — past it,
+    extra replicas ship more input rows than they save in assembly.
+    Returns ``(best_r, frontier)`` with one model row per candidate,
+    each including the total and both terms.
+    """
+    S = int(num_shards)
+    if candidates is None:
+        candidates = []
+        r = 1
+        while r <= S:
+            candidates.append(r)
+            r *= 2
+    shipped_bytes = float(plan.comm_cost) * d * itemsize
+    frontier = []
+    for r in sorted(set(min(int(c), S) for c in candidates)):
+        rec = coded_assembly_model(plan, S, r, m, itemsize=itemsize)
+        rec["shipped_bytes"] = r * shipped_bytes
+        rec["total_comm_bytes"] = (rec["shipped_bytes"]
+                                   + S * rec["assembly_bytes_per_shard"])
+        frontier.append(rec)
+    best = min(frontier, key=lambda rec: rec["total_comm_bytes"])
+    return best["replication"], frontier
+
+
+# ---------------------------------------------------------------------------
 # default registry instances
 # ---------------------------------------------------------------------------
 # The default fused executor adopts the legacy module-level counter dict
@@ -1013,3 +1443,4 @@ register_executor(DenseExecutor())
 register_executor(BucketedExecutor())
 register_executor(FusedExecutor(stats=_engine.FUSED_STATS))
 register_executor(ShardedExecutor())
+register_executor(CodedExecutor())

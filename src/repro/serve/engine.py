@@ -134,7 +134,8 @@ class PairwiseService:
     the service plans a mapping schema via the registry planner — repeated
     weight profiles hit ``repro.core.PLAN_CACHE`` and skip planning — and
     executes it on any executor-registry entry ("dense" / "bucketed" /
-    "fused" / "sharded" / "streaming"); the default bucketed path keeps
+    "fused" / "sharded" / "coded" / "streaming"); the default bucketed
+    path keeps
     skewed profiles from paying the dense global-max padding.  The
     service holds a
     *private* executor instance (``make_executor``), so its dispatch
@@ -250,6 +251,12 @@ class PairwiseService:
                 "num_shards": ex_stats["num_shards"],
                 "balance_factor": ex_stats["balance_factor"],
                 "fallbacks": ex_stats["fallbacks"],
+            }
+        if "replication" in ex_stats:            # coded-executor telemetry
+            info["coded"] = {
+                "replication": ex_stats["replication"],
+                "local_fraction": ex_stats["local_fraction"],
+                "residual_entries": ex_stats["residual_entries"],
             }
         return info
 

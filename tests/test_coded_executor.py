@@ -1,0 +1,349 @@
+"""Coded executor + replicated partitioning: differential and ledger tests.
+
+The coded executor trades replication for cross-shard assembly traffic
+(Afrati et al., arXiv:1206.4377).  It must stay a pure execution-plan
+change — identical outputs to the dense/bucketed executors on random,
+Zipf-skewed, and degenerate schemas — while ``partition_plan(...,
+replication=r)`` keeps the coverage/capacity/comm ledgers exact: the
+primary LPT assignment is untouched, every reducer is held by exactly r
+shards, and the replica slot ledger sums to exactly r x the unreplicated
+shipped weight.  The in-process tests run at the main process's device
+count (1 on plain CPU); the subprocess test forces an 8-device CPU mesh
+to exercise the real residual all-to-all and compare its measured HLO
+bytes against the sharded executor's assembly all-gather.
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.core import partition_plan, plan_a2a
+from repro.mapreduce import (
+    build_plan,
+    get_executor,
+    list_executors,
+    make_executor,
+    pairwise_similarity,
+    x2y_similarity,
+)
+from repro.mapreduce.executors import (
+    choose_replication,
+    coded_assembly_model,
+)
+
+
+def _weights(kind: str, m: int, seed: int, q: float = 1.0):
+    rng = np.random.default_rng(seed)
+    return {
+        "uniform": lambda: rng.uniform(0.05, 0.33, m),
+        "zipf": lambda: np.clip(rng.zipf(1.7, m) / 24.0, 0.02, 0.45 * q),
+        "one-giant": lambda: np.concatenate(
+            [[0.8 * q], rng.uniform(0.02, 0.1, m - 1)]),
+    }[kind]()
+
+
+def _rand(rng, shape):
+    return jnp.asarray(rng.normal(size=shape).astype(np.float32))
+
+
+def _zipf_plan(m: int, seed: int = 0):
+    w = _weights("zipf", m, seed=seed)
+    return build_plan(plan_a2a(w, 1.0)), w
+
+
+# ------------------------------------------------- replicated partitioning
+def _check_replication_ledger(plan, num_shards, r):
+    part = partition_plan(plan, num_shards, replication=r)
+    base = partition_plan(plan, num_shards)
+    R0 = plan.num_reducers
+
+    # primary assignment identical to the unreplicated partition
+    for rows, brows in zip(part.shard_rows, base.shard_rows):
+        np.testing.assert_array_equal(rows, brows)
+    # coverage/capacity untouched: sub-plans carry idx/mask verbatim
+    for rows, sub in zip(part.shard_rows, part.shards):
+        assert sub.num_reducers == len(rows)
+        np.testing.assert_array_equal(sub.idx, plan.idx[rows])
+        np.testing.assert_array_equal(sub.mask, plan.mask[rows])
+    assert float(part.comm_cost.sum()) == pytest.approx(plan.comm_cost)
+
+    # every reducer held by exactly r shards, holder sets nest the
+    # primary assignment (replication only ever ADDS holders)
+    held = np.zeros((num_shards, R0), dtype=np.int64)
+    for s, rows in enumerate(part.replica_rows):
+        held[s, np.asarray(rows, dtype=np.int64)] += 1
+        assert set(np.asarray(part.shard_rows[s]).tolist()) <= set(
+            np.asarray(rows).tolist())
+    if R0:
+        np.testing.assert_array_equal(held.max(axis=0), np.ones(R0))
+        np.testing.assert_array_equal(held.sum(axis=0), np.full(R0, r))
+
+    # replica ledger: exactly r x the unreplicated shipped weight
+    assert int(part.replica_slots.sum()) == r * int(part.shipped_rows.sum())
+    assert int(part.shipped_rows.sum()) == int(plan.mask.sum())
+    rep = part.report()
+    assert rep["replication"] == r
+    assert rep["replica_balance_factor"] >= 1.0 or R0 == 0
+    return part
+
+
+class TestReplicatedPartition:
+    @pytest.mark.parametrize("kind", ["uniform", "zipf", "one-giant"])
+    @pytest.mark.parametrize("num_shards,r", [(4, 2), (8, 2), (8, 4),
+                                              (8, 8), (3, 3)])
+    def test_ledger_exact(self, kind, num_shards, r):
+        m = 37
+        plan = build_plan(plan_a2a(_weights(kind, m, seed=m), 1.0))
+        _check_replication_ledger(plan, num_shards, r)
+
+    def test_r1_matches_unreplicated(self):
+        plan, _ = _zipf_plan(40)
+        part = partition_plan(plan, 4, replication=1)
+        assert part.replication == 1
+        for rows, rrows in zip(part.shard_rows, part.replica_rows):
+            np.testing.assert_array_equal(np.sort(rows), np.sort(rrows))
+
+    def test_replication_out_of_range_rejected(self):
+        plan, _ = _zipf_plan(20)
+        with pytest.raises(AssertionError):
+            partition_plan(plan, 4, replication=5)
+        with pytest.raises(AssertionError):
+            partition_plan(plan, 4, replication=0)
+
+    def test_holder_sets_nested_across_rates(self):
+        """Raising r only adds holders — the monotone-frontier invariant
+        (a block served locally at rate r stays local at r+1)."""
+        plan, _ = _zipf_plan(64)
+        prev = None
+        for r in (1, 2, 4, 8):
+            part = partition_plan(plan, 8, replication=r)
+            cur = [set(np.asarray(rows).tolist())
+                   for rows in part.replica_rows]
+            if prev is not None:
+                for a, b in zip(prev, cur):
+                    assert a <= b
+            prev = cur
+
+    def test_empty_plan(self):
+        plan = build_plan(plan_a2a([], 1.0))
+        part = partition_plan(plan, 4, replication=2)
+        assert part.replication == 2
+        assert all(len(rows) == 0 for rows in part.replica_rows)
+
+    @given(st.integers(min_value=5, max_value=60),
+           st.integers(min_value=0, max_value=2 ** 31 - 1),
+           st.integers(min_value=2, max_value=8),
+           st.integers(min_value=2, max_value=8))
+    @settings(max_examples=25, deadline=None)
+    def test_property_ledger_exact(self, m, seed, num_shards, r):
+        """Property: for any Zipf profile and any 2 <= r <= S, replication
+        preserves coverage/capacity and the replica ledger sums to exactly
+        r x the unreplicated shipped weight."""
+        if r > num_shards:
+            r = num_shards
+        rng = np.random.default_rng(seed)
+        w = np.clip(rng.zipf(1.7, m) / 24.0, 0.02, 0.45)
+        plan = build_plan(plan_a2a(w, 1.0))
+        _check_replication_ledger(plan, num_shards, r)
+
+
+# ------------------------------------------------------------- differential
+KINDS = ["uniform", "zipf", "one-giant"]
+
+
+class TestCodedExecutorDifferential:
+    def test_registered(self):
+        assert "coded" in list_executors()
+        assert get_executor("coded").name == "coded"
+
+    @pytest.mark.parametrize("kind", KINDS)
+    @pytest.mark.parametrize("m", [5, 29])
+    def test_pairwise_coded_matches_dense(self, kind, m):
+        w = _weights(kind, m, seed=m)
+        rng = np.random.default_rng(m)
+        x = _rand(rng, (m, 6))
+        schema = plan_a2a(w, 1.0)
+        s_d, _, _ = pairwise_similarity(x, q=1.0, weights=w, schema=schema,
+                                        executor="dense")
+        s_c, _, _ = pairwise_similarity(x, q=1.0, weights=w, schema=schema,
+                                        executor="coded")
+        np.testing.assert_allclose(np.asarray(s_c), np.asarray(s_d),
+                                   rtol=1e-4, atol=1e-4)
+
+    @pytest.mark.parametrize("metric", ["dot", "l2", "cosine"])
+    def test_metrics_agree(self, metric):
+        m = 26
+        w = _weights("zipf", m, seed=7)
+        rng = np.random.default_rng(7)
+        x = _rand(rng, (m, 8))
+        schema = plan_a2a(w, 1.0)
+        s_b, _, _ = pairwise_similarity(x, q=1.0, weights=w, schema=schema,
+                                        metric=metric, executor="bucketed")
+        s_c, _, _ = pairwise_similarity(x, q=1.0, weights=w, schema=schema,
+                                        metric=metric, executor="coded")
+        np.testing.assert_allclose(np.asarray(s_c), np.asarray(s_b),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_x2y_coded_matches_bucketed(self):
+        rng = np.random.default_rng(11)
+        nx, ny, d = 21, 17, 5
+        xw = rng.uniform(0.05, 0.3, nx)
+        yw = rng.uniform(0.05, 0.3, ny)
+        xt = _rand(rng, (nx, d))
+        yt = _rand(rng, (ny, d))
+        s_b, _, sch = x2y_similarity(xt, yt, q=1.0, wx=xw, wy=yw,
+                                     executor="bucketed")
+        s_c, _, _ = x2y_similarity(xt, yt, q=1.0, wx=xw, wy=yw, schema=sch,
+                                   executor="coded")
+        np.testing.assert_allclose(np.asarray(s_c), np.asarray(s_b),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_single_input_degenerate(self):
+        x = jnp.ones((1, 4), jnp.float32)
+        s_c, _, _ = pairwise_similarity(x, q=1.0, weights=[0.3],
+                                        executor="coded")
+        s_b, _, _ = pairwise_similarity(x, q=1.0, weights=[0.3],
+                                        executor="bucketed")
+        np.testing.assert_allclose(np.asarray(s_c), np.asarray(s_b))
+
+    def test_non_gram_reducer_falls_back(self):
+        m = 17
+        w = _weights("zipf", m, seed=3)
+        plan = build_plan(plan_a2a(w, 1.0))
+        rng = np.random.default_rng(5)
+        x = _rand(rng, (m, 4))
+
+        def colsum(blk, msk):
+            return jnp.sum(blk * msk[:, None], axis=0)
+
+        ex = make_executor("coded")
+        from repro.mapreduce import run_reducers_bucketed
+        out = ex.run(x, plan, colsum)
+        buck = run_reducers_bucketed(x, plan, colsum)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(buck),
+                                   rtol=1e-5, atol=1e-5)
+        assert ex.stats()["fallbacks"] == 1
+
+    def test_coded_telemetry_recorded(self):
+        m = 19
+        w = _weights("uniform", m, seed=2)
+        rng = np.random.default_rng(2)
+        x = _rand(rng, (m, 4))
+        ex = make_executor("coded")
+        schema = plan_a2a(w, 1.0)
+        pairwise_similarity(x, q=1.0, weights=w, schema=schema,
+                            executor=ex)
+        stats = ex.stats()
+        assert stats["coded"] == 1
+        assert stats["replication"] >= 1
+        assert 0.0 <= stats["local_fraction"] <= 1.0
+        assert stats["local_entries"] + stats["residual_entries"] > 0
+
+
+# ---------------------------------------------------------- traffic model
+class TestCodedModelAndChooser:
+    def test_entries_conserved_across_rates(self):
+        """Every needed Gram entry is served exactly once at every r —
+        replication moves entries between the local and residual ledgers,
+        it never drops or duplicates them."""
+        plan, _ = _zipf_plan(64)
+        totals = set()
+        for r in (1, 2, 4, 8):
+            rec = coded_assembly_model(plan, 8, r, 64)
+            totals.add(rec["local_entries"] + rec["residual_entries"])
+        assert len(totals) == 1
+
+    def test_local_fraction_tracks_replication(self):
+        """With contiguous row-slices, each replica holder serves ~1/S of
+        a block's rows locally: local fraction grows with r and hits 1.0
+        at full replication."""
+        plan, _ = _zipf_plan(64)
+        fracs = [coded_assembly_model(plan, 8, r, 64)["local_fraction"]
+                 for r in (1, 2, 4, 8)]
+        assert all(b >= a for a, b in zip(fracs, fracs[1:]))
+        assert fracs[-1] == 1.0
+
+    def test_assembly_bytes_monotone_in_r(self):
+        plan, _ = _zipf_plan(96)
+        b = [coded_assembly_model(plan, 8, r, 96)[
+            "assembly_bytes_per_shard"] for r in (1, 2, 4, 8)]
+        assert all(y <= x for x, y in zip(b, b[1:])), b
+
+    def test_chooser_returns_frontier_point(self):
+        plan, _ = _zipf_plan(64)
+        best_r, frontier = choose_replication(plan, 8, 64, 16)
+        assert best_r in [rec["replication"] for rec in frontier]
+        best = [rec for rec in frontier
+                if rec["replication"] == best_r][0]
+        assert all(best["total_comm_bytes"] <= rec["total_comm_bytes"]
+                   for rec in frontier)
+        # shipping term is exact: r x the schema's comm volume
+        for rec in frontier:
+            assert rec["shipped_bytes"] == pytest.approx(
+                rec["replication"] * plan.comm_cost * 16 * 4)
+
+
+# ------------------------------------------------- forced 8-device CPU mesh
+SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp, numpy as np
+    assert len(jax.devices()) == 8, jax.devices()
+    from repro.core import plan_a2a
+    from repro.launch.roofline import collective_bytes
+    from repro.mapreduce import get_executor, pairwise_similarity
+
+    rng = np.random.default_rng(0)
+    for kind in ("uniform", "zipf", "one-giant"):
+        m = 48
+        if kind == "uniform":
+            w = rng.uniform(0.05, 0.33, m)
+        elif kind == "zipf":
+            w = np.clip(rng.zipf(1.7, m) / 24.0, 0.02, 0.45)
+        else:
+            w = np.concatenate([[0.8], rng.uniform(0.02, 0.1, m - 1)])
+        x = jnp.asarray(rng.normal(size=(m, 6)).astype(np.float32))
+        schema = plan_a2a(w, 1.0)
+        s_d, plan, _ = pairwise_similarity(x, q=1.0, weights=w,
+                                           schema=schema, executor="dense")
+        s_c, _, _ = pairwise_similarity(x, q=1.0, weights=w, schema=schema,
+                                        executor="coded")
+        np.testing.assert_allclose(np.asarray(s_c), np.asarray(s_d),
+                                   rtol=1e-4, atol=1e-4)
+    st = get_executor("coded").stats()
+    assert st["num_shards"] == 8, st
+    assert st["replication"] == 2, st
+    assert st["residual_entries"] > 0, st
+
+    # the coded residual all-to-all must move fewer bytes than the
+    # sharded executor's assembly all-gather on the same plan
+    hlo_s = get_executor("sharded").lower(
+        (m, 6), plan, metric="dot", m=m).compile().as_text()
+    hlo_c = get_executor("coded").lower(
+        (m, 6), plan, metric="dot", m=m, replication=2).compile().as_text()
+    b_s = collective_bytes(hlo_s)["total"]
+    b_c = collective_bytes(hlo_c)["total"]
+    assert collective_bytes(hlo_c)["all-to-all"] > 0, hlo_c[:2000]
+    assert b_c < b_s, (b_c, b_s)
+    print("CODED_OK", b_c / b_s)
+""")
+
+
+def test_coded_differential_on_8_device_mesh():
+    """coded == dense under a real 8-shard mesh, and the residual
+    all-to-all moves fewer HLO bytes than the sharded assembly gather
+    (subprocess: the main test process keeps its default device count)."""
+    res = subprocess.run(
+        [sys.executable, "-c", SCRIPT],
+        capture_output=True, text=True, timeout=600,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin:/usr/local/bin",
+             "JAX_PLATFORMS": os.environ.get("JAX_PLATFORMS", "cpu"),
+             "HOME": os.environ.get("HOME", "/tmp")},
+    )
+    assert "CODED_OK" in res.stdout, res.stdout + res.stderr

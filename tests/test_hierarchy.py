@@ -268,3 +268,69 @@ class TestRunBlockGrid:
         sparse = build_sparse_plan(schema)
         with pytest.raises(IndexError):
             block_subplan(sparse, 0, 60, 0, 10)
+
+
+# -------------------------------------------------------- block plan cache
+class TestBlockCacheConfig:
+    def _sparse(self, m=60, seed=15):
+        from repro.mapreduce import build_sparse_plan
+        w = np.random.default_rng(seed).uniform(0.1, 0.25, m)
+        return build_sparse_plan(plan_a2a(w, 1.0))
+
+    def test_eviction_order_is_lru(self):
+        """Regression: the cache evicts least-recently-USED, not
+        least-recently-inserted — touching an old block must protect it."""
+        from repro.mapreduce import block_cache_stats, block_subplan
+        sparse = self._sparse()
+        blocks = [(0, 20), (20, 40), (40, 60)]
+
+        def req(b):
+            i0, i1 = b
+            return block_subplan(sparse, i0, i1, i0, i1, cache_size=2)
+
+        req(blocks[0])                        # cache: [A]
+        req(blocks[1])                        # cache: [A, B]
+        before = block_cache_stats()
+        req(blocks[0])                        # touch A -> cache: [B, A]
+        req(blocks[2])                        # insert C -> evicts B
+        req(blocks[0])                        # A survived: hit
+        delta = {k: block_cache_stats()[k] - before[k]
+                 for k in ("hits", "misses", "evictions")}
+        assert delta == {"hits": 2, "misses": 1, "evictions": 1}
+        cache = sparse.__dict__["_block_cache"]
+        kept = {key[:2] for key in cache}
+        assert kept == {blocks[0], blocks[2]}
+        req(blocks[1])                        # B was evicted: miss again
+        assert block_cache_stats()["misses"] - before["misses"] == 2
+
+    def test_configure_and_env_cap(self, monkeypatch):
+        from repro.mapreduce import configure_block_cache
+        from repro.mapreduce import engine as eng
+        old = eng._BLOCK_CACHE_MAX
+        try:
+            assert configure_block_cache(7) == 7
+            assert eng._BLOCK_CACHE_MAX == 7
+            monkeypatch.setenv("REPRO_BLOCK_CACHE_SIZE", "13")
+            assert configure_block_cache() == 13
+            monkeypatch.setenv("REPRO_BLOCK_CACHE_SIZE", "bogus")
+            assert configure_block_cache() == 64     # malformed -> default
+            monkeypatch.setenv("REPRO_BLOCK_CACHE_SIZE", "-2")
+            assert configure_block_cache() == 64     # non-positive -> default
+            with pytest.raises(AssertionError):
+                configure_block_cache(0)
+        finally:
+            configure_block_cache(old)
+
+    def test_default_cap_applies_without_explicit_size(self):
+        """cache_size=None takes the shared configurable cap."""
+        from repro.mapreduce import block_subplan, configure_block_cache
+        from repro.mapreduce import engine as eng
+        sparse = self._sparse(seed=16)
+        old = eng._BLOCK_CACHE_MAX
+        try:
+            configure_block_cache(1)
+            block_subplan(sparse, 0, 20, 0, 20)
+            block_subplan(sparse, 20, 40, 20, 40)
+            assert len(sparse.__dict__["_block_cache"]) == 1
+        finally:
+            configure_block_cache(old)

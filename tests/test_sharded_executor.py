@@ -52,7 +52,7 @@ def _rand(rng, shape):
 # ----------------------------------------------------------------- registry
 class TestExecutorRegistry:
     def test_all_executors_registered(self):
-        core = {"bucketed", "dense", "fused", "sharded"}
+        core = {"bucketed", "dense", "fused", "sharded", "coded"}
         assert core.issubset(set(list_executors()))
         # the streaming executor registers lazily on first resolution
         get_executor("streaming")
