@@ -7,8 +7,9 @@ PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
 .PHONY: test test-fast test-schemas test-stream test-x2y test-hierarchy \
-	lint ci bench bench-quick bench-skewed bench-fused bench-sharded \
-	bench-coded bench-stream bench-x2y bench-hierarchy
+	test-obs lint ci bench bench-quick bench-skewed bench-fused \
+	bench-sharded bench-coded bench-stream bench-x2y bench-hierarchy \
+	bench-obs
 
 test:
 	$(PYTHON) -m pytest -q
@@ -43,10 +44,18 @@ test-x2y:
 test-hierarchy:
 	$(PYTHON) -m pytest -q tests/test_hierarchy.py
 
+# observability layer: histogram quantiles vs numpy, span nesting +
+# Chrome-trace schema, comm-ledger reconciliation exact on every
+# executor (coded r=2 vs the analytic model on an 8-device mesh),
+# FUSED_STATS isolation regression, cache-eviction events
+test-obs:
+	$(PYTHON) -m pytest -q tests/test_obs.py
+
 lint:
 	$(PYTHON) -m compileall -q src
 
-ci: lint test-schemas test-stream test-x2y test-hierarchy test bench-coded
+ci: lint test-schemas test-stream test-x2y test-hierarchy test-obs test \
+	bench-coded bench-obs
 
 bench:
 	$(PYTHON) benchmarks/bench_planner.py
@@ -101,3 +110,10 @@ bench-x2y:
 bench-hierarchy:
 	JAX_PLATFORMS=$${JAX_PLATFORMS:-cpu} \
 		$(PYTHON) benchmarks/bench_hierarchy.py
+
+# observability overhead on the serving hot path: fused Zipf m=512
+# obs-on vs obs-off (repro.obs.configure kill switch); writes
+# benchmarks/BENCH_obs.json and enforces the acceptance bar: < 5%
+bench-obs:
+	JAX_PLATFORMS=$${JAX_PLATFORMS:-cpu} \
+		$(PYTHON) benchmarks/bench_obs.py

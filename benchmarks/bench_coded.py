@@ -37,7 +37,10 @@ from repro.launch.roofline import collective_bytes
 from repro.mapreduce import get_executor, make_executor, pairwise_similarity
 from repro.mapreduce.executors import choose_replication
 
-from bench_engine import emit_bench_json
+try:                                    # run as a script from benchmarks/
+    from bench_common import emit_bench_json
+except ImportError:                     # imported as a package module
+    from benchmarks.bench_common import emit_bench_json
 
 BENCH_JSON = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                           "BENCH_coded.json")

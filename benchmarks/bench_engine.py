@@ -29,7 +29,6 @@ tracking.
 from __future__ import annotations
 
 import argparse
-import json
 import os
 import time
 
@@ -39,6 +38,11 @@ import numpy as np
 
 from repro.core import naive_pairs, plan_a2a
 from repro.mapreduce import build_plan, pairwise_similarity
+
+try:                                    # run as a script from benchmarks/
+    from bench_common import emit_bench_json as _emit_bench_json
+except ImportError:                     # imported as benchmarks.bench_engine
+    from benchmarks.bench_common import emit_bench_json as _emit_bench_json
 
 BENCH_JSON = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                           "BENCH_engine.json")
@@ -310,23 +314,10 @@ def run_sharded(m: int = 512, d: int = 64, q: float = 1.0,
 
 
 def emit_bench_json(payload: dict, path: str = BENCH_JSON):
-    """Machine-readable perf trajectory (read by CI across PRs).
-
-    Merges ``payload`` into the existing file, so ``--fused`` and
-    ``--sharded`` runs accumulate sections instead of clobbering each
-    other's history."""
-    existing = {}
-    if os.path.exists(path):
-        try:
-            with open(path) as f:
-                existing = json.load(f)
-        except (json.JSONDecodeError, OSError):
-            existing = {}
-    existing.update(payload)
-    with open(path, "w") as f:
-        json.dump(existing, f, indent=1, sort_keys=True)
-        f.write("\n")
-    return path
+    """Merge ``payload`` into BENCH_engine.json (canonical implementation
+    lives in bench_common; this wrapper keeps the historical import site
+    ``from bench_engine import emit_bench_json`` working)."""
+    return _emit_bench_json(payload, path)
 
 
 def main(argv=None):

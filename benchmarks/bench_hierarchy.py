@@ -19,11 +19,15 @@ Writes the machine-readable report to ``benchmarks/BENCH_hierarchy.json``
 from __future__ import annotations
 
 import argparse
-import json
 import os
 import time
 
 import numpy as np
+
+try:                                    # run as a script from benchmarks/
+    from bench_common import emit_bench_json as _emit_bench_json
+except ImportError:                     # imported as a package module
+    from benchmarks.bench_common import emit_bench_json as _emit_bench_json
 
 BENCH_JSON = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                           "BENCH_hierarchy.json")
@@ -146,18 +150,7 @@ def bench_block_allclose(m: int, d: int, block: int, seed: int,
 
 
 def emit_bench_json(payload: dict, path: str = BENCH_JSON) -> str:
-    existing = {}
-    if os.path.exists(path):
-        try:
-            with open(path) as f:
-                existing = json.load(f)
-        except (json.JSONDecodeError, OSError):
-            existing = {}
-    existing.update(payload)
-    with open(path, "w") as f:
-        json.dump(existing, f, indent=1, sort_keys=True)
-        f.write("\n")
-    return os.path.abspath(path)
+    return _emit_bench_json(payload, path)
 
 
 def main(argv=None):

@@ -1,0 +1,115 @@
+"""Benchmark: observability overhead on the serving hot path.
+
+Acceptance bar (ISSUE 10 / DESIGN.md 1j): the obs layer — per-request
+metrics, spans, and the comm-ledger reconciler — must cost **< 5%** wall
+time on the fused Zipf m=512 serving workload versus the same workload
+with obs disabled (``repro.obs.configure(enabled=False)``, the global
+kill switch that turns every publish into one attribute test).
+
+Method: one warm-up request compiles the jit programs, then
+``repeats`` timed requests per mode, medians compared, obs-on first so
+a cold cache would hurt the obs side, not flatter it.  Alternating
+A/B ordering across ``rounds`` absorbs thermal drift.
+
+Writes ``benchmarks/BENCH_obs.json``; ``make bench-obs`` runs this and
+fails CI when the bar breaks.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+import numpy as np
+
+try:                                    # run as a script from benchmarks/
+    from bench_common import emit_bench_json
+except ImportError:                     # imported as a package module
+    from benchmarks.bench_common import emit_bench_json
+
+BENCH_JSON = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                          "BENCH_obs.json")
+
+OVERHEAD_BAR = 0.05                     # < 5% obs-on vs obs-off
+
+
+def _workload(m: int, d: int, q: float, zipf_a: float, seed: int):
+    rng = np.random.default_rng(seed)
+    w = np.clip(rng.zipf(zipf_a, m).astype(np.float64) / 32.0,
+                0.01, 0.45 * q)
+    x = rng.normal(size=(m, d)).astype(np.float32)
+    return x, w
+
+
+def _median_request_s(svc, x, w, repeats: int) -> float:
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        svc.similarity(x, weights=w)
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
+def run_overhead(m: int = 512, d: int = 64, q: float = 1.0,
+                 zipf_a: float = 1.6, seed: int = 0,
+                 repeats: int = 5, rounds: int = 3) -> dict:
+    import repro.obs as obs
+    from repro.serve import PairwiseService
+
+    x, w = _workload(m, d, q, zipf_a, seed)
+    svc = PairwiseService(q, executor="fused")
+    svc.similarity(x, weights=w)        # compile warm-up (both modes share)
+
+    on_meds, off_meds = [], []
+    prior = obs.enabled()
+    try:
+        for r in range(rounds):
+            # alternate A/B order so drift hits both sides equally
+            modes = (True, False) if r % 2 == 0 else (False, True)
+            for mode in modes:
+                obs.configure(enabled=mode)
+                med = _median_request_s(svc, x, w, repeats)
+                (on_meds if mode else off_meds).append(med)
+    finally:
+        obs.configure(enabled=prior)
+
+    on_s, off_s = float(np.median(on_meds)), float(np.median(off_meds))
+    overhead = on_s / off_s - 1.0
+    return {
+        "m": m, "d": d, "q": q, "zipf_a": zipf_a,
+        "repeats": repeats, "rounds": rounds,
+        "obs_on_s": on_s,
+        "obs_off_s": off_s,
+        "overhead_fraction": round(overhead, 5),
+        "bar": OVERHEAD_BAR,
+        "pass": bool(overhead < OVERHEAD_BAR),
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--m", type=int, default=512)
+    ap.add_argument("--d", type=int, default=64)
+    ap.add_argument("--repeats", type=int, default=5)
+    ap.add_argument("--rounds", type=int, default=3)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    rep = run_overhead(m=args.m, d=args.d, repeats=args.repeats,
+                       rounds=args.rounds, seed=args.seed)
+    print(f"obs overhead  fused Zipf m={rep['m']}: "
+          f"on={rep['obs_on_s'] * 1e3:.2f}ms "
+          f"off={rep['obs_off_s'] * 1e3:.2f}ms "
+          f"overhead={rep['overhead_fraction'] * 100:+.2f}% "
+          f"(bar < {rep['bar'] * 100:.0f}%)")
+    path = emit_bench_json({"obs_overhead": rep}, BENCH_JSON)
+    print(f"  wrote {path}")
+    if not rep["pass"]:
+        raise SystemExit(
+            f"FAIL: obs overhead {rep['overhead_fraction'] * 100:.2f}% "
+            f"exceeds the {rep['bar'] * 100:.0f}% bar")
+
+
+if __name__ == "__main__":
+    main()

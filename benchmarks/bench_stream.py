@@ -31,13 +31,17 @@ it as the ``bench_stream`` section.
 from __future__ import annotations
 
 import argparse
-import json
 import os
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+try:                                    # run as a script from benchmarks/
+    from bench_common import emit_bench_json as _emit_bench_json
+except ImportError:                     # imported as a package module
+    from benchmarks.bench_common import emit_bench_json as _emit_bench_json
 
 BENCH_JSON = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                           "BENCH_stream.json")
@@ -250,20 +254,9 @@ def run_stream(m: int = 512, d: int = 64, q: float = 1.0,
 
 
 def emit_bench_json(payload: dict, path: str = BENCH_JSON) -> str:
-    """Merge ``payload`` into benchmarks/BENCH_stream.json (sections
-    accumulate across runs, like benchmarks/BENCH_engine.json)."""
-    existing = {}
-    if os.path.exists(path):
-        try:
-            with open(path) as f:
-                existing = json.load(f)
-        except (json.JSONDecodeError, OSError):
-            existing = {}
-    existing.update(payload)
-    with open(path, "w") as f:
-        json.dump(existing, f, indent=1, sort_keys=True)
-        f.write("\n")
-    return os.path.abspath(path)
+    """Merge ``payload`` into benchmarks/BENCH_stream.json (canonical
+    implementation: bench_common.emit_bench_json)."""
+    return _emit_bench_json(payload, path)
 
 
 def main(argv=None):

@@ -124,7 +124,10 @@ def main():
               f"{r['reducers']:8d}  {r['allclose']}"
               f"{'' if r['allclose'] else '  ** MISMATCH **'}")
 
-    from benchmarks.bench_engine import emit_bench_json
+    try:
+        from bench_common import emit_bench_json
+    except ImportError:
+        from benchmarks.bench_common import emit_bench_json
     emit_bench_json({"x2y_bounds": rows, "x2y_executors": erows},
                     BENCH_JSON)
     return rows + erows

@@ -16,6 +16,8 @@
                    bytes vs the uncoded sharded gather, Thm-8 LB check);
                    writes benchmarks/BENCH_coded.json
   bench_stream   — streaming-maintenance edits vs full re-planning
+  bench_obs      — observability overhead bar: obs-on vs obs-off on the
+                   fused Zipf m=512 serving path (< 5%)
                    (first-edit p99, update latency, recompute fraction,
                    sustained achievable gap, delta-vs-replan comm bytes
                    across edit rates on Zipf m=512); writes
@@ -66,7 +68,7 @@ def _bench_coded():
 
 def main() -> None:
     from benchmarks import bench_a2a, bench_engine, bench_kernels, \
-        bench_packing, bench_stream, bench_x2y
+        bench_obs, bench_packing, bench_stream, bench_x2y
 
     sections = [
         ("bench_a2a", bench_a2a.main),
@@ -76,6 +78,7 @@ def main() -> None:
         ("bench_engine_sharded", _bench_engine_sharded),
         ("bench_coded", _bench_coded),
         ("bench_stream", lambda: [bench_stream.main([])]),
+        ("bench_obs", lambda: [bench_obs.main([])]),
         ("bench_packing", bench_packing.main),
         ("bench_kernels", bench_kernels.main),
     ]

@@ -40,6 +40,9 @@ from typing import Callable, Optional, Sequence
 
 import numpy as np
 
+from repro.obs import EVENTS as _OBS_EVENTS
+from repro.obs import REGISTRY as _OBS_REGISTRY
+
 from . import unit_schemas as us
 from .binpack import pack
 from .primes import is_prime, prev_prime
@@ -87,9 +90,11 @@ class PlanCache:
     def get(self, key: tuple):
         if key in self._store:
             self.hits += 1
+            _OBS_REGISTRY.counter("cache.hits", cache="plan").inc()
             self._store.move_to_end(key)
             return self._store[key]
         self.misses += 1
+        _OBS_REGISTRY.counter("cache.misses", cache="plan").inc()
         return None
 
     def put(self, key: tuple, value) -> None:
@@ -98,6 +103,8 @@ class PlanCache:
         while len(self._store) > self.maxsize:
             self._store.popitem(last=False)
             self.evictions += 1
+            _OBS_REGISTRY.counter("cache.evictions", cache="plan").inc()
+            _OBS_EVENTS.emit("cache_eviction", cache="plan")
 
     def invalidate(self, key: tuple) -> bool:
         """Drop one entry (the streaming gap-drift re-plan path: a serving
@@ -109,6 +116,7 @@ class PlanCache:
         if self._store.pop(key, None) is None:
             return False
         self.invalidations += 1
+        _OBS_REGISTRY.counter("cache.invalidations", cache="plan").inc()
         return True
 
     def stats(self) -> dict:

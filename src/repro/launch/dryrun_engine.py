@@ -26,6 +26,19 @@ from repro.kernels.pairwise.fused_gather_gram import fused_traffic_model
 from repro.mapreduce.allpairs import _block_fn
 from repro.mapreduce.engine import build_plan
 from repro.mapreduce.executors import get_executor
+from repro.obs import span as _obs_span
+
+
+def _traced(fn):
+    """Wrap an ``analyze_*`` stage in an obs span so a dry run exports a
+    per-stage Chrome trace alongside its JSON report."""
+    import functools
+
+    @functools.wraps(fn)
+    def wrapper(*args, **kwargs):
+        with _obs_span(fn.__name__, stage="dryrun"):
+            return fn(*args, **kwargs)
+    return wrapper
 
 RESULTS = os.path.join(os.path.dirname(__file__), "..", "..", "..",
                        "benchmarks", "results", "dryrun")
@@ -51,6 +64,7 @@ def _stats_rec(plan, name, stats, padded_elements, extra=None):
     return rec
 
 
+@_traced
 def analyze(plan, m, d, mesh, name):
     """Dense path: one program padded to the global max slot count."""
     lowered = get_executor("dense").lower(
@@ -62,6 +76,7 @@ def analyze(plan, m, d, mesh, name):
     return _stats_rec(plan, name, stats, plan.dense_padded_elements)
 
 
+@_traced
 def analyze_bucketed(plan, m, d, mesh, name):
     """Bucketed path: one program per capacity bucket; terms are summed
     (the bucket programs run back-to-back on the same mesh)."""
@@ -79,6 +94,7 @@ def analyze_bucketed(plan, m, d, mesh, name):
                "padding_savings": float(plan.padding_savings)})
 
 
+@_traced
 def analyze_fused(plan, m, d, mesh, name, bucketed_rec=None):
     """Fused path: ONE program for all capacity buckets, gather streamed.
 
@@ -114,6 +130,7 @@ def analyze_fused(plan, m, d, mesh, name, bucketed_rec=None):
                       extra=extra)
 
 
+@_traced
 def analyze_streaming(w, q, m, d, name):
     """Streaming path: lower the DELTA program of one single-input edit.
 
@@ -163,6 +180,7 @@ def analyze_streaming(w, q, m, d, name):
     return rec
 
 
+@_traced
 def analyze_sharded(plan, m, d, mesh, name):
     """Sharded path: ONE shard_map program, reducers LPT-balanced.
 
@@ -202,6 +220,7 @@ def analyze_sharded(plan, m, d, mesh, name):
                       extra=extra)
 
 
+@_traced
 def analyze_coded(plan, m, d, name, num_shards: int = 16):
     """Coded path: the replication x communication sweep.
 

@@ -21,6 +21,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs import span as _obs_span
+
 from repro.core import (plan_a2a, plan_a2a_hierarchical, plan_some_pairs,
                         plan_x2y)
 from repro.core.schema import MappingSchema
@@ -310,17 +312,21 @@ def pairwise_similarity(
     executor registry either way.  Returns (sims (m, m) with zero
     diagonal, plan, schema)."""
     m = x.shape[0]
-    if schema is None:
-        w = np.full(m, 1.0) if weights is None else np.asarray(weights, float)
-        schema = plan_a2a(w, q)
-    plan = _plan_for(
-        schema,
-        pad_reducers_to=(mesh.devices.size if mesh is not None else 1),
-        pad_slots_to=pad_slots_to,
-    )
+    with _obs_span("plan", workload="pairs", m=m):
+        if schema is None:
+            w = (np.full(m, 1.0) if weights is None
+                 else np.asarray(weights, float))
+            schema = plan_a2a(w, q)
+        plan = _plan_for(
+            schema,
+            pad_reducers_to=(mesh.devices.size if mesh is not None else 1),
+            pad_slots_to=pad_slots_to,
+        )
     fn = _block_fn(metric, use_kernel)
-    sims = _run_and_assemble(x, plan, fn, m, mesh, executor,
-                             use_kernel=use_kernel, interpret=interpret)
+    with _obs_span("execute", workload="pairs",
+                   reducers=plan.num_reducers):
+        sims = _run_and_assemble(x, plan, fn, m, mesh, executor,
+                                 use_kernel=use_kernel, interpret=interpret)
     return sims, plan, schema
 
 
@@ -399,17 +405,21 @@ def some_pairs_similarity(
     (sims (m, m), plan, schema).
     """
     m = x.shape[0]
-    if schema is None:
-        w = np.full(m, 1.0) if weights is None else np.asarray(weights, float)
-        schema = plan_some_pairs(w, q, pairs)
-    plan = _plan_for(
-        schema,
-        pad_reducers_to=(mesh.devices.size if mesh is not None else 1),
-        pad_slots_to=pad_slots_to,
-    )
+    with _obs_span("plan", workload="some_pairs", m=m):
+        if schema is None:
+            w = (np.full(m, 1.0) if weights is None
+                 else np.asarray(weights, float))
+            schema = plan_some_pairs(w, q, pairs)
+        plan = _plan_for(
+            schema,
+            pad_reducers_to=(mesh.devices.size if mesh is not None else 1),
+            pad_slots_to=pad_slots_to,
+        )
     fn = _block_fn(metric, use_kernel)
-    sims = _run_and_assemble(x, plan, fn, m, mesh, executor,
-                             use_kernel=use_kernel, interpret=interpret)
+    with _obs_span("execute", workload="some_pairs",
+                   reducers=plan.num_reducers):
+        sims = _run_and_assemble(x, plan, fn, m, mesh, executor,
+                                 use_kernel=use_kernel, interpret=interpret)
     want = np.zeros((m, m), dtype=bool)
     p = np.asarray(list(pairs), dtype=np.int64).reshape(-1, 2)
     if p.size:
@@ -446,19 +456,21 @@ def x2y_similarity(
     mesh, and ``executor='streaming'`` serves the (mx, my) matrix as
     patchable state.  Returns (sims (mx, my), plan, schema)."""
     mx, my = x.shape[0], y.shape[0]
-    if schema is None:
-        wx_ = np.full(mx, 1.0) if wx is None else np.asarray(wx, float)
-        wy_ = np.full(my, 1.0) if wy is None else np.asarray(wy, float)
-        schema = plan_x2y(wx_, wy_, q)
-    plan = _x2y_plan_for(
-        schema, mx,
-        pad_reducers_to=(mesh.devices.size if mesh is not None else 1),
-        pad_slots_to=pad_slots_to,
-    )
+    with _obs_span("plan", workload="x2y", mx=mx, my=my):
+        if schema is None:
+            wx_ = np.full(mx, 1.0) if wx is None else np.asarray(wx, float)
+            wy_ = np.full(my, 1.0) if wy is None else np.asarray(wy, float)
+            schema = plan_x2y(wx_, wy_, q)
+        plan = _x2y_plan_for(
+            schema, mx,
+            pad_reducers_to=(mesh.devices.size if mesh is not None else 1),
+            pad_slots_to=pad_slots_to,
+        )
     fn = _block_fn_x2y(metric)
-    sims = get_executor(executor).run_x2y(
-        (x, y), plan, fn, (mx, my), mesh=mesh, use_kernel=use_kernel,
-        interpret=interpret)
+    with _obs_span("execute", workload="x2y", reducers=plan.num_reducers):
+        sims = get_executor(executor).run_x2y(
+            (x, y), plan, fn, (mx, my), mesh=mesh, use_kernel=use_kernel,
+            interpret=interpret)
     return sims, plan, schema
 
 

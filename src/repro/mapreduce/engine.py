@@ -62,6 +62,9 @@ import numpy as np
 
 from repro.core.planner import compute_buckets, compute_rect_buckets
 from repro.core.schema import MappingSchema
+from repro.obs import EVENTS as _OBS_EVENTS
+from repro.obs import REGISTRY as _OBS_REGISTRY
+from repro.obs import span as _obs_span
 
 __all__ = [
     "ReducerBucket",
@@ -496,8 +499,10 @@ def block_subplan(sparse: SparsePlan, i0: int, i1: int, j0: int, j1: int,
     if key in cache:
         cache.move_to_end(key)
         _BLOCK_CACHE_STATS["hits"] += 1
+        _OBS_REGISTRY.counter("cache.hits", cache="block").inc()
         return cache[key]
     _BLOCK_CACHE_STATS["misses"] += 1
+    _OBS_REGISTRY.counter("cache.misses", cache="block").inc()
 
     row_bins = np.unique(sparse.bin_of[i0:i1])
     col_bins = np.unique(sparse.bin_of[j0:j1])
@@ -532,8 +537,11 @@ def block_subplan(sparse: SparsePlan, i0: int, i1: int, j0: int, j1: int,
             max_buckets=max_buckets)
     cache[key] = plan
     while len(cache) > cache_size:
-        cache.popitem(last=False)
+        evicted, _ = cache.popitem(last=False)
         _BLOCK_CACHE_STATS["evictions"] += 1
+        _OBS_REGISTRY.counter("cache.evictions", cache="block").inc()
+        _OBS_EVENTS.emit("cache_eviction", cache="block",
+                         key=str(evicted))
     return plan
 
 
@@ -622,6 +630,8 @@ def _evict_oldest():
     _JIT_CACHE_HITS.pop(key, None)
     _JIT_SHAPES.pop(key, None)
     _JIT_CACHE_STATS["evictions"] += 1
+    _OBS_REGISTRY.counter("cache.evictions", cache="jit").inc()
+    _OBS_EVENTS.emit("cache_eviction", cache="jit", key=_key_label(key))
 
 
 def _record_shapes(key, args) -> None:
@@ -637,22 +647,27 @@ def _record_shapes(key, args) -> None:
     seen = _JIT_SHAPES.setdefault(key, set())
     if sig in seen:
         _JIT_CACHE_STATS["shape_hits"] += 1
+        _OBS_REGISTRY.counter("cache.shape_hits", cache="jit").inc()
     else:
         seen.add(sig)
         _JIT_CACHE_STATS["shape_misses"] += 1
+        _OBS_REGISTRY.counter("cache.shape_misses", cache="jit").inc()
 
 
 def _cache_get(key, factory):
     fn = _JIT_CACHE.get(key)
     if fn is None:
         _JIT_CACHE_STATS["misses"] += 1
-        fn = factory()
+        _OBS_REGISTRY.counter("cache.misses", cache="jit").inc()
+        with _obs_span("compile", cache="jit", key=_key_label(key)):
+            fn = factory()
         _JIT_CACHE[key] = fn
         _JIT_CACHE_HITS[key] = 0
         while len(_JIT_CACHE) > _JIT_CACHE_MAX:
             _evict_oldest()
     else:
         _JIT_CACHE_STATS["hits"] += 1
+        _OBS_REGISTRY.counter("cache.hits", cache="jit").inc()
         _JIT_CACHE_HITS[key] = _JIT_CACHE_HITS.get(key, 0) + 1
         _JIT_CACHE.move_to_end(key)
     return fn
@@ -944,20 +959,33 @@ def run_reducers_x2y_bucketed(
 # fused + sharded executors: thin shims over the executor registry
 # ---------------------------------------------------------------------------
 # The implementations live in ``repro.mapreduce.executors`` as registry
-# objects with instance-scoped ``stats()``/``reset()``.  ``FUSED_STATS``
-# below is the *default* fused executor's counter dict (shared object, kept
-# for backward compatibility): it only sees dispatches that go through the
-# default registry instance — concurrent callers holding their own
-# ``FusedExecutor`` (e.g. ``serve.PairwiseService``) do not pollute it.
+# objects with instance-scoped ``stats()``/``reset()``.  ``fused_stats()``
+# below is the documented *aggregate* view: every ``FusedExecutor``
+# instance publishes its increments into the obs registry's
+# ``executor.<key>{executor=fused}`` series (one series per executor name,
+# shared by all instances), and this shim sums them.  ``FUSED_STATS`` is
+# retained as a legacy name only — it is no longer wired to any instance
+# (the old shared-dict default made ``service.reset_stats()`` silently
+# zero other callers' telemetry).
 FUSED_STATS = {"calls": 0, "kernel": 0, "streamed": 0, "fallbacks": 0}
+
+_FUSED_KEYS = ("calls", "kernel", "streamed", "fallbacks")
 
 
 def fused_stats() -> dict:
-    """Snapshot of the default fused executor's dispatch counters."""
-    return dict(FUSED_STATS)
+    """Aggregate fused dispatch counters across every ``FusedExecutor``
+    instance (the default registry instance and all ``make_executor``
+    copies), read from the observability registry."""
+    return {k: int(_OBS_REGISTRY.counter_total(f"executor.{k}",
+                                               executor="fused"))
+            for k in _FUSED_KEYS}
 
 
 def reset_fused_stats() -> None:
+    """Zero the aggregate fused counters (all instances' published
+    series)."""
+    for k in _FUSED_KEYS:
+        _OBS_REGISTRY.reset_counters(f"executor.{k}", executor="fused")
     for k in FUSED_STATS:
         FUSED_STATS[k] = 0
 

@@ -58,6 +58,10 @@ import numpy as np
 
 from repro.compat import make_mesh, shard_map
 from repro.core.planner import PlanPartition, partition_plan
+from repro.obs import EVENTS as _EVENTS
+from repro.obs import LEDGER as _LEDGER
+from repro.obs import REGISTRY as _REGISTRY_OBS
+from repro.obs import _config as _obs_config
 
 from . import engine as _engine
 from .engine import (
@@ -95,9 +99,14 @@ class Executor:
     """Base executor: run / run_pairs / lower / stats / reset.
 
     Subclasses set ``name`` and implement the four methods; ``_stats`` is a
-    plain dict owned by the instance (pass one in to share counters — the
-    default registry instances do this to keep the legacy module-level
-    counters live)."""
+    plain dict owned by the instance (pass one in to share counters across
+    instances).  Every ``_count`` additionally publishes into the process
+    observability registry as ``executor.<key>{executor=<name>}`` — ONE
+    labeled series per executor name shared by all its instances, which is
+    the aggregate view ``engine.fused_stats()`` reads.  Dispatches also
+    reconcile into the comm ledger (``repro.obs.LEDGER``): measured gather
+    slots and assembly bytes vs the plan's predicted cost and lower bound
+    (DESIGN.md 1j)."""
 
     name: str = "?"
 
@@ -183,6 +192,119 @@ class Executor:
 
     def _count(self, key: str, by: int = 1) -> None:
         self._stats[key] = self._stats.get(key, 0) + by
+        _REGISTRY_OBS.counter(f"executor.{key}", executor=self.name).inc(by)
+
+    def _count_fallback(self, reason: str) -> None:
+        """A non-fusable dispatch fell back to the bucketed path: count it
+        and emit the (previously silent) lifecycle event."""
+        self._count("fallbacks")
+        _EVENTS.emit("executor_fallback", executor=self.name, reason=reason)
+
+    def _reconcile(self, plan, workload: str, table, *,
+                   measured_slots: int, replication: float = 1.0,
+                   assembled_bytes: int = 0, local_bytes: int = 0,
+                   residual_bytes: int = 0, meta: Optional[dict] = None
+                   ) -> None:
+        """Record this execution's comm reconciliation (no-op when obs is
+        disabled).  ``table`` supplies the input row size (d, itemsize)."""
+        if not _obs_config.ENABLED:
+            return
+        d, itemsize = _row_bytes(table)
+        _LEDGER.record(
+            executor=self.name, workload=workload,
+            predicted_rows=float(plan.comm_cost),
+            lb_rows=plan.lower_bound,
+            plan_slots=_plan_valid_slots(plan),
+            measured_slots=int(measured_slots), d=d, itemsize=itemsize,
+            replication=replication, assembled_bytes=assembled_bytes,
+            local_bytes=local_bytes, residual_bytes=residual_bytes,
+            meta=meta)
+
+
+def _row_bytes(table) -> tuple[int, int]:
+    """(d, itemsize) of one input row — the ledger's byte scale.  Works on
+    numpy/jax arrays; anything shapeless falls back to (0, 4)."""
+    shape = getattr(table, "shape", None)
+    if not shape or len(shape) < 2:
+        return 0, 4
+    itemsize = getattr(getattr(table, "dtype", None), "itemsize", 4)
+    return int(shape[-1]), int(itemsize)
+
+
+def _plan_valid_slots(plan) -> int:
+    """Valid gather slots the plan books (X + Y sides for rect plans) —
+    the ledger's ``plan_slots`` denominator.  Cached on the plan."""
+    n = plan.__dict__.get("_obs_plan_slots")
+    if n is None:
+        n = int(np.asarray(plan.mask).sum())
+        if plan.ymask is not None:
+            n += int(np.asarray(plan.ymask).sum())
+        object.__setattr__(plan, "_obs_plan_slots", n)
+    return n
+
+
+def _bucket_valid_slots(plan) -> int:
+    """Valid gather slots the bucketed/fused program materializes (sum of
+    per-bucket masks; padding rows are all-False, so this equals the dense
+    mask sum — the 1.0-ratio invariant tests pin).  Cached on the plan."""
+    n = plan.__dict__.get("_obs_bucket_slots")
+    if n is None:
+        if plan.buckets:
+            n = 0
+            for b in plan.buckets:
+                n += int(np.asarray(b.mask).sum())
+                if b.ymask is not None:
+                    n += int(np.asarray(b.ymask).sum())
+        else:
+            n = _plan_valid_slots(plan)
+        object.__setattr__(plan, "_obs_bucket_slots", n)
+    return n
+
+
+def _group_valid_slots(plan, cache_key, groups, count_y: bool) -> int:
+    """Valid gather slots in stacked shard groups (the sharded/coded
+    executors' measured side).  5-tuple groups carry (xi, xm, yi, ym,
+    rows); ``count_y=False`` for the square coded path, where xm and ym
+    are the same gather and copies must be counted once.  Cached on the
+    plan per (shards, replication, rect) key."""
+    cache = plan.__dict__.get("_obs_group_slots")
+    if cache is None:
+        cache = {}
+        object.__setattr__(plan, "_obs_group_slots", cache)
+    n = cache.get(cache_key)
+    if n is None:
+        n = 0
+        for grp in groups:
+            if len(grp) >= 5:
+                n += int(np.asarray(grp[1]).sum())
+                if count_y:
+                    n += int(np.asarray(grp[3]).sum())
+            else:                       # (idx, mask, rows) square stack
+                n += int(np.asarray(grp[1]).sum())
+        cache[cache_key] = n
+    return n
+
+
+def _group_gram_entries(plan, cache_key, groups) -> int:
+    """Gram entries the stacked shard groups produce — what the sharded
+    all-gather assembly ships.  Cached on the plan (same cache as the slot
+    sums, disjoint keys)."""
+    cache = plan.__dict__.get("_obs_group_slots")
+    if cache is None:
+        cache = {}
+        object.__setattr__(plan, "_obs_group_slots", cache)
+    n = cache.get(cache_key)
+    if n is None:
+        n = 0
+        for grp in groups:
+            if len(grp) >= 5:            # rect: (xi, xm, yi, ym, rows)
+                xi, yi = grp[0], grp[2]
+                n += int(np.prod(xi.shape[:2])) * xi.shape[2] * yi.shape[2]
+            else:                        # square: (idx, mask, rows)
+                i = grp[0]
+                n += int(np.prod(i.shape[:2])) * i.shape[2] ** 2
+        cache[cache_key] = n
+    return n
 
 
 _REGISTRY: dict[str, Executor] = {}
@@ -244,6 +366,8 @@ class DenseExecutor(Executor):
                   use_kernel=False, interpret=False):
         from .allpairs import assemble_pair_matrix
         self._count("calls")
+        self._reconcile(plan, "pairs", x,
+                        measured_slots=_plan_valid_slots(plan))
         blocks = run_reducers(x, plan, reducer_fn, mesh=mesh)  # (R, L, L)
         return assemble_pair_matrix(blocks, plan, m)
 
@@ -251,6 +375,8 @@ class DenseExecutor(Executor):
                 use_kernel=False, interpret=False):
         from .allpairs import assemble_x2y_matrix_bucketed
         self._count("calls")
+        self._reconcile(plan, "x2y", _as_tables(tables)[0],
+                        measured_slots=_plan_valid_slots(plan))
         blocks = run_reducers_x2y(tables, plan, reducer_fn, mesh=mesh)
         # the plan's dense idx/mask/yidx/ymask rows are bucket-shaped, so
         # the whole plan assembles as a single "bucket"
@@ -279,6 +405,8 @@ class BucketedExecutor(Executor):
                   use_kernel=False, interpret=False):
         from .allpairs import assemble_pair_matrix_bucketed
         self._count("calls")
+        self._reconcile(plan, "pairs", x,
+                        measured_slots=_bucket_valid_slots(plan))
         per_bucket = run_reducers_bucketed(x, plan, reducer_fn, mesh=mesh,
                                            combine="buckets")
         return assemble_pair_matrix_bucketed(per_bucket, m)
@@ -287,6 +415,8 @@ class BucketedExecutor(Executor):
                 use_kernel=False, interpret=False):
         from .allpairs import assemble_x2y_matrix_bucketed
         self._count("calls")
+        self._reconcile(plan, "x2y", _as_tables(tables)[0],
+                        measured_slots=_bucket_valid_slots(plan))
         per_bucket = run_reducers_x2y_bucketed(tables, plan, reducer_fn,
                                                mesh=mesh, combine="buckets")
         return assemble_x2y_matrix_bucketed(per_bucket, shape)
@@ -463,7 +593,8 @@ class FusedExecutor(Executor):
         self._count("calls")
         metric = getattr(reducer_fn, "fused_metric", None)
         if metric is None or not plan.buckets:
-            self._count("fallbacks")
+            self._count_fallback(
+                "non_gram_reducer" if metric is None else "no_buckets")
             out = run_reducers_bucketed(
                 inputs, plan, reducer_fn, mesh=mesh, shard_axes=shard_axes,
                 combine="buckets" if postprocess is not None else combine)
@@ -495,6 +626,10 @@ class FusedExecutor(Executor):
     def run_pairs(self, x, plan, reducer_fn, m, *, mesh=None,
                   use_kernel=False, interpret=False):
         from .allpairs import _assemble_from_srcmap, _pair_source_map
+        # reconcile here, not in run(): the delegation below must not
+        # double-record the request
+        self._reconcile(plan, "pairs", x,
+                        measured_slots=_bucket_valid_slots(plan))
         srcmap = jnp.asarray(_pair_source_map(plan, m))
         return self.run(
             x, plan, reducer_fn, mesh=mesh,
@@ -513,9 +648,12 @@ class FusedExecutor(Executor):
             assemble_x2y_matrix_bucketed,
         )
         self._count("calls")
+        self._reconcile(plan, "x2y", _as_tables(tables)[0],
+                        measured_slots=_bucket_valid_slots(plan))
         metric = getattr(reducer_fn, "fused_metric", None)
         if metric is None or not plan.buckets:
-            self._count("fallbacks")
+            self._count_fallback(
+                "non_gram_reducer" if metric is None else "no_buckets")
             per_bucket = run_reducers_x2y_bucketed(
                 tables, plan, reducer_fn, mesh=mesh, combine="buckets")
             return assemble_x2y_matrix_bucketed(per_bucket, shape)
@@ -906,14 +1044,33 @@ class ShardedExecutor(Executor):
     def _note(self, part: PlanPartition) -> None:
         self._stats["num_shards"] = part.num_shards
         self._stats["balance_factor"] = float(part.balance_factor)
+        _REGISTRY_OBS.gauge("executor.num_shards",
+                            executor=self.name).set(part.num_shards)
+        _REGISTRY_OBS.gauge("executor.balance_factor",
+                            executor=self.name).set(part.balance_factor)
 
     def _dispatch(self, x, plan, metric, combine, srcmap_m, mesh,
-                  shard_axes, use_kernel, interpret, bl):
+                  shard_axes, use_kernel, interpret, bl,
+                  workload: str = "reduce"):
         mesh, axes, S = _shard_mesh(mesh, shard_axes)
         part = self.partition(plan, S)
         groups = self._groups_for(plan, part)
         self._count("sharded")
         self._note(part)
+        if _obs_config.ENABLED:
+            assembled = 0
+            meta = {"num_shards": S, "combine": combine}
+            if combine == "pairs":
+                _d, isz = _row_bytes(x)
+                per_shard = int(_group_gram_entries(
+                    plan, ("gram", S), groups) * isz * (S - 1) / S)
+                assembled = S * per_shard
+                meta["assembly_bytes_per_shard"] = per_shard
+            self._reconcile(
+                plan, workload, x,
+                measured_slots=_group_valid_slots(
+                    plan, ("sharded", S), groups, count_y=False),
+                assembled_bytes=assembled, meta=meta)
         if combine == "pairs":
             srcmap = jnp.asarray(
                 self._srcmap_for(plan, groups, S, srcmap_m))
@@ -941,7 +1098,8 @@ class ShardedExecutor(Executor):
         self._count("calls")
         metric = getattr(reducer_fn, "fused_metric", None)
         if metric is None or plan.num_reducers == 0:
-            self._count("fallbacks")
+            self._count_fallback(
+                "non_gram_reducer" if metric is None else "empty_plan")
             return run_reducers_bucketed(inputs, plan, reducer_fn,
                                          mesh=mesh, combine=combine)
         return self._dispatch(inputs, plan, metric, "dense", None, mesh,
@@ -953,13 +1111,16 @@ class ShardedExecutor(Executor):
         self._count("calls")
         metric = getattr(reducer_fn, "fused_metric", None)
         if metric is None or plan.num_reducers == 0:
-            self._count("fallbacks")
+            self._count_fallback(
+                "non_gram_reducer" if metric is None else "empty_plan")
+            self._reconcile(plan, "pairs", x,
+                            measured_slots=_bucket_valid_slots(plan))
             per_bucket = run_reducers_bucketed(x, plan, reducer_fn,
                                                mesh=mesh, combine="buckets")
             return assemble_pair_matrix_bucketed(per_bucket, m)
         return self._dispatch(x, plan, metric, "pairs", m, mesh, None,
                               (True if use_kernel else None), interpret,
-                              128)
+                              128, workload="pairs")
 
     def run_x2y(self, tables, plan, reducer_fn, shape, *, mesh=None,
                 use_kernel=False, interpret=False, bl: int = 128):
@@ -972,7 +1133,10 @@ class ShardedExecutor(Executor):
         self._count("calls")
         metric = getattr(reducer_fn, "fused_metric", None)
         if metric is None or plan.num_reducers == 0:
-            self._count("fallbacks")
+            self._count_fallback(
+                "non_gram_reducer" if metric is None else "empty_plan")
+            self._reconcile(plan, "x2y", _as_tables(tables)[0],
+                            measured_slots=_bucket_valid_slots(plan))
             per_bucket = run_reducers_x2y_bucketed(
                 tables, plan, reducer_fn, mesh=mesh, combine="buckets")
             return assemble_x2y_matrix_bucketed(per_bucket, shape)
@@ -981,6 +1145,18 @@ class ShardedExecutor(Executor):
         groups = self._rect_groups_for(plan, part)
         self._count("sharded")
         self._note(part)
+        if _obs_config.ENABLED:
+            xt0 = _as_tables(tables)[0]
+            _d, isz = _row_bytes(xt0)
+            per_shard = int(_group_gram_entries(
+                plan, ("gram_rect", S), groups) * isz * (S - 1) / S)
+            self._reconcile(
+                plan, "x2y", xt0,
+                measured_slots=_group_valid_slots(
+                    plan, ("sharded_rect", S), groups, count_y=True),
+                assembled_bytes=S * per_shard,
+                meta={"num_shards": S,
+                      "assembly_bytes_per_shard": per_shard})
         srcmap = jnp.asarray(
             self._rect_srcmap_for(plan, groups, S, tuple(shape)))
         uk = True if use_kernel else jax.default_backend() == "tpu"
@@ -1269,10 +1445,15 @@ class CodedExecutor(ShardedExecutor):
         tot = mstats["local_entries"] + mstats["residual_entries"]
         self._stats["local_fraction"] = (
             mstats["local_entries"] / tot if tot else 1.0)
+        _REGISTRY_OBS.gauge("executor.replication",
+                            executor=self.name).set(part.replication)
+        _REGISTRY_OBS.gauge("executor.local_fraction",
+                            executor=self.name).set(
+                                self._stats["local_fraction"])
 
     def _coded_dispatch(self, xt, yt, plan, metric, shape, zero_diag,
                         mesh, shard_axes, use_kernel, interpret, bl,
-                        rect: bool):
+                        rect: bool, workload: str = "pairs"):
         mesh, axes, S = _shard_mesh(mesh, shard_axes)
         part = self.partition_coded(plan, S)
         groups = self._coded_groups_for(plan, part, rect)
@@ -1280,6 +1461,26 @@ class CodedExecutor(ShardedExecutor):
             plan, groups, part, shape, zero_diag)
         self._count("coded")
         self._note_coded(part, mstats)
+        if _obs_config.ENABLED:
+            # identical ring accounting to ``coded_assembly_model``:
+            # residual lanes x itemsize x (S-1)/S per shard
+            _d, isz = _row_bytes(xt)
+            frac = (S - 1) / S if S > 1 else 0.0
+            per_shard = int(sendmap.shape[1] * sendmap.shape[2]
+                            * isz * frac)
+            self._reconcile(
+                plan, workload, xt,
+                measured_slots=_group_valid_slots(
+                    plan, ("coded", S, part.replication, rect), groups,
+                    count_y=rect),
+                replication=float(part.replication),
+                assembled_bytes=S * per_shard,
+                local_bytes=int(mstats["local_entries"]) * isz,
+                residual_bytes=int(mstats["residual_entries"]) * isz,
+                meta={"num_shards": S,
+                      "replication": int(part.replication),
+                      "assembly_bytes_per_shard": per_shard,
+                      "lane_max": mstats["lane_max"]})
         if use_kernel is None:
             use_kernel = jax.default_backend() == "tpu"
         fn = _cache_get(
@@ -1302,14 +1503,18 @@ class CodedExecutor(ShardedExecutor):
         self._count("calls")
         metric = getattr(reducer_fn, "fused_metric", None)
         if metric is None or plan.num_reducers == 0:
-            self._count("fallbacks")
+            self._count_fallback(
+                "non_gram_reducer" if metric is None else "empty_plan")
+            self._reconcile(plan, "pairs", x,
+                            measured_slots=_bucket_valid_slots(plan))
             per_bucket = run_reducers_bucketed(x, plan, reducer_fn,
                                                mesh=mesh, combine="buckets")
             return assemble_pair_matrix_bucketed(per_bucket, m)
         x = jnp.asarray(x)
         return self._coded_dispatch(
             x, x, plan, metric, (m, m), True, mesh, None,
-            (True if use_kernel else None), interpret, 128, rect=False)
+            (True if use_kernel else None), interpret, 128, rect=False,
+            workload="pairs")
 
     def run_x2y(self, tables, plan, reducer_fn, shape, *, mesh=None,
                 use_kernel=False, interpret=False, bl: int = 128):
@@ -1317,7 +1522,10 @@ class CodedExecutor(ShardedExecutor):
         self._count("calls")
         metric = getattr(reducer_fn, "fused_metric", None)
         if metric is None or plan.num_reducers == 0:
-            self._count("fallbacks")
+            self._count_fallback(
+                "non_gram_reducer" if metric is None else "empty_plan")
+            self._reconcile(plan, "x2y", _as_tables(tables)[0],
+                            measured_slots=_bucket_valid_slots(plan))
             per_bucket = run_reducers_x2y_bucketed(
                 tables, plan, reducer_fn, mesh=mesh, combine="buckets")
             return assemble_x2y_matrix_bucketed(per_bucket, shape)
@@ -1325,7 +1533,7 @@ class CodedExecutor(ShardedExecutor):
         xt, yt = _as_tables(tables)
         return self._coded_dispatch(
             xt, yt, plan, metric, tuple(shape), False, mesh, None, uk,
-            interpret, bl, rect=True)
+            interpret, bl, rect=True, workload="x2y")
 
     def lower(self, input_shape, plan, *, reducer_fn=None, metric=None,
               mesh=None, dtype=jnp.float32, shard_axes=None,
@@ -1436,11 +1644,13 @@ def choose_replication(plan, num_shards: int, m: int, d: int, *,
 # ---------------------------------------------------------------------------
 # default registry instances
 # ---------------------------------------------------------------------------
-# The default fused executor adopts the legacy module-level counter dict
-# (shared object), so ``engine.FUSED_STATS`` / ``engine.fused_stats()``
-# stay live for existing callers; every *new* instance gets its own dict.
+# Every default instance owns its counters (no shared module-level dicts:
+# a service resetting its own executor can never zero another caller's
+# telemetry).  ``engine.fused_stats()`` stays live as the documented
+# aggregate view — ``_count`` publishes each increment into the obs
+# registry's per-executor-name series, which that shim reads.
 register_executor(DenseExecutor())
 register_executor(BucketedExecutor())
-register_executor(FusedExecutor(stats=_engine.FUSED_STATS))
+register_executor(FusedExecutor())
 register_executor(ShardedExecutor())
 register_executor(CodedExecutor())

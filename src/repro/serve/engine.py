@@ -40,6 +40,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs import LEDGER as _LEDGER
+from repro.obs import REGISTRY as _OBS_REGISTRY
+from repro.obs import span as _obs_span
+
 __all__ = ["Request", "BatchedServer", "PairwiseService"]
 
 
@@ -147,12 +151,14 @@ class PairwiseService:
 
     def __init__(self, q: float, *, metric: str = "dot", mesh=None,
                  executor: str = "bucketed", max_buckets: int = 8,
-                 use_kernel: bool = False, interpret: bool = False):
+                 use_kernel: bool = False, interpret: bool = False,
+                 tenant: str = "default"):
         from repro.mapreduce import make_executor
         self.q = q
         self.metric = metric
         self.mesh = mesh
         self.executor = executor                 # registry name (telemetry)
+        self.tenant = str(tenant)                # obs label: per-tenant series
         # a PRIVATE executor instance: dispatch counters are scoped to this
         # service, so concurrent services (or other callers of the default
         # registry objects) can't pollute each other's telemetry
@@ -208,9 +214,33 @@ class PairwiseService:
         return {"plan_hits": PLAN_CACHE.hits,
                 "fused_kernel": ex.get("kernel", 0),
                 "fused_streamed": ex.get("streamed", 0),
-                "fused_fallbacks": ex.get("fallbacks", 0)}
+                "fused_fallbacks": ex.get("fallbacks", 0),
+                "ledger_seq": _LEDGER.seq}
 
-    def _info(self, plan, dt: float, snap: dict) -> dict:
+    def _comm_info(self, snap: dict) -> Optional[dict]:
+        """The comm-ledger reconciliation of the request bracketed by
+        ``snap``: the record this service's executor produced since the
+        snapshot (the streaming substrate may add others — the one labeled
+        with our executor wins)."""
+        recs = _LEDGER.records(since_seq=snap.get("ledger_seq", 0))
+        mine = [r for r in recs if r.executor == self._executor.name]
+        rec = mine[-1] if mine else (recs[-1] if recs else None)
+        if rec is None:
+            return None
+        return {
+            "measured_over_predicted": rec.measured_over_predicted,
+            "measured_over_lb": rec.measured_over_lb,
+            "gathered_bytes": rec.gathered_bytes,
+            "predicted_bytes": rec.predicted_bytes,
+            "assembled_bytes": rec.assembled_bytes,
+            "local_bytes": rec.local_bytes,
+            "residual_bytes": rec.residual_bytes,
+            "replication": rec.replication,
+            "anomaly": rec.anomaly,
+        }
+
+    def _info(self, plan, dt: float, snap: dict,
+              workload: str = "pairs") -> dict:
         after = self._snap()
         delta = {k: after[k] - snap[k] for k in snap}
         from repro.mapreduce import jit_cache_stats
@@ -245,6 +275,14 @@ class PairwiseService:
             "jit_cache": jit_cache_stats(),
             "wall_s": dt,
         }
+        comm = self._comm_info(snap)
+        if comm is not None:
+            info["comm"] = comm
+        _OBS_REGISTRY.counter("serve.requests", executor=self.executor,
+                              workload=workload, tenant=self.tenant).inc()
+        _OBS_REGISTRY.histogram("serve.request_seconds",
+                                executor=self.executor, workload=workload,
+                                tenant=self.tenant).observe(dt)
         ex_stats = self._executor.stats()
         if "num_shards" in ex_stats:             # sharded-executor telemetry
             info["sharded"] = {
@@ -265,24 +303,32 @@ class PairwiseService:
         from repro.mapreduce.allpairs import pairwise_similarity
         snap = self._snap()
         t0 = time.perf_counter()
-        sims, plan, _schema = pairwise_similarity(
-            jnp.asarray(x), q=self.q, weights=weights, metric=self.metric,
-            mesh=self.mesh, executor=self._executor,
-            use_kernel=self.use_kernel, interpret=self.interpret)
-        sims = jax.block_until_ready(sims)
-        return sims, self._info(plan, time.perf_counter() - t0, snap)
+        with _obs_span("request", workload="pairs",
+                       executor=self.executor, tenant=self.tenant):
+            sims, plan, _schema = pairwise_similarity(
+                jnp.asarray(x), q=self.q, weights=weights,
+                metric=self.metric, mesh=self.mesh,
+                executor=self._executor, use_kernel=self.use_kernel,
+                interpret=self.interpret)
+            sims = jax.block_until_ready(sims)
+        return sims, self._info(plan, time.perf_counter() - t0, snap,
+                                workload="pairs")
 
     def some_pairs(self, x, pairs, weights=None):
         """Similarity restricted to an explicit required-pair set."""
         from repro.mapreduce.allpairs import some_pairs_similarity
         snap = self._snap()
         t0 = time.perf_counter()
-        sims, plan, _schema = some_pairs_similarity(
-            jnp.asarray(x), pairs, q=self.q, weights=weights,
-            metric=self.metric, mesh=self.mesh, executor=self._executor,
-            use_kernel=self.use_kernel, interpret=self.interpret)
-        sims = jax.block_until_ready(sims)
-        return sims, self._info(plan, time.perf_counter() - t0, snap)
+        with _obs_span("request", workload="some_pairs",
+                       executor=self.executor, tenant=self.tenant):
+            sims, plan, _schema = some_pairs_similarity(
+                jnp.asarray(x), pairs, q=self.q, weights=weights,
+                metric=self.metric, mesh=self.mesh,
+                executor=self._executor, use_kernel=self.use_kernel,
+                interpret=self.interpret)
+            sims = jax.block_until_ready(sims)
+        return sims, self._info(plan, time.perf_counter() - t0, snap,
+                                workload="some_pairs")
 
     def x2y(self, x, y, wx=None, wy=None):
         """Cross similarity of an X table against a Y table through the
@@ -293,12 +339,16 @@ class PairwiseService:
         from repro.mapreduce.allpairs import x2y_similarity
         snap = self._snap()
         t0 = time.perf_counter()
-        sims, plan, _schema = x2y_similarity(
-            jnp.asarray(x), jnp.asarray(y), q=self.q, wx=wx, wy=wy,
-            metric=self.metric, mesh=self.mesh, executor=self._executor,
-            use_kernel=self.use_kernel, interpret=self.interpret)
-        sims = jax.block_until_ready(sims)
-        return sims, self._info(plan, time.perf_counter() - t0, snap)
+        with _obs_span("request", workload="x2y",
+                       executor=self.executor, tenant=self.tenant):
+            sims, plan, _schema = x2y_similarity(
+                jnp.asarray(x), jnp.asarray(y), q=self.q, wx=wx, wy=wy,
+                metric=self.metric, mesh=self.mesh,
+                executor=self._executor, use_kernel=self.use_kernel,
+                interpret=self.interpret)
+            sims = jax.block_until_ready(sims)
+        return sims, self._info(plan, time.perf_counter() - t0, snap,
+                                workload="x2y")
 
     @property
     def padding_savings(self) -> float:
@@ -353,15 +403,23 @@ class PairwiseService:
         assert getattr(self, "_block_table", None) is not None, \
             "call load_block_table() first"
         t0 = time.perf_counter()
-        blk = self._executor.run_block(
-            jnp.asarray(self._block_table), self._block_sparse,
-            _block_fn_x2y(self.metric), int(i0), int(i1), int(j0),
-            int(j1), mesh=self.mesh, use_kernel=self.use_kernel,
-            interpret=self.interpret)
-        blk = jax.block_until_ready(blk)
+        with _obs_span("request", workload="block",
+                       executor=self.executor, tenant=self.tenant):
+            blk = self._executor.run_block(
+                jnp.asarray(self._block_table), self._block_sparse,
+                _block_fn_x2y(self.metric), int(i0), int(i1), int(j0),
+                int(j1), mesh=self.mesh, use_kernel=self.use_kernel,
+                interpret=self.interpret)
+            blk = jax.block_until_ready(blk)
         dt = time.perf_counter() - t0
         self.stats["block_requests"] += 1
         self.stats["wall_s"] += dt
+        _OBS_REGISTRY.counter(
+            "serve.requests", executor=self.executor, workload="block",
+            tenant=self.tenant).inc()
+        _OBS_REGISTRY.histogram(
+            "serve.block_seconds", executor=self.executor,
+            tenant=self.tenant).observe(dt)
         return blk, {
             "executor": self.executor,
             "block": (int(i0), int(i1), int(j0), int(j1)),
@@ -413,11 +471,13 @@ class PairwiseService:
             pad_reducers_to=(self.mesh.devices.size
                              if self.mesh is not None else 1))
         plan = self._planner.plan()
-        sims = ex.run_pairs(jnp.asarray(self._table), plan,
-                            self._reducer_fn(), m, mesh=self.mesh,
-                            use_kernel=self.use_kernel,
-                            interpret=self.interpret)
-        sims = jax.block_until_ready(sims)
+        with _obs_span("request", workload="load_table",
+                       executor=self.executor, tenant=self.tenant):
+            sims = ex.run_pairs(jnp.asarray(self._table), plan,
+                                self._reducer_fn(), m, mesh=self.mesh,
+                                use_kernel=self.use_kernel,
+                                interpret=self.interpret)
+            sims = jax.block_until_ready(sims)
         warmed = 0
         if warmup:
             warmed = ex.warm_delta_shapes(
@@ -451,14 +511,17 @@ class PairwiseService:
         ex = self._require_streaming()
         assert self._planner is not None, "call load_table() first"
         before = dict(self._planner.stats)
+        ledger_seq = _LEDGER.seq
         t0 = time.perf_counter()
-        delta = getattr(self._planner, op)(*args)
-        sims = ex.apply_delta(
-            jnp.asarray(self._table), delta, self._reducer_fn(),
-            self._table.shape[0], plan_provider=self._planner.plan,
-            mesh=self.mesh, use_kernel=self.use_kernel,
-            interpret=self.interpret)
-        sims = jax.block_until_ready(sims)
+        with _obs_span("edit", kind=op, executor=self.executor,
+                       tenant=self.tenant):
+            delta = getattr(self._planner, op)(*args)
+            sims = ex.apply_delta(
+                jnp.asarray(self._table), delta, self._reducer_fn(),
+                self._table.shape[0], plan_provider=self._planner.plan,
+                mesh=self.mesh, use_kernel=self.use_kernel,
+                interpret=self.interpret)
+            sims = jax.block_until_ready(sims)
         dt = time.perf_counter() - t0
         pstats = self._planner.stats
         self.stats["edits"] += 1
@@ -492,6 +555,15 @@ class PairwiseService:
             "algorithm": self._planner.algorithm,
             "wall_s": dt,
         }
+        comm = self._comm_info({"ledger_seq": ledger_seq})
+        if comm is not None:
+            info["comm"] = comm
+        _OBS_REGISTRY.counter(
+            "serve.edits", executor=self.executor, kind=op,
+            tenant=self.tenant).inc()
+        _OBS_REGISTRY.histogram(
+            "serve.edit_seconds", executor=self.executor, kind=op,
+            tenant=self.tenant).observe(dt)
         return sims, info
 
     def add_input(self, row, weight: float = 1.0):

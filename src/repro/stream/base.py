@@ -53,6 +53,9 @@ from __future__ import annotations
 import threading
 from typing import Optional
 
+from repro.obs import EVENTS as _OBS_EVENTS
+from repro.obs import REGISTRY as _OBS_REGISTRY
+
 from .delta import PlanDelta
 
 __all__ = ["StreamPlannerBase"]
@@ -154,6 +157,13 @@ class StreamPlannerBase:
             return float("inf")
         return max(self.repack_gap, self._base_ach * _REPACK_MARGIN)
 
+    def _bump(self, key: str, by: int = 1) -> None:
+        """Increment a planner stat and mirror it into the obs registry as
+        ``stream.<key>{planner=<class>}``."""
+        self.stats[key] = self.stats.get(key, 0) + by
+        _OBS_REGISTRY.counter(f"stream.{key}",
+                              planner=type(self).__name__).inc(by)
+
     def _after_adopt(self) -> None:
         """Re-anchor the drift baselines after any adoption (sync re-plan
         or background swap) — called by subclasses at the end of
@@ -161,12 +171,12 @@ class StreamPlannerBase:
         self._base_gap = self.optimality_gap
         self._base_ach = self.achievable_gap
         self._plan = None
-        self.stats["replans"] += 1
+        self._bump("replans")
 
     # ----------------------------------------------------- finishing driver
     def _edited(self, kind: str, i: int,
                 repair: Optional[dict]) -> PlanDelta:
-        self.stats["edits"] += 1
+        self._bump("edits")
         self._plan = None
         # a finished background re-plan lands *before* this edit is
         # served: the edit's repair was applied to the superseded schema,
@@ -183,19 +193,28 @@ class StreamPlannerBase:
             # forced: only a full re-plan can absorb this edit (opaque
             # schema, over-capacity weight, one-sided bootstrap)
             self._discard_background()
+            _OBS_EVENTS.emit("forced_replan", planner=type(self).__name__,
+                             edit=kind, input=int(i), **trigger)
             self._adopt_replan()
             return self._replan_patch(kind, i, forced=True,
                                       trigger=trigger)
         if drift > self.replan_drift or ach > self._gap_ceiling():
             if not self.background:
-                self.stats["drift_replans"] += 1
+                self._bump("drift_replans")
+                _OBS_EVENTS.emit("drift_replan",
+                                 planner=type(self).__name__, mode="sync",
+                                 edit=kind, input=int(i), **trigger)
                 self._adopt_replan()
                 return self._replan_patch(kind, i, trigger=trigger)
             if self._start_background():
-                self.stats["drift_replans"] += 1
+                self._bump("drift_replans")
+                _OBS_EVENTS.emit("drift_replan",
+                                 planner=type(self).__name__,
+                                 mode="background", edit=kind,
+                                 input=int(i), **trigger)
             # keep serving repairs off the old schema while the re-plan
             # builds off to the side
-            self.stats["repairs"] += 1
+            self._bump("repairs")
             return self._finish_delta(kind, i, repair,
                                       extra_meta={"replan_pending": True})
         if self.repack_gap is not None and self._bg is None \
@@ -203,10 +222,15 @@ class StreamPlannerBase:
                 and ach > self._repack_threshold():
             moved, pruned = self._repack_pass()
             if moved or pruned:
-                self.stats["repacks"] += 1
-                self.stats["migrations"] += moved
-                self.stats["pruned_reducers"] += pruned
-        self.stats["repairs"] += 1
+                self._bump("repacks")
+                self._bump("migrations", moved)
+                self._bump("pruned_reducers", pruned)
+                _OBS_EVENTS.emit("soft_repack",
+                                 planner=type(self).__name__,
+                                 migrations=int(moved),
+                                 pruned_reducers=int(pruned),
+                                 achievable_gap=float(ach))
+        self._bump("repairs")
         return self._finish_delta(kind, i, repair)
 
     def _replan_patch(self, kind: str, i: int, *, swap: bool = False,
@@ -260,11 +284,14 @@ class StreamPlannerBase:
         box["thread"].join()
         if box["error"] is not None or box["result"] is None:
             return False
-        if not self._swap_in(box["result"]):
+        stale = not self._swap_in(box["result"])
+        if stale:
             # the plan went stale (interleaved edits broke capacity or
             # placement): rebuild synchronously from the live profile
             self._adopt_replan()
-        self.stats["swaps"] += 1
+        self._bump("swaps")
+        _OBS_EVENTS.emit("background_swap", planner=type(self).__name__,
+                         stale=stale)
         return True
 
     def flush_replan(self) -> bool:

@@ -32,7 +32,15 @@ from repro.mapreduce.engine import (
     run_reducers_bucketed,
     run_reducers_x2y_bucketed,
 )
-from repro.mapreduce.executors import Executor, make_executor
+from repro.mapreduce.executors import (
+    Executor,
+    _bucket_valid_slots,
+    _row_bytes,
+    make_executor,
+)
+from repro.obs import LEDGER as _LEDGER
+from repro.obs import REGISTRY as _OBS_REGISTRY
+from repro.obs import _config as _obs_config
 
 from .delta import PlanDelta, _pow2
 
@@ -116,6 +124,49 @@ class StreamingExecutor(Executor):
         super().reset()
         self._sub.reset()
 
+    # --------------------------------------------------------- reconciliation
+    def _note_stream(self, table, plan, workload: str, *,
+                     cold: bool) -> None:
+        """Ledger record for a cold (full-plan) build: the streaming
+        executor paid the whole re-shuffle, so measured == predicted."""
+        if not _obs_config.ENABLED:
+            return
+        d, isz = _row_bytes(table)
+        slots = _bucket_valid_slots(plan)
+        _LEDGER.record(
+            executor=self.name, workload=workload,
+            predicted_rows=float(plan.comm_cost),
+            lb_rows=plan.lower_bound, plan_slots=slots,
+            measured_slots=slots, d=d, itemsize=isz,
+            meta={"cold": cold})
+        _OBS_REGISTRY.histogram("stream.recompute_fraction",
+                                executor=self.name).observe(1.0)
+
+    def _note_delta(self, table, delta: PlanDelta, workload: str,
+                    executed: bool) -> None:
+        """Ledger record for one delta: predicted traffic is the delta
+        ledger (``delta_comm_rows`` — the dirty sub-plan's weighted rows),
+        measured is what the patch program actually gathered, and the
+        lower bound stays the *full instance's* theorem bound — so
+        ``measured_over_lb`` < 1 quantifies how far below a full
+        re-shuffle's floor the streaming path serves this edit."""
+        if not _obs_config.ENABLED:
+            return
+        d, isz = _row_bytes(table)
+        sp = delta.sub_plan
+        slots = _bucket_valid_slots(sp) if sp is not None else 0
+        _LEDGER.record(
+            executor=self.name, workload=workload,
+            predicted_rows=delta.delta_comm_rows(),
+            lb_rows=delta.lower_bound, plan_slots=slots,
+            measured_slots=slots if executed else 0, d=d, itemsize=isz,
+            meta={"kind": delta.kind,
+                  "recompute_fraction": float(delta.recompute_fraction),
+                  "dirty_reducers": int(len(delta.dirty_rows))})
+        _OBS_REGISTRY.histogram("stream.recompute_fraction",
+                                executor=self.name).observe(
+                                    float(delta.recompute_fraction))
+
     # ------------------------------------------------------------ streaming
     @property
     def sims(self) -> Optional[jax.Array]:
@@ -173,6 +224,7 @@ class StreamingExecutor(Executor):
         self._count("dirty_reducers", plan.num_reducers)
         self._count("reducers_total", plan.num_reducers)
         self._stats["recompute_fraction"] = 1.0
+        self._note_stream(x, plan, "pairs", cold=True)
         return sims
 
     # ------------------------------------------------------- rectangular X2Y
@@ -214,6 +266,7 @@ class StreamingExecutor(Executor):
         self._count("dirty_reducers", plan.num_reducers)
         self._count("reducers_total", plan.num_reducers)
         self._stats["recompute_fraction"] = 1.0
+        self._note_stream(_as_tables(tables)[0], plan, "x2y", cold=True)
         return sims
 
     def apply_delta_x2y(self, tables, delta: PlanDelta, reducer_fn,
@@ -272,6 +325,11 @@ class StreamingExecutor(Executor):
         self._count("reducers_total", int(delta.num_reducers))
         self._count("patched_inputs", int(len(tx) + len(ty)))
         self._stats["recompute_fraction"] = float(delta.recompute_fraction)
+        self._note_delta(
+            _as_tables(tables)[0], delta, "delta_x2y",
+            executed=bool((len(tx) or len(ty))
+                          and delta.sub_plan is not None
+                          and len(delta.dirty_rows)))
         return sims[:mx, :my]
 
     def apply_delta(self, x, delta: PlanDelta, reducer_fn, m, *,
@@ -320,6 +378,10 @@ class StreamingExecutor(Executor):
         self._count("reducers_total", int(delta.num_reducers))
         self._count("patched_inputs", int(len(touched)))
         self._stats["recompute_fraction"] = float(delta.recompute_fraction)
+        self._note_delta(
+            x, delta, "delta",
+            executed=bool(len(touched) and delta.sub_plan is not None
+                          and len(delta.dirty_rows)))
         return sims[:m, :m]
 
     # ------------------------------------------------------------ AOT warmup
